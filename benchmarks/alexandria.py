@@ -1,0 +1,66 @@
+"""Synthetic Alexandria-3D-like generator: the paper's §6 record shape
+(nested materials documents) at configurable scale."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+import numpy as np
+
+ELEMENTS = ["H", "Li", "B", "C", "N", "O", "F", "Na", "Mg", "Al", "Si", "P",
+            "S", "Cl", "K", "Ca", "Ti", "V", "Cr", "Mn", "Fe", "Co", "Ni",
+            "Cu", "Zn", "Ga", "Ge", "As", "Se", "Sr", "Y", "Zr", "Nb", "Mo"]
+
+
+def make_records(n: int, seed: int = 0) -> List[dict]:
+    rng = np.random.default_rng(seed)
+    recs = []
+    for i in range(n):
+        n_sites = int(rng.integers(1, 12))
+        els = [ELEMENTS[j] for j in rng.integers(0, len(ELEMENTS), n_sites)]
+        gap_dir = float(np.round(rng.exponential(0.8), 4))
+        gap_ind = float(np.round(max(gap_dir - rng.exponential(0.3), 0.0), 4))
+        recs.append({
+            "@class": "ComputedStructureEntry",
+            "@module": "pymatgen.entries.computed_entries",
+            "composition": {el: els.count(el) for el in set(els)},
+            "data": {
+                "spg": int(rng.integers(1, 231)),
+                "band_gap_dir": gap_dir,
+                "band_gap_ind": gap_ind,
+                "elements": sorted(set(els)),
+                "e_form": float(np.round(rng.normal(-1.0, 1.0), 5)),
+            },
+            "energy": float(np.round(rng.normal(-30, 10), 5)),
+            "energy_adjustments": [],
+            "entry_id": f"agm{i:09d}",
+            "parameters": {},
+            "structure": {
+                "lattice": {"matrix": (np.round(
+                    rng.normal(0, 3, (3, 3)), 5)).tolist(),
+                    "volume": float(np.round(abs(rng.normal(50, 20)), 3))},
+                "sites": [{"species": [{"element": el, "occu": 1}],
+                           "xyz": np.round(rng.uniform(0, 10, 3), 5).tolist(),
+                           "label": el}
+                          for el in els],
+            },
+        })
+    return recs
+
+
+def write_json_shards(dirpath: str, n_total: int, per_file: int,
+                      seed: int = 0) -> List[str]:
+    os.makedirs(dirpath, exist_ok=True)
+    paths = []
+    done = 0
+    i = 0
+    while done < n_total:
+        n = min(per_file, n_total - done)
+        p = os.path.join(dirpath, f"alexandria_{i:03d}.json")
+        with open(p, "w") as fh:
+            json.dump({"entries": make_records(n, seed=seed + i)}, fh)
+        paths.append(p)
+        done += n
+        i += 1
+    return paths

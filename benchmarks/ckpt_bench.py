@@ -1,0 +1,51 @@
+"""Checkpoint-as-database benchmarks: save/restore/partial-restore throughput
+for a ~100M-parameter tree (the columnar checkpoint store's claims from
+DESIGN.md §7.4 made measurable)."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.train.checkpoint import CheckpointStore
+
+from .common import TmpDir, row, timeit
+
+
+def _tree(n_leaves: int, leaf_elems: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return {f"layer_{i:03d}/w": rng.standard_normal(leaf_elems)
+            .astype(np.float32) for i in range(n_leaves)}
+
+
+def run(scale: str = "small") -> List[dict]:
+    n_leaves, elems = {"small": (48, 250_000),      # ~48 MB
+                       "medium": (96, 1_000_000),   # ~384 MB
+                       "paper": (96, 4_000_000)}[scale]
+    tree = _tree(n_leaves, elems)
+    total = sum(v.nbytes for v in tree.values())
+    out: List[dict] = []
+    with TmpDir() as tmp:
+        st = CheckpointStore(tmp, keep=2)
+        t = timeit(lambda: st.save(1, tree))
+        out.append(row("ckpt/save", t, bytes=total, mb_per_s=total / t / 1e6))
+
+        like = {k: np.zeros_like(v) for k, v in tree.items()}
+        t = timeit(lambda: st.restore(1, like=like), repeat=2)
+        out.append(row("ckpt/restore_full", t, mb_per_s=total / t / 1e6))
+
+        # partial restore: one leaf via predicate pushdown on `path`
+        t = timeit(lambda: st.restore(1, paths=["layer_000/w"]), repeat=3)
+        out.append(row("ckpt/restore_one_leaf", t,
+                       fraction=1.0 / n_leaves))
+
+        # async save overlap: submission latency vs full write
+        def async_save():
+            th = st.async_save(2, tree)
+            submit = True
+            th.join()
+            return submit
+        t_async = timeit(async_save)
+        out.append(row("ckpt/async_save_total", t_async, bytes=total))
+    return out

@@ -1,0 +1,64 @@
+"""Shared benchmark scaffolding: timing, dataset generators, SQLite helper."""
+from __future__ import annotations
+
+import shutil
+import sqlite3
+import tempfile
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+N_COLS = 100  # paper: synthetic datasets of 100 integer columns
+
+
+def timeit(fn: Callable, *, repeat: int = 1) -> float:
+    """Seconds for one call (best of `repeat`)."""
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def gen_rows_pylist(n_rows: int, seed: int = 0) -> List[dict]:
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 1_000_000, (n_rows, N_COLS))
+    return [{f"col{i}": int(row[i]) for i in range(N_COLS)} for row in data]
+
+
+def gen_rows_pydict(n_rows: int, seed: int = 0) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return {f"col{i}": rng.integers(0, 1_000_000, n_rows)
+            for i in range(N_COLS)}
+
+
+def sqlite_create(db_path: str, rows: List[dict]) -> sqlite3.Connection:
+    """Paper Listing 1: PRAGMA-optimized bulk insert."""
+    conn = sqlite3.connect(db_path)
+    conn.execute("PRAGMA synchronous = OFF")
+    conn.execute("PRAGMA journal_mode = MEMORY")
+    cols = ", ".join(f"col{i} INTEGER" for i in range(N_COLS))
+    conn.execute(f"CREATE TABLE IF NOT EXISTS test_table (rowid_ INTEGER, {cols})")
+    ph = ", ".join("?" for _ in range(N_COLS + 1))
+    data = [(j, *[r[f"col{i}"] for i in range(N_COLS)])
+            for j, r in enumerate(rows)]
+    conn.executemany(f"INSERT INTO test_table VALUES ({ph})", data)
+    conn.commit()
+    return conn
+
+
+class TmpDir:
+    def __enter__(self):
+        self.path = tempfile.mkdtemp(prefix="repro_bench_")
+        return self.path
+
+    def __exit__(self, *exc):
+        shutil.rmtree(self.path, ignore_errors=True)
+
+
+def row(name: str, seconds: float, **derived) -> dict:
+    d = {"name": name, "us_per_call": seconds * 1e6}
+    d.update(derived)
+    return d

@@ -1,0 +1,83 @@
+"""DocDB — an embedded document-database baseline standing in for MongoDB.
+
+MongoDB needs a server process this container can't run; the paper's
+comparisons need a document-model opponent, so this is an honest embedded
+one: JSON-lines storage (schema-less documents), full-scan queries, optional
+hash indexes (field -> byte offsets) mirroring MongoDB's indexed/non-indexed
+split in the paper's Fig. 7/8.  Deliberately simple — it plays the role of
+"document database with/without index", not a Mongo re-implementation.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterable, List, Optional
+
+
+class DocDB:
+    def __init__(self, path: str):
+        self.path = path
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        if not os.path.exists(path):
+            open(path, "w").close()
+        self._indexes: Dict[str, Dict[Any, List[int]]] = {}
+
+    # -- write -------------------------------------------------------------------
+    def insert_many(self, docs: Iterable[dict]) -> int:
+        n = 0
+        with open(self.path, "a") as fh:
+            for d in docs:
+                off = fh.tell()
+                fh.write(json.dumps(d) + "\n")
+                for field, idx in self._indexes.items():
+                    if field in d:
+                        idx.setdefault(d[field], []).append(off)
+                n += 1
+        return n
+
+    # -- index -------------------------------------------------------------------
+    def create_index(self, field: str) -> None:
+        idx: Dict[Any, List[int]] = {}
+        with open(self.path) as fh:
+            off = 0
+            for line in fh:
+                d = json.loads(line)
+                if field in d:
+                    idx.setdefault(d[field], []).append(off)
+                off += len(line.encode())
+        self._indexes[field] = idx
+
+    # -- read --------------------------------------------------------------------
+    def find_all(self) -> List[dict]:
+        with open(self.path) as fh:
+            return [json.loads(line) for line in fh]
+
+    def find_eq(self, field: str, value: Any) -> List[dict]:
+        idx = self._indexes.get(field)
+        if idx is not None:
+            offs = idx.get(value, [])
+            out = []
+            with open(self.path) as fh:
+                for off in offs:
+                    fh.seek(off)
+                    out.append(json.loads(fh.readline()))
+            return out
+        return [d for d in self.find_all() if d.get(field) == value]
+
+    # -- update ------------------------------------------------------------------
+    def update_many(self, updates: Dict[Any, dict], key: str = "_id") -> int:
+        """Rewrite the file applying {key_value: partial_doc} updates."""
+        tmp = self.path + ".tmp"
+        n = 0
+        with open(self.path) as src, open(tmp, "w") as dst:
+            for line in src:
+                d = json.loads(line)
+                u = updates.get(d.get(key))
+                if u is not None:
+                    d.update(u)
+                    n += 1
+                dst.write(json.dumps(d) + "\n")
+        os.replace(tmp, self.path)
+        for f in list(self._indexes):
+            self.create_index(f)
+        return n

@@ -1,0 +1,114 @@
+"""Paper Fig. 10 / §6.2: the operation suite on the (synthetic) Alexandria
+database — normalization, projections, filtered reads, nested access,
+rebuild-nested, updates, and the band-gap classification query."""
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro import compute as pc
+from repro.core import NormalizeConfig, ParquetDB, field
+
+from .alexandria import make_records
+from .common import TmpDir, row, timeit
+
+
+def run(scale: str = "small") -> List[dict]:
+    n = {"small": 5_000, "medium": 50_000, "paper": 1_000_000}[scale]
+    out: List[dict] = []
+    with TmpDir() as tmp:
+        db = ParquetDB(os.path.join(tmp, "pdb"), "alexandria")
+        for s in range(0, n, 10_000):
+            db.create(make_records(min(10_000, n - s), seed=s),
+                      treat_fields_as_ragged=["data.elements"])
+
+        # 6.2.1 normalization
+        t = timeit(lambda: db.normalize(NormalizeConfig(
+            max_rows_per_file=max(n // 4, 1000),
+            max_rows_per_group=max(n // 8, 500))))
+        out.append(row("fig10/normalize", t, rows=n))
+        # 6.2.2 single column
+        t = timeit(lambda: db.read(columns=["id"]), repeat=3)
+        out.append(row("fig10/read_id_column", t, rows=n))
+        # 6.2.3 query 10 ids
+        ids = list(np.linspace(0, n - 1, 10).astype(int))
+        t = timeit(lambda: db.read(ids=ids), repeat=3)
+        out.append(row("fig10/query_10_ids", t, rows=10))
+        # 6.2.4 min/max energy
+        def minmax():
+            tbl = db.read(columns=["energy"])
+            return pc.min_max(tbl["energy"])
+        t = timeit(minmax, repeat=3)
+        out.append(row("fig10/energy_min_max", t, rows=n))
+        # 6.2.5 filter energies above -1 eV
+        t = timeit(lambda: db.read(columns=["id", "energy"],
+                                   filters=[field("energy") > -1.0]),
+                   repeat=3)
+        out.append(row("fig10/filter_energy", t, rows=n))
+        # 6.2.6 space-group equality on a nested field
+        t = timeit(lambda: db.read(columns=["id", "data.spg"],
+                                   filters=[field("data.spg") == 204]),
+                   repeat=3)
+        out.append(row("fig10/filter_spg", t, rows=n))
+        # 6.2.7 batched space-group query
+        def batched():
+            gen = db.read(columns=["id", "data.spg"],
+                          filters=[field("data.spg") == 204],
+                          load_format="batches", batch_size=1_000)
+            return sum(b.num_rows for b in gen)
+        t = timeit(batched, repeat=3)
+        out.append(row("fig10/filter_spg_batched", t, rows=n))
+        # 6.2.8 nested subfield (list-of-dicts) read
+        t = timeit(lambda: db.read(columns=["id", "structure.sites"]))
+        out.append(row("fig10/read_sites", t, rows=n))
+        # 6.2.9 rebuild nested from scratch / 6.2.10 cached
+        t = timeit(lambda: db.read(columns=["id", "structure", "data"],
+                                   ids=[0], rebuild_nested_struct=True,
+                                   rebuild_nested_from_scratch=True))
+        out.append(row("fig10/rebuild_nested_scratch", t, rows=n))
+        t = timeit(lambda: db.read(columns=["id", "structure", "data"],
+                                   ids=[0], rebuild_nested_struct=True))
+        out.append(row("fig10/rebuild_nested_cached", t, rows=1))
+        # 6.2.11 single-record update (+normalize config, as in the paper)
+        t = timeit(lambda: db.update(
+            [{"id": 0, "data.spg": 210}],
+            normalize_config=NormalizeConfig(
+                max_rows_per_file=max(n // 4, 1000))))
+        out.append(row("fig10/update_1", t, rows=1))
+        # 6.2.12 bulk update
+        k = min(10_000, n)
+        t = timeit(lambda: db.update(
+            {"id": np.arange(k), "data.spg": np.full(k, 123)}))
+        out.append(row("fig10/update_bulk", t, rows=k))
+        # 6.2.13 read nd lattice matrix filtered by spg
+        def lattice():
+            tbl = db.read(columns=["structure.lattice.matrix"],
+                          filters=[field("data.spg") == 123])
+            return tbl["structure.lattice.matrix"].to_numpy()
+        t = timeit(lattice, repeat=3)
+        out.append(row("fig10/read_lattice_nd", t, rows=n))
+        # 6.2.14 band-gap classification (paper's if_else query)
+        def classify():
+            expr = pc.if_else(
+                (field("data.band_gap_ind") != 0)
+                & (field("data.band_gap_ind") < field("data.band_gap_dir")),
+                (field("data.band_gap_ind") > 0.1)
+                & (field("data.band_gap_ind") < 3),
+                (field("data.band_gap_dir") > 0.1)
+                & (field("data.band_gap_dir") < 3))
+            return db.read(columns=["id"], filters=[expr]).num_rows
+        t = timeit(classify, repeat=3)
+        out.append(row("fig10/band_gap_semiconductors", t,
+                       semiconductors=classify(), rows=n))
+        # element distribution over semiconductors (paper's manual loop)
+        def element_hist():
+            tbl = db.read(columns=["data.elements"])
+            flat = pc.list_flatten(tbl["data.elements"])
+            vals = flat.to_pylist()
+            from collections import Counter
+            return Counter(vals)
+        t = timeit(element_hist)
+        out.append(row("fig10/element_distribution", t, rows=n))
+    return out

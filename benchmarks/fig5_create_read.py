@@ -1,0 +1,47 @@
+"""Paper Fig. 5: create + read times vs row count — ParquetDB / SQLite / DocDB.
+
+100 integer columns; create = bulk insert committed; read = full dataset into
+an array-like structure (nothing left in cursors).
+"""
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.core import ParquetDB
+
+from .common import TmpDir, gen_rows_pylist, row, sqlite_create, timeit
+from .docdb import DocDB
+
+
+def run(scale: str = "small") -> List[dict]:
+    counts = {"small": [100, 1_000, 10_000],
+              "medium": [100, 1_000, 10_000, 100_000],
+              "paper": [1, 100, 10_000, 100_000, 1_000_000]}[scale]
+    out: List[dict] = []
+    for n in counts:
+        rows = gen_rows_pylist(n)
+        with TmpDir() as tmp:
+            # --- ParquetDB
+            db = ParquetDB(os.path.join(tmp, "pdb"), "bench")
+            t_create = timeit(lambda: db.create(rows))
+            t_read = timeit(lambda: db.read().to_pydict())
+            out.append(row(f"fig5/create/parquetdb/n={n}", t_create, rows=n))
+            out.append(row(f"fig5/read/parquetdb/n={n}", t_read, rows=n))
+            # --- SQLite (paper Listing 1 incl. PRAGMAs)
+            conn_holder = {}
+            t_create = timeit(lambda: conn_holder.setdefault(
+                "c", sqlite_create(os.path.join(tmp, "s.db"), rows)))
+            conn = conn_holder["c"]
+            t_read = timeit(
+                lambda: conn.execute("SELECT * FROM test_table").fetchall())
+            conn.close()
+            out.append(row(f"fig5/create/sqlite/n={n}", t_create, rows=n))
+            out.append(row(f"fig5/read/sqlite/n={n}", t_read, rows=n))
+            # --- DocDB (embedded document baseline)
+            ddb = DocDB(os.path.join(tmp, "docs.jsonl"))
+            t_create = timeit(lambda: ddb.insert_many(rows))
+            t_read = timeit(lambda: ddb.find_all())
+            out.append(row(f"fig5/create/docdb/n={n}", t_create, rows=n))
+            out.append(row(f"fig5/read/docdb/n={n}", t_read, rows=n))
+    return out

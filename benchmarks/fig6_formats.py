@@ -1,0 +1,50 @@
+"""Paper Fig. 6: impact of input data format on ParquetDB update time.
+
+Formats: python list-of-dicts (pylist), dict of python lists (pydict),
+dict of numpy arrays (columns — our pandas stand-in), repro Table (the
+PyArrow-Table analogue).  Updates target a preloaded dataset.
+"""
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import ParquetDB, Table
+
+from .common import N_COLS, TmpDir, gen_rows_pydict, gen_rows_pylist, row, \
+    timeit
+
+
+def _update_payload(n: int, fmt: str):
+    rng = np.random.default_rng(1)
+    ids = np.arange(n, dtype=np.int64)
+    vals = {f"col{i}": rng.integers(0, 1_000_000, n) for i in range(10)}
+    if fmt == "pylist":
+        return [{"id": int(i), **{k: int(v[j]) for k, v in vals.items()}}
+                for j, i in enumerate(ids)]
+    if fmt == "pydict":
+        return {"id": ids.tolist(), **{k: v.tolist() for k, v in vals.items()}}
+    if fmt == "columns":
+        return {"id": ids, **vals}
+    if fmt == "table":
+        return Table.from_pydict({"id": ids, **vals})
+    raise ValueError(fmt)
+
+
+def run(scale: str = "small") -> List[dict]:
+    base_n = {"small": 20_000, "medium": 100_000, "paper": 1_000_000}[scale]
+    upd_counts = {"small": [100, 1_000, 10_000],
+                  "medium": [100, 10_000, 100_000],
+                  "paper": [100, 10_000, 100_000, 1_000_000]}[scale]
+    out: List[dict] = []
+    with TmpDir() as tmp:
+        db = ParquetDB(os.path.join(tmp, "pdb"), "bench")
+        db.create(gen_rows_pydict(base_n))
+        for n in upd_counts:
+            for fmt in ("pylist", "pydict", "columns", "table"):
+                payload = _update_payload(n, fmt)
+                t = timeit(lambda: db.update(payload))
+                out.append(row(f"fig6/update/{fmt}/n={n}", t, rows=n))
+    return out

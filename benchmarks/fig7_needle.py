@@ -1,0 +1,51 @@
+"""Paper Fig. 7: needle-in-a-haystack — retrieve one unique value from a
+column; ParquetDB (stats pushdown, no index) vs SQLite / DocDB with and
+without B-tree/hash indexes."""
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import ParquetDB, field
+
+from .common import TmpDir, gen_rows_pylist, row, sqlite_create, timeit
+from .docdb import DocDB
+
+NEEDLE = 77_777_777
+
+
+def run(scale: str = "small") -> List[dict]:
+    counts = {"small": [1_000, 10_000, 50_000],
+              "medium": [1_000, 10_000, 100_000],
+              "paper": [1_000, 10_000, 100_000, 1_000_000]}[scale]
+    out: List[dict] = []
+    for n in counts:
+        rows = gen_rows_pylist(n)
+        pos = n // 2
+        rows[pos]["col0"] = NEEDLE
+        with TmpDir() as tmp:
+            db = ParquetDB(os.path.join(tmp, "pdb"), "bench")
+            db.create(rows)
+            t = timeit(lambda: db.read(filters=[field("col0") == NEEDLE])
+                       .num_rows, repeat=3)
+            out.append(row(f"fig7/parquetdb/n={n}", t, rows=n))
+
+            conn = sqlite_create(os.path.join(tmp, "s.db"), rows)
+            q = f"SELECT * FROM test_table WHERE col0 = {NEEDLE}"
+            t = timeit(lambda: conn.execute(q).fetchall(), repeat=3)
+            out.append(row(f"fig7/sqlite-noindex/n={n}", t, rows=n))
+            conn.execute("CREATE INDEX idx_col0 ON test_table(col0)")
+            t = timeit(lambda: conn.execute(q).fetchall(), repeat=3)
+            out.append(row(f"fig7/sqlite-indexed/n={n}", t, rows=n))
+            conn.close()
+
+            ddb = DocDB(os.path.join(tmp, "d.jsonl"))
+            ddb.insert_many(rows)
+            t = timeit(lambda: ddb.find_eq("col0", NEEDLE), repeat=3)
+            out.append(row(f"fig7/docdb-noindex/n={n}", t, rows=n))
+            ddb.create_index("col0")
+            t = timeit(lambda: ddb.find_eq("col0", NEEDLE), repeat=3)
+            out.append(row(f"fig7/docdb-indexed/n={n}", t, rows=n))
+    return out

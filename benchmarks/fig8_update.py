@@ -1,0 +1,54 @@
+"""Paper Fig. 8: bulk update of K rows in a preloaded dataset —
+ParquetDB vs SQLite (indexed id) vs DocDB (indexed _id)."""
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import ParquetDB
+
+from .common import TmpDir, gen_rows_pylist, row, sqlite_create, timeit
+from .docdb import DocDB
+
+
+def run(scale: str = "small") -> List[dict]:
+    base_n = {"small": 20_000, "medium": 200_000, "paper": 1_000_000}[scale]
+    ks = {"small": [10, 1_000, 10_000],
+          "medium": [10, 1_000, 100_000],
+          "paper": [10, 1_000, 100_000, 1_000_000]}[scale]
+    rows = gen_rows_pylist(base_n)
+    out: List[dict] = []
+    rng = np.random.default_rng(2)
+    with TmpDir() as tmp:
+        db = ParquetDB(os.path.join(tmp, "pdb"), "bench")
+        db.create(rows)
+        conn = sqlite_create(os.path.join(tmp, "s.db"), rows)
+        conn.execute("CREATE INDEX idx_id ON test_table(rowid_)")
+        ddb = DocDB(os.path.join(tmp, "d.jsonl"))
+        ddb.insert_many([{"_id": i, **r} for i, r in enumerate(rows)])
+        ddb.create_index("_id")
+
+        for k in ks:
+            ids = rng.choice(base_n, size=min(k, base_n), replace=False)
+            vals = rng.integers(0, 1_000_000, len(ids))
+            # ParquetDB update (pylist input — paper's conservative choice)
+            payload = [{"id": int(i), "col1": int(v)}
+                       for i, v in zip(ids, vals)]
+            t = timeit(lambda: db.update(payload))
+            out.append(row(f"fig8/parquetdb/k={k}", t, rows=k))
+            # SQLite
+            pairs = [(int(v), int(i)) for i, v in zip(ids, vals)]
+            def sql_upd():
+                conn.executemany(
+                    "UPDATE test_table SET col1 = ? WHERE rowid_ = ?", pairs)
+                conn.commit()
+            t = timeit(sql_upd)
+            out.append(row(f"fig8/sqlite/k={k}", t, rows=k))
+            # DocDB
+            updates = {int(i): {"col1": int(v)} for i, v in zip(ids, vals)}
+            t = timeit(lambda: ddb.update_many(updates))
+            out.append(row(f"fig8/docdb/k={k}", t, rows=k))
+        conn.close()
+    return out

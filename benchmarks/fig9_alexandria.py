@@ -1,0 +1,36 @@
+"""Paper Fig. 9: JSON load time vs ParquetDB create time per shard for the
+(synthetic) Alexandria materials dataset."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from repro.core import ParquetDB
+
+from .alexandria import write_json_shards
+from .common import TmpDir, row, timeit
+
+
+def run(scale: str = "small") -> List[dict]:
+    n_total, per_file = {"small": (2_000, 500),
+                         "medium": (20_000, 5_000),
+                         "paper": (500_000, 100_000)}[scale]
+    out: List[dict] = []
+    with TmpDir() as tmp:
+        shards = write_json_shards(os.path.join(tmp, "json"), n_total,
+                                   per_file)
+        db = ParquetDB(os.path.join(tmp, "pdb"), "alexandria")
+        for i, p in enumerate(shards):
+            holder = {}
+            t_load = timeit(lambda: holder.setdefault(
+                "d", json.load(open(p))))
+            data = holder["d"]["entries"]
+            t_create = timeit(lambda: db.create(
+                data, treat_fields_as_ragged=["data.elements"]))
+            out.append(row(f"fig9/json_load/shard={i}", t_load,
+                           rows=len(data)))
+            out.append(row(f"fig9/create/shard={i}", t_create,
+                           rows=len(data)))
+        out.append(row("fig9/total_rows", 0.0, rows=db.n_rows))
+    return out

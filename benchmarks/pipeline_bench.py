@@ -1,0 +1,62 @@
+"""Training-data-path benchmarks: TokenStore throughput, pushdown savings,
+bitpacked device feed (bytes over 'PCIe'), and loader work stealing."""
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import TPQReader, field
+from repro.core import encodings as enc
+from repro.data.sharded_loader import ShardedLoader, device_feed
+from repro.data.tokenstore import TokenStore
+
+from .common import TmpDir, row, timeit
+
+
+def run(scale: str = "small") -> List[dict]:
+    n_tokens = {"small": 2_000_000, "medium": 20_000_000,
+                "paper": 200_000_000}[scale]
+    seq, vocab = 1024, 151_936
+    out: List[dict] = []
+    rng = np.random.default_rng(0)
+    with TmpDir() as tmp:
+        ts = TokenStore(os.path.join(tmp, "tok"), seq_len=seq, vocab=vocab)
+        docs = [rng.integers(0, vocab, 100_000) for _ in range(n_tokens // 100_000)]
+        t = timeit(lambda: ts.append_documents(docs))
+        out.append(row("pipeline/ingest", t, tokens=n_tokens,
+                       tokens_per_s=n_tokens / t))
+
+        # raw sequential read throughput
+        def read_all():
+            total = 0
+            for b in ts.read_batches(64):
+                total += b.size
+            return total
+        t = timeit(read_all)
+        out.append(row("pipeline/read_all", t, tokens_per_s=n_tokens / t))
+
+        # loader with prefetch + steal
+        ld = ShardedLoader(ts.db, batch_size=64, prefetch=4)
+        t = timeit(lambda: sum(b.size for b in ld.epoch(0)))
+        out.append(row("pipeline/sharded_loader", t,
+                       tokens_per_s=n_tokens / t))
+
+        # storage efficiency: bitpacked tokens vs raw int32
+        man = ts.db._dir.load()
+        stored = sum(os.path.getsize(ts.db._dir.file_path(f))
+                     for f in man.files)
+        raw = ts.n_sequences * seq * 4
+        out.append(row("pipeline/storage_bytes", 0.0, stored=stored, raw=raw,
+                       ratio=stored / raw))
+
+        # device feed: bytes shipped bitpacked vs int32
+        tok = rng.integers(0, vocab, (8, seq)).astype(np.int32)
+        k = int(vocab - 1).bit_length()
+        packed_bytes = 8 * seq * k / 8
+        t = timeit(lambda: np.asarray(device_feed(tok, vocab)), repeat=2)
+        out.append(row("pipeline/device_feed_bitpack", t,
+                       bytes_packed=packed_bytes, bytes_raw=tok.nbytes,
+                       pcie_ratio=packed_bytes / tok.nbytes))
+    return out

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``python -m benchmarks.run [--scale small|medium|paper] [--only fig5,...]``
+prints ``name,us_per_call,derived`` CSV (paper protocol) and writes the rows
+into a ParquetDB results store so they are queryable like everything else.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import sys
+import time
+
+SUITES = ["fig5_create_read", "fig6_formats", "fig7_needle", "fig8_update",
+          "fig9_alexandria", "fig10_ops", "pipeline_bench", "kernels_bench",
+          "ckpt_bench"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small",
+                    choices=["small", "medium", "paper"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite prefixes")
+    ap.add_argument("--store", default=None,
+                    help="optional ParquetDB dir for results")
+    args = ap.parse_args(argv)
+
+    only = args.only.split(",") if args.only else None
+    all_rows = []
+    print("name,us_per_call,derived")
+    for suite in SUITES:
+        if only and not any(suite.startswith(o) for o in only):
+            continue
+        mod = importlib.import_module(f".{suite}", package=__package__)
+        try:
+            rows = mod.run(args.scale)
+        except Exception as e:
+            print(f"{suite}/ERROR,0,\"{e!r}\"")
+            continue
+        for r in rows:
+            derived = {k: v for k, v in r.items()
+                       if k not in ("name", "us_per_call")}
+            print(f"{r['name']},{r['us_per_call']:.1f},"
+                  f"\"{json.dumps(derived)}\"")
+        sys.stdout.flush()
+        all_rows.extend(rows)
+    if args.store and all_rows:
+        from repro.core import ParquetDB
+        db = ParquetDB(args.store, "bench_results")
+        db.create([{k: (float(v) if isinstance(v, (int, float)) else str(v))
+                    for k, v in r.items()} for r in all_rows])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,48 @@
+"""Quickstart: the paper's §4.7 walkthrough, verbatim against repro.core.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import shutil
+import tempfile
+
+from repro.core import NormalizeConfig, ParquetDB, field
+
+workdir = tempfile.mkdtemp(prefix="parquetdb_quickstart_")
+
+# Initialize the database
+db = ParquetDB(os.path.join(workdir, "parquetdb"))
+
+# Create data
+data = [
+    {"name": "Alice", "age": 30, "occupation": "Engineer"},
+    {"name": "Bob", "age": 25, "occupation": "Data Scientist"},
+]
+db.create(data)
+
+# Read data from the database
+employees = db.read()
+print(employees.to_pylist())
+
+# Add another record with a NEW field -> schema evolves, old rows get null
+db.create([{"name": "Jimmy", "age": 30, "state": "West Virginia"}])
+print(db.read().to_pylist())
+
+# Update Alice by id; adding a brand-new field on the fly
+db.update([{"id": 0, "state": "Maryland", "zip": 26709}])
+print(db.read(columns=["name", "state", "zip"]).to_pylist())
+
+# Delete Jimmy (id=2)
+db.delete(ids=[2])
+print(db.read(columns=["name"]).to_pylist())
+
+# Filters: predicate pushdown via field expressions (AND-combined list)
+adults = db.read(columns=["name", "age"], filters=[field("age") >= 30])
+print("age>=30:", adults.to_pylist())
+
+# Normalize file/row-group layout
+db.normalize(NormalizeConfig(max_rows_per_file=500))
+print("files after normalize:", db.n_files, "rows:", db.n_rows)
+
+shutil.rmtree(workdir)
+print("OK")

@@ -1,0 +1,12 @@
+"""Batched serving example: continuous-batching engine over a small model.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.exit(serve_main(["--arch", "qwen2.5-3b", "--reduced",
+                         "--requests", "8", "--slots", "4",
+                         "--max-new", "12"]))

@@ -1,0 +1,24 @@
+"""End-to-end driver (deliverable b): train the ~100M `repro-100m` LM for a
+few hundred steps from a columnar TokenStore, with checkpoints + metrics in
+columnar stores.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+(CPU-sized by default: reduced config; pass --full for the real 100M.)
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--full", action="store_true",
+                    help="full 100M config (slow on CPU)")
+    ap.add_argument("--workdir", default="/tmp/repro_train_example")
+    args = ap.parse_args()
+    argv = ["--arch", "repro-100m", "--steps", str(args.steps),
+            "--batch", "8", "--seq", "256", "--workdir", args.workdir]
+    if not args.full:
+        argv.append("--reduced")
+    sys.exit(train_main(argv))

@@ -1,0 +1,3 @@
+"""repro — ParquetDB-on-TPU: columnar data substrate + multi-pod JAX framework."""
+
+__version__ = "0.1.0"

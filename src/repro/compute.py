@@ -1,0 +1,93 @@
+"""repro.compute — analogue of the ``pyarrow.compute`` surface the paper uses.
+
+The paper's examples read as ``import pyarrow.compute as pc``; this module
+provides the same names (``pc.field``, ``pc.min_max``, ``pc.if_else``,
+``pc.list_flatten``, ``pc.list_parent_indices``, ``pc.equal``, ``pc.filter``,
+``pc.take``) against repro.core tables/columns so the paper's §6 workload runs
+verbatim modulo the import line.
+"""
+from __future__ import annotations
+
+from typing import Any, Union
+
+import numpy as np
+
+from .core.expressions import Expr, field  # re-export: pc.field
+from .core.table import Column, Table
+from .core.dtypes import KIND_LIST, KIND_NUMERIC
+
+__all__ = ["field", "min_max", "if_else", "list_flatten",
+           "list_parent_indices", "equal", "filter", "take", "sum", "mean",
+           "unique"]
+
+
+def if_else(cond: Expr, then_expr: Expr, else_expr: Expr) -> Expr:
+    """Conditional *predicate*: rows satisfy then_expr where cond holds,
+    else_expr elsewhere — exactly the paper's band-gap query pattern."""
+    return (cond & then_expr) | (~cond & else_expr)
+
+
+def _as_values(col: Union[Column, np.ndarray]) -> np.ndarray:
+    if isinstance(col, Column):
+        if col.dtype.kind != KIND_NUMERIC:
+            raise TypeError(f"numeric column required, got {col.dtype}")
+        if col.validity is not None:
+            return col.values[col.validity]
+        return col.values
+    return np.asarray(col)
+
+
+def min_max(col: Union[Column, np.ndarray]) -> dict:
+    v = _as_values(col)
+    return {"min": v.min().item() if len(v) else None,
+            "max": v.max().item() if len(v) else None}
+
+
+def sum(col: Union[Column, np.ndarray]):  # noqa: A001 - mirrors pc.sum
+    return _as_values(col).sum().item()
+
+
+def mean(col: Union[Column, np.ndarray]):
+    return _as_values(col).mean().item()
+
+
+def unique(col: Union[Column, np.ndarray]) -> np.ndarray:
+    return np.unique(_as_values(col))
+
+
+def list_flatten(col: Column) -> Column:
+    if col.dtype.kind != KIND_LIST:
+        raise TypeError(f"list column required, got {col.dtype}")
+    return col.child
+
+
+def list_parent_indices(col: Column) -> np.ndarray:
+    if col.dtype.kind != KIND_LIST:
+        raise TypeError(f"list column required, got {col.dtype}")
+    lens = np.diff(col.offsets)
+    return np.repeat(np.arange(len(col), dtype=np.int64), lens)
+
+
+def equal(a, b) -> np.ndarray:
+    av = a.to_pylist() if isinstance(a, Column) and a.dtype.kind not in (KIND_NUMERIC,) else a
+    if isinstance(av, Column):
+        av = av.values
+    if isinstance(av, list):
+        av = np.array(av, dtype=object)
+    return np.asarray(av == b) if not isinstance(b, Column) else np.asarray(av == b.values)
+
+
+def filter(obj: Union[Table, Column, np.ndarray], mask: np.ndarray):  # noqa: A001
+    mask = np.asarray(mask, bool)
+    if isinstance(obj, Table):
+        return obj.filter_mask(mask)
+    if isinstance(obj, Column):
+        return obj.take(np.nonzero(mask)[0])
+    return obj[mask]
+
+
+def take(obj: Union[Table, Column, np.ndarray], indices) -> Any:
+    idx = np.asarray(indices, np.int64)
+    if isinstance(obj, (Table, Column)):
+        return obj.take(idx)
+    return obj[idx]

@@ -1,0 +1,4 @@
+"""Assigned-architecture configs.  ``registry.get(name)`` / ``--arch <id>``."""
+from .registry import ARCH_NAMES, SHAPES, cells_for, get, get_reduced
+
+__all__ = ["ARCH_NAMES", "SHAPES", "cells_for", "get", "get_reduced"]

@@ -1,0 +1,17 @@
+"""h2o-danube-3-4b [dense] 24L d=3840 32H (GQA kv=8) d_ff=10240 vocab=32000
+llama+mistral mix with sliding-window attention  [arXiv:2401.16818]
+SWA window 4096 => sub-quadratic long context (ring KV cache), so the
+long_500k decode cell RUNS for this arch."""
+from ..models import AttnCfg, ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="dense", n_layers=24, d_model=3840,
+    d_ff=10240, vocab=32000,
+    attn=AttnCfg(n_heads=32, n_kv_heads=8, head_dim=120, window=4096),
+    supports_long_context=True)
+
+REDUCED = ModelConfig(
+    name="h2o-danube-3-4b-reduced", family="dense", n_layers=2, d_model=64,
+    d_ff=160, vocab=512,
+    attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=16, window=16),
+    supports_long_context=True, remat=False)

@@ -1,0 +1,18 @@
+"""llama4-scout-17b-a16e [moe] 48L d=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16e top-1 + shared expert, MoE every other layer
+[hf:meta-llama/Llama-4-Scout-17B-16E]"""
+from ..models import AttnCfg, ModelConfig, MoECfg
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e", family="moe", n_layers=48, d_model=5120,
+    d_ff=8192, vocab=202048,
+    attn=AttnCfg(n_heads=40, n_kv_heads=8, head_dim=128),
+    moe=MoECfg(num_experts=16, top_k=1, d_ff_expert=8192, shared_ff=8192,
+               every_k_layers=2))
+
+REDUCED = ModelConfig(
+    name="llama4-scout-reduced", family="moe", n_layers=4, d_model=64,
+    d_ff=128, vocab=512,
+    attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=16),
+    moe=MoECfg(num_experts=4, top_k=1, d_ff_expert=96, shared_ff=96,
+               every_k_layers=2), remat=False)

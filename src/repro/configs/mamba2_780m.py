@@ -1,0 +1,16 @@
+"""mamba2-780m [ssm] 48L d=1536 (attention-free) vocab=50280 ssm_state=128
+SSD (state-space duality)  [arXiv:2405.21060]
+d_inner = 2*d = 3072, headdim 64 -> 48 SSM heads."""
+from ..models import ModelConfig, SSMCfg
+
+CONFIG = ModelConfig(
+    name="mamba2-780m", family="ssm", n_layers=48, d_model=1536,
+    d_ff=0, vocab=50280,
+    ssm=SSMCfg(d_state=128, headdim=64, expand=2, ngroups=1, chunk=128),
+    supports_long_context=True)
+
+REDUCED = ModelConfig(
+    name="mamba2-780m-reduced", family="ssm", n_layers=2, d_model=64,
+    d_ff=0, vocab=512,
+    ssm=SSMCfg(d_state=16, headdim=16, expand=2, chunk=8),
+    supports_long_context=True, remat=False)

@@ -1,0 +1,18 @@
+"""moonshot-v1-16b-a3b [moe] 48L d=2048 16H (GQA kv=16) d_ff=1408
+vocab=163840, MoE 64e top-6 (kimi/moonlight lineage: first layer dense,
+2 shared experts = shared_ff 2816)  [hf:moonshotai/Moonlight-16B-A3B]"""
+from ..models import AttnCfg, ModelConfig, MoECfg
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b", family="moe", n_layers=48, d_model=2048,
+    d_ff=1408, vocab=163840,
+    attn=AttnCfg(n_heads=16, n_kv_heads=16, head_dim=128),
+    moe=MoECfg(num_experts=64, top_k=6, d_ff_expert=1408, shared_ff=2816,
+               first_dense=1))
+
+REDUCED = ModelConfig(
+    name="moonshot-reduced", family="moe", n_layers=3, d_model=64,
+    d_ff=96, vocab=512,
+    attn=AttnCfg(n_heads=4, n_kv_heads=4, head_dim=16),
+    moe=MoECfg(num_experts=8, top_k=2, d_ff_expert=48, shared_ff=96,
+               first_dense=1), remat=False)

@@ -1,0 +1,13 @@
+"""phi4-mini-3.8b [dense] 32L d=3072 24H (GQA kv=8) d_ff=8192 vocab=200064
+RoPE SwiGLU GQA  [arXiv:2412.08905]"""
+from ..models import AttnCfg, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b", family="dense", n_layers=32, d_model=3072,
+    d_ff=8192, vocab=200064,
+    attn=AttnCfg(n_heads=24, n_kv_heads=8, head_dim=128))
+
+REDUCED = ModelConfig(
+    name="phi4-mini-3.8b-reduced", family="dense", n_layers=2, d_model=48,
+    d_ff=128, vocab=512,
+    attn=AttnCfg(n_heads=3, n_kv_heads=1, head_dim=16), remat=False)

@@ -1,0 +1,17 @@
+"""pixtral-12b [vlm] 40L d=5120 32H (GQA kv=8) d_ff=14336 vocab=131072
+pixtral-ViT + mistral-nemo decoder — vision frontend is a STUB
+(input_specs provides precomputed patch embeddings, 1024 patches prepended)
+[hf:mistralai/Pixtral-12B-2409]"""
+from ..models import AttnCfg, ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", family="vlm", n_layers=40, d_model=5120,
+    d_ff=14336, vocab=131072,
+    attn=AttnCfg(n_heads=32, n_kv_heads=8, head_dim=128),
+    frontend="vision", frontend_seq=1024)
+
+REDUCED = ModelConfig(
+    name="pixtral-reduced", family="vlm", n_layers=2, d_model=64,
+    d_ff=160, vocab=512,
+    attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=16),
+    frontend="vision", frontend_seq=8, remat=False)

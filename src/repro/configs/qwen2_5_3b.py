@@ -1,0 +1,15 @@
+"""qwen2.5-3b [dense] 36L d=2048 16H (GQA kv=2) d_ff=11008 vocab=151936
+GQA + QKV bias  [hf:Qwen/Qwen2.5-3B]"""
+from ..models import AttnCfg, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-3b", family="dense", n_layers=36, d_model=2048,
+    d_ff=11008, vocab=151936,
+    attn=AttnCfg(n_heads=16, n_kv_heads=2, head_dim=128, qkv_bias=True,
+                 rope_theta=1_000_000.0))
+
+REDUCED = ModelConfig(
+    name="qwen2.5-3b-reduced", family="dense", n_layers=2, d_model=64,
+    d_ff=160, vocab=512,
+    attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=16, qkv_bias=True),
+    remat=False)

@@ -1,0 +1,15 @@
+"""qwen3-32b [dense] 64L d=5120 64H (GQA kv=8) d_ff=25600 vocab=151936
+qk_norm + GQA  [hf:Qwen/Qwen3-32B]"""
+from ..models import AttnCfg, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b", family="dense", n_layers=64, d_model=5120,
+    d_ff=25600, vocab=151936,
+    attn=AttnCfg(n_heads=64, n_kv_heads=8, head_dim=128, qk_norm=True,
+                 rope_theta=1_000_000.0))
+
+REDUCED = ModelConfig(
+    name="qwen3-32b-reduced", family="dense", n_layers=2, d_model=64,
+    d_ff=192, vocab=512,
+    attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=16, qk_norm=True),
+    remat=False)

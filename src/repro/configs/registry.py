@@ -1,0 +1,68 @@
+"""Architecture registry + assigned input shapes (the 40 dry-run cells)."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional
+
+from ..models.config import ModelConfig
+
+_MODULES = {
+    "qwen2.5-3b": "qwen2_5_3b",
+    "qwen3-32b": "qwen3_32b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "h2o-danube-3-4b": "h2o_danube_3_4b",
+    "mamba2-780m": "mamba2_780m",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "pixtral-12b": "pixtral_12b",
+    "repro-100m": "repro_100m",
+}
+ARCH_NAMES = [n for n in _MODULES if n != "repro-100m"]
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(f".{_MODULES[name]}", package=__package__)
+
+
+def get(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _module(name).REDUCED
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4_096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32_768, 128),
+    "long_500k": Shape("long_500k", "decode", 524_288, 1),
+}
+
+
+def cells_for(arch: str) -> List[Shape]:
+    """Applicable shapes per the assignment's skip rules."""
+    cfg = get(arch)
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"]]
+    if cfg.supports_decode:
+        out.append(SHAPES["decode_32k"])
+        if cfg.supports_long_context:
+            out.append(SHAPES["long_500k"])
+    return out
+
+
+def all_cells() -> List[tuple]:
+    return [(a, s.name) for a in ARCH_NAMES for s in cells_for(a)]

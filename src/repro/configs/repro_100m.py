@@ -1,0 +1,13 @@
+"""repro-100m — the end-to-end example model (deliverable b): a ~100M dense
+LM trained for a few hundred steps from the columnar TokenStore."""
+from ..models import AttnCfg, ModelConfig
+
+CONFIG = ModelConfig(
+    name="repro-100m", family="dense", n_layers=12, d_model=768,
+    d_ff=2048, vocab=32000,
+    attn=AttnCfg(n_heads=12, n_kv_heads=4, head_dim=64), remat=False)
+
+REDUCED = ModelConfig(
+    name="repro-100m-reduced", family="dense", n_layers=2, d_model=64,
+    d_ff=128, vocab=512,
+    attn=AttnCfg(n_heads=4, n_kv_heads=2, head_dim=16), remat=False)

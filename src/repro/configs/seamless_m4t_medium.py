@@ -1,0 +1,17 @@
+"""seamless-m4t-medium [audio] 12L d=1024 16H (kv=16) d_ff=4096 vocab=256206
+Encoder-decoder, multimodal — audio frontend is a STUB (input_specs provides
+precomputed frame embeddings, src_seq=1024 frames)  [arXiv:2308.11596]
+Full attention enc-dec => long_500k SKIPPED (see DESIGN.md)."""
+from ..models import AttnCfg, ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec", n_layers=12, d_model=1024,
+    d_ff=4096, vocab=256206,
+    attn=AttnCfg(n_heads=16, n_kv_heads=16, head_dim=64),
+    enc_layers=12, src_seq=1024, frontend="audio")
+
+REDUCED = ModelConfig(
+    name="seamless-reduced", family="encdec", n_layers=2, d_model=64,
+    d_ff=128, vocab=512,
+    attn=AttnCfg(n_heads=4, n_kv_heads=4, head_dim=16),
+    enc_layers=2, src_seq=16, frontend="audio", remat=False)

@@ -1,0 +1,19 @@
+"""zamba2-2.7b [hybrid] 54L d=2560 32H (GQA kv=32) d_ff=10240 vocab=32000
+ssm_state=64 — Mamba2 backbone + SHARED attention block (one set of attention
+weights applied every hybrid_share_period layers)  [arXiv:2411.15242]"""
+from ..models import AttnCfg, ModelConfig, SSMCfg
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid", n_layers=54, d_model=2560,
+    d_ff=10240, vocab=32000,
+    attn=AttnCfg(n_heads=32, n_kv_heads=32, head_dim=80),
+    ssm=SSMCfg(d_state=64, headdim=64, expand=2, chunk=128),
+    hybrid_share_period=6,   # 9 groups of 6 mamba layers + shared attn
+    supports_long_context=True)
+
+REDUCED = ModelConfig(
+    name="zamba2-2.7b-reduced", family="hybrid", n_layers=4, d_model=64,
+    d_ff=160, vocab=512,
+    attn=AttnCfg(n_heads=4, n_kv_heads=4, head_dim=16),
+    ssm=SSMCfg(d_state=16, headdim=16, chunk=8),
+    hybrid_share_period=2, supports_long_context=True, remat=False)

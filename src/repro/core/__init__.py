@@ -1,0 +1,19 @@
+"""repro.core — the paper's contribution: a Parquet-style columnar database.
+
+Public API mirrors the paper's ParquetDB: ``ParquetDB`` with
+create/read/update/delete/normalize, expression filters via ``field``, and the
+config dataclasses ``NormalizeConfig`` / ``LoadConfig``.
+"""
+from .dtypes import DType
+from .schema import Field, ID_COLUMN, Schema
+from .table import Column, Table, concat_tables
+from .expressions import Expr, field
+from .fileformat import TPQReader, TPQWriter, read_table, write_table
+from .store import Dataset, LoadConfig, NormalizeConfig, ParquetDB
+
+__all__ = [
+    "DType", "Field", "ID_COLUMN", "Schema", "Column", "Table",
+    "concat_tables", "Expr", "field", "TPQReader", "TPQWriter",
+    "read_table", "write_table", "Dataset", "LoadConfig",
+    "NormalizeConfig", "ParquetDB",
+]

@@ -1,0 +1,171 @@
+"""Logical/physical dtype system for the TPQ columnar format.
+
+Mirrors the role of Parquet's physical+logical type split (paper §4.1 / SI §1.4.2):
+a *physical* type says how bytes are laid out, a *logical* type carries semantic
+meaning (string, list, fixed-shape tensor, ...).  Kept deliberately small: the set
+below covers everything the paper's workloads (numeric tables, nested materials
+records) and our training substrate (token/embedding columns) need.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Logical type kinds
+# ---------------------------------------------------------------------------
+KIND_NUMERIC = "numeric"     # ints, floats, bool — stored as fixed-width LE
+KIND_STRING = "string"       # UTF-8, offsets + bytes
+KIND_BINARY = "binary"       # raw bytes, offsets + bytes
+KIND_TENSOR = "tensor"       # fixed-shape nd tensor per row (shape in dtype)
+KIND_LIST = "list"           # ragged list per row (offsets + child values)
+KIND_NULL = "null"           # all-null placeholder column
+
+_NUMPY_TO_CODE = {
+    np.dtype("bool"): "b1",
+    np.dtype("int8"): "i1",
+    np.dtype("int16"): "i2",
+    np.dtype("int32"): "i4",
+    np.dtype("int64"): "i8",
+    np.dtype("uint8"): "u1",
+    np.dtype("uint16"): "u2",
+    np.dtype("uint32"): "u4",
+    np.dtype("uint64"): "u8",
+    np.dtype("float16"): "f2",
+    np.dtype("float32"): "f4",
+    np.dtype("float64"): "f8",
+}
+_CODE_TO_NUMPY = {v: k for k, v in _NUMPY_TO_CODE.items()}
+
+# promotion lattice for schema evolution (paper §4.4.2 "Schema Alignment")
+_PROMOTION_ORDER = [
+    "b1", "i1", "u1", "i2", "u2", "i4", "u4", "i8", "u8", "f2", "f4", "f8",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class DType:
+    """A logical column type.
+
+    kind       one of KIND_*.
+    code       physical element code for numeric/tensor/list-child ("i8", "f4", ...).
+    shape      per-row tensor shape for KIND_TENSOR (e.g. (3, 3) lattice matrices).
+    child      element DType for KIND_LIST.
+    """
+
+    kind: str
+    code: Optional[str] = None
+    shape: Optional[Tuple[int, ...]] = None
+    child: Optional["DType"] = None
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def numeric(code: str) -> "DType":
+        assert code in _CODE_TO_NUMPY, code
+        return DType(KIND_NUMERIC, code=code)
+
+    @staticmethod
+    def string() -> "DType":
+        return DType(KIND_STRING)
+
+    @staticmethod
+    def binary() -> "DType":
+        return DType(KIND_BINARY)
+
+    @staticmethod
+    def tensor(code: str, shape: Tuple[int, ...]) -> "DType":
+        return DType(KIND_TENSOR, code=code, shape=tuple(int(s) for s in shape))
+
+    @staticmethod
+    def list_(child: "DType") -> "DType":
+        return DType(KIND_LIST, child=child)
+
+    @staticmethod
+    def null() -> "DType":
+        return DType(KIND_NULL)
+
+    @staticmethod
+    def from_numpy(dt: np.dtype) -> "DType":
+        return DType.numeric(_NUMPY_TO_CODE[np.dtype(dt)])
+
+    # -- accessors ----------------------------------------------------------
+    @property
+    def np(self) -> np.dtype:
+        if self.kind in (KIND_NUMERIC, KIND_TENSOR):
+            return _CODE_TO_NUMPY[self.code]
+        if self.kind == KIND_NULL:
+            return np.dtype("float64")
+        raise TypeError(f"no numpy dtype for {self}")
+
+    @property
+    def is_numeric(self) -> bool:
+        return self.kind == KIND_NUMERIC
+
+    @property
+    def is_integer(self) -> bool:
+        return self.kind == KIND_NUMERIC and self.code[0] in ("i", "u", "b")
+
+    @property
+    def is_float(self) -> bool:
+        return self.kind == KIND_NUMERIC and self.code[0] == "f"
+
+    # -- (de)serialization for the footer -----------------------------------
+    def to_dict(self) -> dict:
+        d: dict[str, Any] = {"kind": self.kind}
+        if self.code is not None:
+            d["code"] = self.code
+        if self.shape is not None:
+            d["shape"] = list(self.shape)
+        if self.child is not None:
+            d["child"] = self.child.to_dict()
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "DType":
+        return DType(
+            kind=d["kind"],
+            code=d.get("code"),
+            shape=tuple(d["shape"]) if d.get("shape") is not None else None,
+            child=DType.from_dict(d["child"]) if d.get("child") else None,
+        )
+
+    def __str__(self) -> str:  # compact, for error messages
+        if self.kind == KIND_NUMERIC:
+            return self.code
+        if self.kind == KIND_TENSOR:
+            return f"tensor<{self.code},{self.shape}>"
+        if self.kind == KIND_LIST:
+            return f"list<{self.child}>"
+        return self.kind
+
+
+def promote(a: DType, b: DType) -> DType:
+    """Least common supertype used during schema evolution.
+
+    Numeric types promote along a widening lattice; a NULL column promotes to
+    anything; everything else must match exactly (the paper casts or errors —
+    we error, with the cast path living in table.cast_column).
+    """
+    if a == b:
+        return a
+    if a.kind == KIND_NULL:
+        return b
+    if b.kind == KIND_NULL:
+        return a
+    if a.kind == KIND_NUMERIC and b.kind == KIND_NUMERIC:
+        ia, ib = _PROMOTION_ORDER.index(a.code), _PROMOTION_ORDER.index(b.code)
+        hi = _PROMOTION_ORDER[max(ia, ib)]
+        # mixed signed/unsigned of same width widen to next signed, like numpy
+        if a.code[0] != b.code[0] and {a.code[0], b.code[0]} == {"i", "u"}:
+            width = max(int(a.code[1]), int(b.code[1]))
+            hi = "i8" if width >= 8 else f"i{min(width * 2, 8)}"
+        if "f" in (a.code[0], b.code[0]) and hi[0] != "f":
+            hi = "f8"
+        return DType.numeric(hi)
+    if a.kind == KIND_LIST and b.kind == KIND_LIST:
+        return DType.list_(promote(a.child, b.child))
+    if a.kind == KIND_TENSOR and b.kind == KIND_TENSOR and a.shape == b.shape:
+        return DType.tensor(promote(DType.numeric(a.code), DType.numeric(b.code)).code, a.shape)
+    raise TypeError(f"cannot unify column types {a} and {b}")

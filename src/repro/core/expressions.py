@@ -1,0 +1,273 @@
+"""Predicate expression language with statistics-based pruning.
+
+The paper exposes PyArrow compute expressions (``pc.field('energy') > -1.0``).
+This module provides the same surface: ``field(name)`` returns a reference with
+overloaded comparison operators; expressions combine with ``&``, ``|``, ``~``
+and evaluate to boolean masks against an in-memory Table.
+
+The crucial part for the paper's "statistics replace indexes" claim is
+``Expr.prune(stats)``: given per-chunk ColumnStats it returns False only when
+the chunk *provably* cannot contain a matching row — that is predicate
+pushdown.  Pruning is conservative: True means "must read".
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .statistics import ColumnStats
+from .table import Table
+from .dtypes import KIND_NUMERIC, KIND_STRING
+
+StatsMap = Dict[str, ColumnStats]
+
+
+class Expr:
+    def __and__(self, other: "Expr") -> "Expr":
+        return And(self, other)
+
+    def __or__(self, other: "Expr") -> "Expr":
+        return Or(self, other)
+
+    def __invert__(self) -> "Expr":
+        return Not(self)
+
+    # subclasses implement:
+    def evaluate(self, table: Table) -> np.ndarray:  # bool mask (n,)
+        raise NotImplementedError
+
+    def prune(self, stats: StatsMap) -> bool:  # may-match?
+        raise NotImplementedError
+
+    def columns(self) -> List[str]:
+        raise NotImplementedError
+
+
+def _column_values(table: Table, name: str):
+    """Numeric -> ndarray; string -> object ndarray; else error."""
+    if name not in table:
+        raise KeyError(
+            f"filter references unknown column {name!r}; have {table.column_names}")
+    col = table.column(name)
+    k = col.dtype.kind
+    if k == KIND_NUMERIC:
+        return col.values, col.validity
+    if k == KIND_STRING:
+        return np.array(col.to_pylist(), dtype=object), col.validity
+    if col.dtype.kind == "null":  # all-null: nothing ever matches
+        return np.zeros(len(col)), np.zeros(len(col), bool)
+    raise TypeError(f"cannot filter on column {name!r} of type {col.dtype}")
+
+
+_OPS = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+class Comparison(Expr):
+    def __init__(self, name: str, op: str, value: Any):
+        self.name, self.op, self.value = name, op, value
+
+    def evaluate(self, table: Table) -> np.ndarray:
+        vals, validity = _column_values(table, self.name)
+        if isinstance(self.value, FieldRef):
+            other, ov = _column_values(table, self.value.name)
+            mask = _OPS[self.op](vals, other)
+            if ov is not None:
+                mask &= ov
+        else:
+            mask = _OPS[self.op](vals, self.value)
+        mask = np.asarray(mask, bool)
+        if validity is not None:
+            mask &= validity  # null never matches (SQL-like)
+        return mask
+
+    def prune(self, stats: StatsMap) -> bool:
+        if isinstance(self.value, FieldRef):
+            return True  # column-vs-column: no pushdown
+        st = stats.get(self.name)
+        if st is None or st.min is None:
+            return not (st is not None and st.all_null())
+        v, lo, hi = self.value, st.min, st.max
+        try:
+            if self.op == "==":
+                return st.may_contain(v)
+            if self.op == "!=":
+                return not (lo == hi == v)
+            if self.op == "<":
+                return lo < v
+            if self.op == "<=":
+                return lo <= v
+            if self.op == ">":
+                return hi > v
+            if self.op == ">=":
+                return hi >= v
+        except TypeError:
+            return True
+        return True
+
+    def columns(self) -> List[str]:
+        cols = [self.name]
+        if isinstance(self.value, FieldRef):
+            cols.append(self.value.name)
+        return cols
+
+    def __repr__(self):
+        return f"({self.name} {self.op} {self.value!r})"
+
+
+class IsIn(Expr):
+    def __init__(self, name: str, values: Sequence[Any]):
+        self.name, self.values = name, list(values)
+
+    def evaluate(self, table: Table) -> np.ndarray:
+        vals, validity = _column_values(table, self.name)
+        mask = np.isin(vals, np.array(self.values, dtype=vals.dtype if vals.dtype != object else object))
+        if validity is not None:
+            mask &= validity
+        return mask
+
+    def prune(self, stats: StatsMap) -> bool:
+        st = stats.get(self.name)
+        if st is None:
+            return True
+        return any(st.may_contain(v) for v in self.values)
+
+    def columns(self):
+        return [self.name]
+
+    def __repr__(self):
+        return f"({self.name} isin {self.values!r})"
+
+
+class IsNull(Expr):
+    def __init__(self, name: str, *, negate: bool = False):
+        self.name, self.negate = name, negate
+
+    def evaluate(self, table: Table) -> np.ndarray:
+        col = table.column(self.name)
+        valid = (np.ones(len(col), bool) if col.validity is None
+                 else col.validity.copy())
+        return valid if self.negate else ~valid
+
+    def prune(self, stats: StatsMap) -> bool:
+        st = stats.get(self.name)
+        if st is None:
+            return True
+        if self.negate:  # is_valid
+            return st.null_count < st.num_values
+        return st.null_count > 0
+
+    def columns(self):
+        return [self.name]
+
+
+class And(Expr):
+    def __init__(self, a: Expr, b: Expr):
+        self.a, self.b = a, b
+
+    def evaluate(self, table):
+        return self.a.evaluate(table) & self.b.evaluate(table)
+
+    def prune(self, stats):
+        return self.a.prune(stats) and self.b.prune(stats)
+
+    def columns(self):
+        return self.a.columns() + self.b.columns()
+
+    def __repr__(self):
+        return f"({self.a!r} & {self.b!r})"
+
+
+class Or(Expr):
+    def __init__(self, a: Expr, b: Expr):
+        self.a, self.b = a, b
+
+    def evaluate(self, table):
+        return self.a.evaluate(table) | self.b.evaluate(table)
+
+    def prune(self, stats):
+        return self.a.prune(stats) or self.b.prune(stats)
+
+    def columns(self):
+        return self.a.columns() + self.b.columns()
+
+    def __repr__(self):
+        return f"({self.a!r} | {self.b!r})"
+
+
+class Not(Expr):
+    def __init__(self, a: Expr):
+        self.a = a
+
+    def evaluate(self, table):
+        return ~self.a.evaluate(table)
+
+    def prune(self, stats):
+        return True  # conservative: min/max can't disprove a negation cheaply
+
+    def columns(self):
+        return self.a.columns()
+
+    def __repr__(self):
+        return f"~{self.a!r}"
+
+
+class FieldRef:
+    """``field('energy') > -1.0`` builds a Comparison."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __eq__(self, v):  # type: ignore[override]
+        return Comparison(self.name, "==", v)
+
+    def __ne__(self, v):  # type: ignore[override]
+        return Comparison(self.name, "!=", v)
+
+    def __lt__(self, v):
+        return Comparison(self.name, "<", v)
+
+    def __le__(self, v):
+        return Comparison(self.name, "<=", v)
+
+    def __gt__(self, v):
+        return Comparison(self.name, ">", v)
+
+    def __ge__(self, v):
+        return Comparison(self.name, ">=", v)
+
+    def isin(self, values: Sequence[Any]) -> Expr:
+        return IsIn(self.name, values)
+
+    def is_null(self) -> Expr:
+        return IsNull(self.name)
+
+    def is_valid(self) -> Expr:
+        return IsNull(self.name, negate=True)
+
+    def __hash__(self):
+        return hash(("FieldRef", self.name))
+
+    def __repr__(self):
+        return f"field({self.name!r})"
+
+
+def field(name: str) -> FieldRef:
+    return FieldRef(name)
+
+
+def combine_filters(filters: Optional[Sequence[Expr]]) -> Optional[Expr]:
+    """Paper semantics: a list of filters is AND-combined."""
+    if not filters:
+        return None
+    expr = filters[0]
+    for f in filters[1:]:
+        expr = expr & f
+    return expr

@@ -1,0 +1,405 @@
+"""TPQ file format — the repo's Parquet analogue, from scratch.
+
+Layout (paper §4.1 / SI §1):
+
+    b"TPQ1"
+    <data section: concatenated encoded buffers>
+    <footer: zlib-compressed JSON>
+    <uint64 LE footer length> b"TPQ1"
+
+A file holds *row groups* (horizontal partitions); each row group holds one
+*column chunk* per field; each chunk is split into *pages* whose row boundaries
+are aligned across columns (so page-level pruning on a filter column maps
+directly to page slices of every projected column — our page-index
+implementation of SI §1.3).  The footer carries the schema, table metadata and
+per-chunk + per-page statistics (min/max/null-count/bloom) and buffer offsets,
+enabling:
+
+  - projection pushdown: only the byte ranges of requested columns are read;
+  - predicate pushdown: row groups and then pages whose stats cannot match the
+    filter are never read from disk.
+"""
+from __future__ import annotations
+
+import io
+import json
+import struct
+import zlib
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from . import encodings as enc
+from .dtypes import (DType, KIND_BINARY, KIND_LIST, KIND_NULL, KIND_NUMERIC,
+                     KIND_STRING, KIND_TENSOR)
+from .expressions import Expr
+from .schema import Schema
+from .statistics import ColumnStats, compute_stats, merge_stats
+from .table import Column, Table, concat_columns, null_column_of
+
+MAGIC = b"TPQ1"
+VERSION = 1
+CREATED_BY = "repro-tpq 0.1"
+
+DEFAULT_PAGE_ROWS = 8192
+DEFAULT_ROW_GROUP_ROWS = 131072
+
+
+# ---------------------------------------------------------------------------
+# Writer
+# ---------------------------------------------------------------------------
+class TPQWriter:
+    def __init__(self, path: str, *, codec: str = enc.CODEC_ZLIB, level: int = 1,
+                 encoding: str = enc.AUTO, page_rows: int = DEFAULT_PAGE_ROWS,
+                 row_group_rows: int = DEFAULT_ROW_GROUP_ROWS,
+                 with_bloom: bool = True,
+                 field_encodings: Optional[Dict[str, str]] = None,
+                 field_codecs: Optional[Dict[str, str]] = None):
+        self._fh = open(path, "wb")
+        self._fh.write(MAGIC)
+        self._off = len(MAGIC)
+        self.codec, self.level, self.encoding = codec, level, encoding
+        self.page_rows, self.row_group_rows = page_rows, row_group_rows
+        self.with_bloom = with_bloom
+        self.field_encodings = field_encodings or {}
+        self.field_codecs = field_codecs or {}
+        self._row_groups: List[dict] = []
+        self._schema: Optional[Schema] = None
+        self._num_rows = 0
+        self._closed = False
+
+    # -- buffers ---------------------------------------------------------------
+    def _put(self, payload: bytes, encoding: str, meta: dict, codec: str,
+             count: int) -> dict:
+        comp = enc.compress(payload, codec, self.level)
+        if len(comp) >= len(payload):  # store raw when compression loses
+            comp, codec = payload, enc.CODEC_NONE
+        d = {"off": self._off, "len": len(comp), "enc": encoding,
+             "codec": codec, "count": count}
+        if meta:
+            d["meta"] = meta
+        self._fh.write(comp)
+        self._off += len(comp)
+        return d
+
+    # encodings that already strip redundancy — compressing them again costs
+    # CPU for ~no size win, so skip unless the user pinned a field codec
+    _ENTROPY_CODED = frozenset({enc.BITPACK, enc.DICT, enc.DELTA, enc.RLE})
+
+    def _write_values(self, arr: np.ndarray, name: str) -> dict:
+        encoding = self.field_encodings.get(name, self.encoding)
+        chosen, meta, payload = enc.encode(arr, encoding)
+        if name in self.field_codecs:
+            codec = self.field_codecs[name]
+        elif chosen in self._ENTROPY_CODED:
+            codec = enc.CODEC_NONE
+        else:
+            codec = self.codec
+        return self._put(payload, chosen, meta, codec, len(arr))
+
+    def _write_validity(self, validity: Optional[np.ndarray]) -> Optional[dict]:
+        if validity is None or validity.all():
+            return None
+        payload = np.packbits(validity, bitorder="little").tobytes()
+        return self._put(payload, "bitmap", {}, self.codec, len(validity))
+
+    def _write_column_page(self, col: Column, name: str) -> dict:
+        page: Dict[str, Any] = {"rows": len(col)}
+        vb = self._write_validity(col.validity)
+        if vb is not None:
+            page["validity"] = vb
+        k = col.dtype.kind
+        if k == KIND_NUMERIC:
+            page["values"] = self._write_values(col.values, name)
+        elif k == KIND_TENSOR:
+            page["values"] = self._write_values(col.values.reshape(-1), name)
+        elif k in (KIND_STRING, KIND_BINARY):
+            lens = np.diff(col.offsets)
+            page["lengths"] = self._write_values(lens, name)
+            blob = col.blob[col.offsets[0]:col.offsets[-1]]
+            page["blob"] = self._put(blob.tobytes(), enc.PLAIN, {},
+                                     self.field_codecs.get(name, self.codec),
+                                     int(len(blob)))
+        elif k == KIND_LIST:
+            lens = np.diff(col.offsets)
+            page["lengths"] = self._write_values(lens, name)
+            child = col.child.slice(int(col.offsets[0]), int(col.offsets[-1]))
+            page["child"] = self._write_column_page(child, name)
+        # KIND_NULL: rows only
+        return page
+
+    # -- row groups --------------------------------------------------------------
+    def write_table(self, table: Table) -> None:
+        for start in range(0, max(table.num_rows, 1), self.row_group_rows):
+            piece = table.slice(start, start + self.row_group_rows)
+            if piece.num_rows == 0 and table.num_rows > 0:
+                break
+            self.write_row_group(piece)
+            if table.num_rows == 0:
+                break
+
+    def write_row_group(self, table: Table) -> None:
+        if self._schema is None:
+            self._schema = table.schema
+        elif not self._schema.equals_names_types(table.schema):
+            raise ValueError("row group schema mismatch within one file")
+        n = table.num_rows
+        rg: Dict[str, Any] = {"num_rows": n, "columns": {}}
+        for f in table.schema:
+            col = table.column(f.name)
+            pages, pstats = [], []
+            for s in range(0, max(n, 1), self.page_rows):
+                if s >= n and n > 0:
+                    break
+                piece = col.slice(s, min(s + self.page_rows, n))
+                page = self._write_column_page(piece, f.name)
+                st = compute_stats(piece, with_bloom=self.with_bloom)
+                page["stats"] = st.to_dict()
+                pages.append(page)
+                pstats.append(st)
+                if n == 0:
+                    break
+            rg["columns"][f.name] = {
+                "pages": pages,
+                "stats": merge_stats(pstats).to_dict() if pstats else ColumnStats().to_dict(),
+            }
+        self._row_groups.append(rg)
+        self._num_rows += n
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        footer = {
+            "version": VERSION,
+            "created_by": CREATED_BY,
+            "num_rows": self._num_rows,
+            "schema": (self._schema or Schema([])).to_dict(),
+            "row_groups": self._row_groups,
+        }
+        blob = zlib.compress(json.dumps(footer).encode("utf-8"), 6)
+        self._fh.write(blob)
+        self._fh.write(struct.pack("<Q", len(blob)))
+        self._fh.write(MAGIC)
+        self._fh.flush()
+        self._fh.close()
+        self._closed = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def write_table(path: str, table: Table, **kw) -> None:
+    with TPQWriter(path, **kw) as w:
+        w.write_table(table)
+
+
+# ---------------------------------------------------------------------------
+# Reader
+# ---------------------------------------------------------------------------
+class TPQReader:
+    def __init__(self, path: str):
+        self.path = path
+        with open(path, "rb") as fh:
+            head = fh.read(4)
+            if head != MAGIC:
+                raise IOError(f"{path}: bad magic {head!r}")
+            fh.seek(-12, io.SEEK_END)
+            tail = fh.read(12)
+            if tail[8:] != MAGIC:
+                raise IOError(f"{path}: truncated (bad trailing magic)")
+            (flen,) = struct.unpack("<Q", tail[:8])
+            fh.seek(-(12 + flen), io.SEEK_END)
+            footer = json.loads(zlib.decompress(fh.read(flen)))
+        self.footer = footer
+        self.schema = Schema.from_dict(footer["schema"])
+        self.num_rows: int = footer["num_rows"]
+        self.row_groups: List[dict] = footer["row_groups"]
+
+    # -- stats access ------------------------------------------------------------
+    def row_group_stats(self, i: int) -> Dict[str, ColumnStats]:
+        return {name: ColumnStats.from_dict(c["stats"])
+                for name, c in self.row_groups[i]["columns"].items()}
+
+    def page_stats(self, rg: int, name: str) -> List[ColumnStats]:
+        return [ColumnStats.from_dict(p["stats"])
+                for p in self.row_groups[rg]["columns"][name]["pages"]]
+
+    # -- page reads ----------------------------------------------------------------
+    def _get(self, fh, buf: dict) -> bytes:
+        fh.seek(buf["off"])
+        return enc.decompress(fh.read(buf["len"]), buf["codec"])
+
+    def _read_values(self, fh, buf: dict, np_dtype) -> np.ndarray:
+        payload = self._get(fh, buf)
+        return enc.decode(buf["enc"], buf.get("meta", {}), payload,
+                          buf["count"], np_dtype)
+
+    def _read_column_page(self, fh, page: dict, dtype: DType) -> Column:
+        rows = page["rows"]
+        validity = None
+        if "validity" in page:
+            raw = self._get(fh, page["validity"])
+            validity = np.unpackbits(np.frombuffer(raw, np.uint8), count=rows,
+                                     bitorder="little").astype(bool)
+        k = dtype.kind
+        if k == KIND_NUMERIC:
+            vals = self._read_values(fh, page["values"], dtype.np)
+            return Column(dtype, values=vals, validity=validity)
+        if k == KIND_TENSOR:
+            flat = self._read_values(fh, page["values"], dtype.np)
+            return Column(dtype, values=flat.reshape(rows, *dtype.shape),
+                          validity=validity)
+        if k in (KIND_STRING, KIND_BINARY):
+            lens = self._read_values(fh, page["lengths"], np.int64)
+            offsets = np.zeros(rows + 1, np.int64)
+            np.cumsum(lens, out=offsets[1:])
+            blob = np.frombuffer(self._get(fh, page["blob"]), np.uint8).copy()
+            return Column(dtype, offsets=offsets, blob=blob, validity=validity)
+        if k == KIND_LIST:
+            lens = self._read_values(fh, page["lengths"], np.int64)
+            offsets = np.zeros(rows + 1, np.int64)
+            np.cumsum(lens, out=offsets[1:])
+            child = self._read_column_page(fh, page["child"], dtype.child)
+            return Column(dtype, offsets=offsets, child=child, validity=validity)
+        return Column.nulls(rows)
+
+    # -- table reads ------------------------------------------------------------
+    def _project(self, columns: Optional[Sequence[str]],
+                 filter_expr: Optional[Expr]) -> List[str]:
+        names = list(columns) if columns is not None else self.schema.names
+        for n in names:
+            if n not in self.schema:
+                raise KeyError(f"unknown column {n!r}; file has {self.schema.names}")
+        if filter_expr is not None:
+            for n in filter_expr.columns():
+                if n in self.schema and n not in names:
+                    names.append(n)
+        return names
+
+    def read(self, columns: Optional[Sequence[str]] = None,
+             filter_expr: Optional[Expr] = None,
+             row_groups: Optional[Sequence[int]] = None,
+             prune_pages: bool = True) -> Table:
+        parts = list(self.iter_row_group_tables(
+            columns, filter_expr, row_groups, prune_pages=prune_pages))
+        names = self._project(columns, filter_expr)
+        keep = list(columns) if columns is not None else names
+        if not parts:
+            sub = self.schema.select(keep)
+            return Table(sub, {f.name: null_column_of(f.dtype, 0) for f in sub})
+        out = _concat_same_schema(parts)
+        return out.select(keep)
+
+    def iter_row_group_tables(self, columns=None, filter_expr=None,
+                              row_groups=None, prune_pages: bool = True
+                              ) -> Iterator[Table]:
+        names = self._project(columns, filter_expr)
+        sub_schema = self.schema.select(names)
+        filter_cols = ([c for c in dict.fromkeys(filter_expr.columns())
+                        if c in self.schema]
+                       if filter_expr is not None else [])
+        two_phase = bool(filter_cols) and len(filter_cols) < len(names)
+        with open(self.path, "rb") as fh:
+            for i, rg in enumerate(self.row_groups):
+                if row_groups is not None and i not in set(row_groups):
+                    continue
+                if filter_expr is not None and not filter_expr.prune(
+                        self.row_group_stats(i)):
+                    continue  # row-group pushdown: skip entirely
+                npages = len(next(iter(rg["columns"].values()))["pages"]) \
+                    if rg["columns"] else 0
+                page_sel = list(range(npages))
+                if prune_pages and filter_expr is not None and npages > 1:
+                    page_sel = self._select_pages(i, filter_expr, npages)
+                    if not page_sel:
+                        continue
+
+                def read_pages(name: str, idxs) -> Column:
+                    pages = rg["columns"][name]["pages"]
+                    pieces = [self._read_column_page(
+                        fh, pages[j], self.schema[name].dtype) for j in idxs]
+                    return (concat_columns(pieces) if len(pieces) != 1
+                            else pieces[0])
+
+                if two_phase:
+                    # phase 1: decode ONLY the filter columns, page by page;
+                    # a page with zero matches never touches the other columns
+                    fschema = self.schema.select(filter_cols)
+                    kept, masks, fcache = [], [], {}
+                    for j in page_sel:
+                        fcols = {n: read_pages(n, [j]) for n in filter_cols}
+                        mask = filter_expr.evaluate(Table(fschema, fcols))
+                        if mask.any():
+                            kept.append(j)
+                            masks.append(mask)
+                            fcache[j] = fcols
+                    if not kept:
+                        continue
+                    cols: Dict[str, Column] = {}
+                    for name in names:
+                        if name in filter_cols:
+                            cols[name] = concat_columns(
+                                [fcache[j][name] for j in kept]) \
+                                if len(kept) != 1 else fcache[kept[0]][name]
+                        else:
+                            cols[name] = read_pages(name, kept)
+                    t = Table(sub_schema, cols)
+                    mask = np.concatenate(masks)
+                    if not mask.all():
+                        t = t.filter_mask(mask)
+                else:
+                    cols = {name: read_pages(name, page_sel) for name in names}
+                    t = Table(sub_schema, cols)
+                    if filter_expr is not None:
+                        mask = filter_expr.evaluate(t)
+                        if not mask.all():
+                            t = t.filter_mask(mask)
+                if t.num_rows:
+                    yield t
+
+    def _select_pages(self, rg: int, expr: Expr, npages: int) -> List[int]:
+        """Page-index pruning: keep pages whose aligned stats may match."""
+        cols = {c for c in expr.columns() if c in self.schema}
+        per_page_stats: List[Dict[str, ColumnStats]] = [
+            {} for _ in range(npages)]
+        for name in cols:
+            for j, st in enumerate(self.page_stats(rg, name)):
+                per_page_stats[j][name] = st
+        return [j for j in range(npages) if expr.prune(per_page_stats[j])]
+
+    def read_row_group_bytes(self, i: int, columns: Optional[Sequence[str]] = None) -> int:
+        """Total stored bytes for a row group's (projected) chunks — for benches."""
+        total = 0
+
+        def _walk(page):
+            t = 0
+            for k in ("validity", "values", "lengths", "blob"):
+                if k in page:
+                    t += page[k]["len"]
+            if "child" in page:
+                t += _walk(page["child"])
+            return t
+
+        rg = self.row_groups[i]
+        for name, chunk in rg["columns"].items():
+            if columns is not None and name not in columns:
+                continue
+            for p in chunk["pages"]:
+                total += _walk(p)
+        return total
+
+
+def _concat_same_schema(parts: List[Table]) -> Table:
+    if len(parts) == 1:
+        return parts[0]
+    schema = parts[0].schema
+    cols = {f.name: concat_columns([p.columns[f.name] for p in parts])
+            for f in schema}
+    return Table(schema, cols)
+
+
+def read_table(path: str, columns=None, filter_expr=None) -> Table:
+    return TPQReader(path).read(columns=columns, filter_expr=filter_expr)

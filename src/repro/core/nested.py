@@ -1,0 +1,83 @@
+"""Nested-structure handling: flatten dicts to dotted columns and rebuild.
+
+Implements the paper's §4.4.2 "Flattening Nested Structures" and §4.6.1
+"Rebuilding Nested Structures": incoming records may contain arbitrarily nested
+dictionaries; they are flattened into columns named ``parent.child1.child2``.
+``rebuild`` inverts the mapping.  Empty structs get a dummy field so the column
+survives storage (the paper's "Handling Empty Structs").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+# Name of the placeholder inserted into empty structs (paper §4.4.2).
+DUMMY_FIELD = "dummy_variable"
+SEP = "."
+
+
+def flatten_record(rec: Dict[str, Any], prefix: str = "") -> Dict[str, Any]:
+    """Flatten one (possibly nested) record dict into dotted keys.
+
+    Lists are left intact (they become list/tensor columns) *unless* they are
+    lists of dicts, which stay as opaque python objects for the serializer to
+    handle (the paper stores e.g. ``structure.sites`` — a list of dicts — via
+    object serialization).
+    """
+    out: Dict[str, Any] = {}
+    for key, val in rec.items():
+        name = f"{prefix}{SEP}{key}" if prefix else str(key)
+        if isinstance(val, dict):
+            if not val:
+                out[f"{name}{SEP}{DUMMY_FIELD}"] = True
+            else:
+                out.update(flatten_record(val, prefix=name))
+        else:
+            out[name] = val
+    return out
+
+
+def flatten_records(records: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    return [flatten_record(r) for r in records]
+
+
+def _insert(tree: Dict[str, Any], dotted: str, value: Any) -> None:
+    parts = dotted.split(SEP)
+    node = tree
+    for p in parts[:-1]:
+        nxt = node.get(p)
+        if not isinstance(nxt, dict):
+            nxt = {}
+            node[p] = nxt
+        node = nxt
+    node[parts[-1]] = value
+
+
+def _strip_dummies(tree: Any) -> Any:
+    if isinstance(tree, dict):
+        return {
+            k: _strip_dummies(v) for k, v in tree.items() if k != DUMMY_FIELD
+        }
+    return tree
+
+
+def rebuild_record(flat: Dict[str, Any], strip_dummy: bool = True) -> Dict[str, Any]:
+    """Invert :func:`flatten_record` — dotted keys back into nested dicts."""
+    tree: Dict[str, Any] = {}
+    for key, val in flat.items():
+        _insert(tree, key, val)
+    return _strip_dummies(tree) if strip_dummy else tree
+
+
+def rebuild_records(flats: List[Dict[str, Any]], strip_dummy: bool = True) -> List[Dict[str, Any]]:
+    return [rebuild_record(f, strip_dummy=strip_dummy) for f in flats]
+
+
+def common_parent(name: str) -> str:
+    """Top-level parent of a dotted column name (``a.b.c`` -> ``a``)."""
+    return name.split(SEP, 1)[0]
+
+
+def children_of(names: List[str], parent: str) -> List[str]:
+    """All dotted names that live under ``parent`` (including exact match)."""
+    pre = parent + SEP
+    return [n for n in names if n == parent or n.startswith(pre)]

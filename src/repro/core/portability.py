@@ -1,0 +1,70 @@
+"""Portability helpers (paper Table 1: "File-based storage, allows for easy
+transfer"): lossless JSON-lines export/import of a dataset, including nested
+structure reconstruction — the interchange path between ParquetDB instances
+or out to other tools."""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import numpy as np
+
+from .store import ParquetDB
+
+
+def _jsonable(v):
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, bytes):
+        return {"__bytes__": v.hex()}
+    if isinstance(v, dict):
+        return {k: _jsonable(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [_jsonable(x) for x in v]
+    return v
+
+
+def _unjson(v):
+    if isinstance(v, dict):
+        if set(v) == {"__bytes__"}:
+            return bytes.fromhex(v["__bytes__"])
+        return {k: _unjson(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [_unjson(x) for x in v]
+    return v
+
+
+def export_jsonl(db: ParquetDB, path: str, *, batch_size: int = 10_000,
+                 keep_ids: bool = False) -> int:
+    """Stream the dataset to JSON-lines (nested structure rebuilt)."""
+    n = 0
+    with open(path, "w") as fh:
+        for t in db.read(load_format="batches", batch_size=batch_size):
+            for rec in t.to_pylist(rebuild_nested=True):
+                if not keep_ids:
+                    rec.pop("id", None)
+                fh.write(json.dumps(_jsonable(rec)) + "\n")
+                n += 1
+    return n
+
+
+def import_jsonl(db: ParquetDB, path: str, *, batch_size: int = 10_000,
+                 treat_fields_as_ragged=()) -> int:
+    """Create records from a JSON-lines file (batched)."""
+    n = 0
+    batch = []
+    with open(path) as fh:
+        for line in fh:
+            batch.append(_unjson(json.loads(line)))
+            if len(batch) >= batch_size:
+                db.create(batch, treat_fields_as_ragged=treat_fields_as_ragged)
+                n += len(batch)
+                batch = []
+    if batch:
+        db.create(batch, treat_fields_as_ragged=treat_fields_as_ragged)
+        n += len(batch)
+    return n

@@ -1,0 +1,139 @@
+"""Schema: ordered field collection with evolution/unification.
+
+Implements the paper's schema behaviour (§4.4.2): alphabetically ordered columns
+(simplifies change detection), per-field + table-level metadata, and schema
+*evolution* — unify(incoming) adds new fields, promotes numeric widths and keeps
+everything else stable, so old row groups stay readable (missing fields read as
+null).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional
+
+from .dtypes import DType, promote
+
+ID_COLUMN = "id"
+
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    name: str
+    dtype: DType
+    nullable: bool = True
+    metadata: Optional[dict] = None
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "dtype": self.dtype.to_dict(),
+            "nullable": self.nullable,
+            "metadata": self.metadata or {},
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "Field":
+        return Field(
+            name=d["name"],
+            dtype=DType.from_dict(d["dtype"]),
+            nullable=d.get("nullable", True),
+            metadata=d.get("metadata") or None,
+        )
+
+
+class Schema:
+    """Ordered (alphabetical) mapping of field name -> Field."""
+
+    def __init__(self, fields: List[Field], metadata: Optional[dict] = None):
+        self._fields: Dict[str, Field] = {
+            f.name: f for f in sorted(fields, key=lambda f: f.name)
+        }
+        if len(self._fields) != len(fields):
+            names = [f.name for f in fields]
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate field names: {dupes}")
+        self.metadata: dict = dict(metadata or {})
+
+    # -- container protocol --------------------------------------------------
+    def __contains__(self, name: str) -> bool:
+        return name in self._fields
+
+    def __getitem__(self, name: str) -> Field:
+        return self._fields[name]
+
+    def __iter__(self) -> Iterator[Field]:
+        return iter(self._fields.values())
+
+    def __len__(self) -> int:
+        return len(self._fields)
+
+    def __eq__(self, other) -> bool:
+        return (
+            isinstance(other, Schema)
+            and list(self._fields.values()) == list(other._fields.values())
+        )
+
+    @property
+    def names(self) -> List[str]:
+        return list(self._fields.keys())
+
+    def field(self, name: str) -> Field:
+        return self._fields[name]
+
+    # -- evolution ------------------------------------------------------------
+    def unify(self, other: "Schema") -> "Schema":
+        """Union of fields with numeric promotion (paper: 'Schema Alignment').
+
+        Fields present in only one schema become nullable in the result.  Raises
+        TypeError on irreconcilable types so bad writes fail loudly instead of
+        corrupting the dataset.
+        """
+        fields: Dict[str, Field] = {}
+        for f in self:
+            fields[f.name] = f
+        for g in other:
+            if g.name in fields:
+                f = fields[g.name]
+                dt = promote(f.dtype, g.dtype)
+                fields[g.name] = Field(
+                    g.name, dt, nullable=f.nullable or g.nullable,
+                    metadata={**(f.metadata or {}), **(g.metadata or {})} or None,
+                )
+            else:
+                fields[g.name] = dataclasses.replace(g, nullable=True)
+        meta = {**self.metadata, **other.metadata}
+        return Schema(list(fields.values()), metadata=meta)
+
+    def equals_names_types(self, other: "Schema") -> bool:
+        return self.names == other.names and all(
+            self[n].dtype == other[n].dtype for n in self.names
+        )
+
+    def select(self, names: List[str]) -> "Schema":
+        return Schema([self._fields[n] for n in names], metadata=self.metadata)
+
+    def drop(self, names: List[str]) -> "Schema":
+        drop = set(names)
+        return Schema(
+            [f for f in self if f.name not in drop], metadata=self.metadata
+        )
+
+    def with_metadata(self, metadata: dict) -> "Schema":
+        return Schema(list(self), metadata={**self.metadata, **metadata})
+
+    # -- (de)serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "fields": [f.to_dict() for f in self],
+            "metadata": self.metadata,
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "Schema":
+        return Schema(
+            [Field.from_dict(f) for f in d["fields"]], metadata=d.get("metadata")
+        )
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{f.name}:{f.dtype}" for f in self)
+        return f"Schema({inner})"

@@ -1,0 +1,209 @@
+"""Column statistics: the paper's replacement for indexes.
+
+Per-page and per-row-group min/max/null-count statistics (Parquet footer
+statistics, SI §1.4.5) plus a "bloom-lite" membership fingerprint (SI §1.2) —
+a 256-bit hash bitmap that lets equality predicates prune chunks even when the
+value lies inside [min, max].  ``Expr.prune`` consumes these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .dtypes import KIND_NUMERIC, KIND_STRING
+from .table import Column
+
+_BLOOM_BITS = 256           # minimum fingerprint size
+_BLOOM_MAX_BITS = 1 << 16   # adaptive cap: 8 KiB per chunk
+_BLOOM_MAX_DISTINCT = 8192  # beyond this skip the fingerprint entirely
+_STR_STAT_MAX = 64          # truncate string min/max like Parquet writers do
+
+
+def _hash2(data: bytes) -> tuple:
+    h1 = zlib.crc32(data) & 0xFFFFFFFF
+    h2 = zlib.crc32(data, 0x9E3779B9) & 0xFFFFFFFF
+    return h1, h2
+
+
+_M64 = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def _splitmix(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 — the int-key bloom hash (write AND probe side)."""
+    x = x.astype(np.uint64)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+def _hash2_int(v) -> tuple:
+    x = int(_splitmix(np.array([np.int64(v)]).view(np.uint64))[0])
+    return x & 0xFFFFFFFF, (x >> 32) & 0xFFFFFFFF
+
+
+def _bloom_size_bits(n_distinct: int) -> int:
+    """~8 bits/key (3 probes => ~3% fp), power-of-two, clamped."""
+    bits = _BLOOM_BITS
+    while bits < 8 * n_distinct and bits < _BLOOM_MAX_BITS:
+        bits *= 2
+    return bits
+
+
+def _bloom_positions(h1: int, h2: int, nbits: int) -> List[int]:
+    # three independent probes, Kirsch-Mitzenmacher style
+    return [(h1 + i * h2) % nbits for i in (0, 1, 2)]
+
+
+def _value_bytes(v: Any) -> bytes:
+    if isinstance(v, (bool, np.bool_)):
+        return b"\x01" if v else b"\x00"
+    if isinstance(v, (int, np.integer)):
+        return int(v).to_bytes(8, "little", signed=True)
+    if isinstance(v, str):
+        return v.encode("utf-8")
+    if isinstance(v, bytes):
+        return v
+    if isinstance(v, (float, np.floating)):
+        return np.float64(v).tobytes()
+    return repr(v).encode()
+
+
+@dataclasses.dataclass
+class ColumnStats:
+    num_values: int = 0
+    null_count: int = 0
+    min: Any = None
+    max: Any = None
+    bloom: Optional[bytes] = None  # _BLOOM_BITS//8 bytes, or None
+
+    # -- pruning helpers ------------------------------------------------------
+    def may_contain(self, v: Any) -> bool:
+        """False only when the chunk provably cannot contain value v."""
+        if self.min is not None:
+            try:
+                if v < self.min or v > self.max:
+                    return False
+            except TypeError:
+                return True
+        if self.bloom is not None:
+            if isinstance(v, (int, np.integer)) and not isinstance(
+                    v, (bool, np.bool_)):
+                h1, h2 = _hash2_int(v)
+            else:
+                h1, h2 = _hash2(_value_bytes(v))
+            bits = np.frombuffer(self.bloom, np.uint8)
+            nbits = len(self.bloom) * 8
+            for p in _bloom_positions(h1, h2, nbits):
+                if not (bits[p >> 3] >> (p & 7)) & 1:
+                    return False
+        return True
+
+    def all_null(self) -> bool:
+        return self.num_values > 0 and self.null_count == self.num_values
+
+    # -- serialization --------------------------------------------------------
+    def to_dict(self) -> dict:
+        d = {"n": self.num_values, "nulls": self.null_count}
+        if self.min is not None:
+            d["min"] = _json_safe(self.min)
+            d["max"] = _json_safe(self.max)
+        if self.bloom is not None:
+            d["bloom"] = self.bloom.hex()
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "ColumnStats":
+        return ColumnStats(
+            num_values=d.get("n", 0), null_count=d.get("nulls", 0),
+            min=d.get("min"), max=d.get("max"),
+            bloom=bytes.fromhex(d["bloom"]) if "bloom" in d else None)
+
+
+def _json_safe(v: Any):
+    if isinstance(v, (np.integer,)):
+        return int(v)
+    if isinstance(v, (np.floating,)):
+        return float(v)
+    if isinstance(v, (np.bool_,)):
+        return bool(v)
+    return v
+
+
+def _bloom_from_values(vals: List[bytes]) -> bytes:
+    nbits = _bloom_size_bits(len(vals))
+    bits = np.zeros(nbits // 8, np.uint8)
+    for b in vals:
+        h1, h2 = _hash2(b)
+        for p in _bloom_positions(h1, h2, nbits):
+            bits[p >> 3] |= 1 << (p & 7)
+    return bits.tobytes()
+
+
+def _bloom_from_ints(uniq: np.ndarray) -> bytes:
+    """Vectorized int-key bloom build (splitmix64 + 3 K-M probes)."""
+    nbits = _bloom_size_bits(len(uniq))
+    x = _splitmix(uniq.astype(np.int64).view(np.uint64))
+    h1 = (x & np.uint64(0xFFFFFFFF)).astype(np.uint64)
+    h2 = (x >> np.uint64(32)).astype(np.uint64)
+    bitarr = np.zeros(nbits, np.uint8)
+    nb = np.uint64(nbits)
+    for i in range(3):
+        bitarr[((h1 + np.uint64(i) * h2) % nb).astype(np.int64)] = 1
+    return np.packbits(bitarr, bitorder="little").tobytes()
+
+
+def compute_stats(col: Column, with_bloom: bool = True) -> ColumnStats:
+    n = len(col)
+    nulls = col.null_count
+    st = ColumnStats(num_values=n, null_count=nulls)
+    if n == nulls:
+        return st
+    k = col.dtype.kind
+    if k == KIND_NUMERIC:
+        vals = col.values if col.validity is None else col.values[col.validity]
+        if col.dtype.is_float:
+            finite = vals[np.isfinite(vals)]
+            if len(finite):
+                st.min, st.max = float(finite.min()), float(finite.max())
+        else:
+            st.min = _json_safe(vals.min())
+            st.max = _json_safe(vals.max())
+            if with_bloom:
+                uniq = np.unique(vals)
+                if len(uniq) <= _BLOOM_MAX_DISTINCT:
+                    st.bloom = _bloom_from_ints(uniq)
+    elif k == KIND_STRING:
+        vals = [v for v in col.to_pylist() if v is not None]
+        if vals:
+            st.min = min(vals)[:_STR_STAT_MAX]
+            st.max = max(vals)[:_STR_STAT_MAX]
+            if with_bloom:
+                uniq = set(vals)
+                if len(uniq) <= _BLOOM_MAX_DISTINCT:
+                    st.bloom = _bloom_from_values(
+                        [u.encode("utf-8") for u in uniq])
+    # tensor/list/binary: only counts (nothing orderable to prune on)
+    return st
+
+
+def merge_stats(parts: List[ColumnStats]) -> ColumnStats:
+    """Row-group stats from page stats (Parquet: footer aggregates pages)."""
+    out = ColumnStats()
+    blooms = []
+    for p in parts:
+        out.num_values += p.num_values
+        out.null_count += p.null_count
+        if p.min is not None:
+            out.min = p.min if out.min is None else min(out.min, p.min)
+            out.max = p.max if out.max is None else max(out.max, p.max)
+        blooms.append(p.bloom)
+    if (blooms and all(b is not None for b in blooms)
+            and len({len(b) for b in blooms}) == 1):
+        acc = np.zeros(len(blooms[0]), np.uint8)
+        for b in blooms:
+            acc |= np.frombuffer(b, np.uint8)
+        out.bloom = acc.tobytes()
+    return out

@@ -1,0 +1,660 @@
+"""ParquetDB — the paper's user-facing database class, on the TPQ format.
+
+API mirrors the paper (§4.3–§4.6): ``create`` / ``read`` / ``update`` /
+``delete`` / ``normalize`` with ``NormalizeConfig`` and ``LoadConfig``,
+dotted-field access to nested data, AND-combined filter lists, id generation,
+schema evolution, and ``rebuild_nested_struct``.  Durability is by the
+manifest-commit protocol in :mod:`repro.core.transactions` (beyond-paper: a
+crash never requires manual recovery).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import threading
+from typing import Any, Dict, Generator, Iterable, List, Optional, Sequence, Union
+
+import numpy as np
+
+from . import nested
+from .dtypes import DType
+from .encodings import AUTO, CODEC_ZLIB
+from .expressions import Expr, IsIn, combine_filters, field
+from .fileformat import (DEFAULT_PAGE_ROWS, DEFAULT_ROW_GROUP_ROWS, TPQReader,
+                         TPQWriter)
+from .schema import Field, ID_COLUMN, Schema
+from .table import Column, Table, concat_tables, null_column_of
+from .transactions import DatasetDir, Manifest
+
+TableLike = Union[Table, List[dict], Dict[str, Any]]
+
+# Footer-parse cache: data files are immutable (every rewrite gets a fresh
+# name), so (path, size, mtime) fully identifies a footer.
+_READER_CACHE: "collections.OrderedDict" = __import__("collections").OrderedDict()
+_READER_CACHE_MAX = 128
+
+
+def _get_reader(path: str) -> TPQReader:
+    st = os.stat(path)
+    key = (path, st.st_size, st.st_mtime_ns)
+    rd = _READER_CACHE.get(key)
+    if rd is None:
+        rd = TPQReader(path)
+        _READER_CACHE[key] = rd
+        if len(_READER_CACHE) > _READER_CACHE_MAX:
+            _READER_CACHE.popitem(last=False)
+    else:
+        _READER_CACHE.move_to_end(key)
+    return rd
+
+
+@dataclasses.dataclass
+class NormalizeConfig:
+    """Paper Table 10."""
+    load_format: str = "table"
+    batch_size: Optional[int] = None
+    batch_readahead: int = 16
+    fragment_readahead: int = 4
+    use_threads: bool = True
+    max_partitions: int = 1024
+    max_open_files: int = 1024
+    max_rows_per_file: int = 10_000
+    min_rows_per_group: int = 0
+    max_rows_per_group: int = 10_000
+
+
+@dataclasses.dataclass
+class LoadConfig:
+    """Paper Table 8."""
+    batch_size: int = 131_072
+    batch_readahead: int = 16
+    fragment_readahead: int = 4
+    use_threads: bool = True
+
+
+class Dataset:
+    """Lazy handle returned by ``read(load_format='dataset')``."""
+
+    def __init__(self, db: "ParquetDB", columns, filter_expr, load_config):
+        self._db, self._columns = db, columns
+        self._filter, self._cfg = filter_expr, load_config
+
+    @property
+    def schema(self) -> Schema:
+        names = self._db._resolve_columns(self._columns, True)
+        return self._db.schema.select(names)
+
+    def iter_batches(self, batch_size: Optional[int] = None) -> Iterable[Table]:
+        yield from self._db._iter_batches(
+            self._columns, self._filter,
+            batch_size or self._cfg.batch_size, self._cfg)
+
+    def to_table(self) -> Table:
+        return concat_tables(list(self.iter_batches()))
+
+
+class ParquetDB:
+    def __init__(self, db_path: str, dataset_name: Optional[str] = None,
+                 initial_fields: Optional[List[Field]] = None,
+                 serialize_python_objects: bool = True,
+                 codec: str = CODEC_ZLIB, compression_level: int = 1,
+                 encoding: str = AUTO,
+                 field_encodings: Optional[Dict[str, str]] = None,
+                 field_codecs: Optional[Dict[str, str]] = None,
+                 eager_schema_align: bool = True,
+                 with_bloom: bool = True,
+                 page_rows: int = DEFAULT_PAGE_ROWS,
+                 row_group_rows: int = DEFAULT_ROW_GROUP_ROWS):
+        self.db_path = db_path
+        self.dataset_name = dataset_name or os.path.basename(os.path.normpath(db_path))
+        self._dir = DatasetDir(db_path, self.dataset_name)
+        self.serialize_python_objects = serialize_python_objects
+        self.codec, self.level, self.encoding = codec, compression_level, encoding
+        self.field_encodings = dict(field_encodings or {})
+        self.field_codecs = dict(field_codecs or {})
+        self.eager_schema_align = eager_schema_align
+        self.with_bloom = with_bloom
+        self.page_rows = page_rows
+        self.row_group_rows = row_group_rows
+        # startup recovery: GC files not in the committed manifest
+        man = self._dir.load()
+        self._dir.gc(man)
+        if initial_fields:
+            with self._dir.acquire_lock():
+                man = self._dir.load()
+                schema = self._manifest_schema(man).unify(Schema(initial_fields))
+                self._set_manifest_schema(man, schema)
+                self._dir.commit(man)
+
+    # ------------------------------------------------------------------ helpers
+    def _manifest_schema(self, man: Manifest) -> Schema:
+        d = man.metadata.get("schema")
+        if d is not None:
+            return Schema.from_dict(d)
+        schema = Schema([Field(ID_COLUMN, DType.numeric("i8"), nullable=False)])
+        for fn in man.files:
+            schema = schema.unify(_get_reader(self._dir.file_path(fn)).schema)
+        return schema
+
+    def _set_manifest_schema(self, man: Manifest, schema: Schema) -> None:
+        man.metadata["schema"] = schema.to_dict()
+
+    @property
+    def schema(self) -> Schema:
+        return self._manifest_schema(self._dir.load())
+
+    @property
+    def n_files(self) -> int:
+        return len(self._dir.load().files)
+
+    @property
+    def n_rows(self) -> int:
+        man = self._dir.load()
+        return sum(_get_reader(self._dir.file_path(f)).num_rows for f in man.files)
+
+    @property
+    def metadata(self) -> dict:
+        return dict(self._dir.load().metadata.get("user", {}))
+
+    def set_metadata(self, metadata: dict) -> None:
+        with self._dir.acquire_lock():
+            man = self._dir.load()
+            man.metadata.setdefault("user", {}).update(metadata)
+            self._dir.commit(man)
+
+    def set_field_metadata(self, name: str, metadata: dict) -> None:
+        with self._dir.acquire_lock():
+            man = self._dir.load()
+            schema = self._manifest_schema(man)
+            f = schema[name]
+            new = Field(f.name, f.dtype, f.nullable,
+                        {**(f.metadata or {}), **metadata})
+            fields = [new if g.name == name else g for g in schema]
+            self._set_manifest_schema(man, Schema(fields, schema.metadata))
+            self._dir.commit(man)
+
+    # ------------------------------------------------------------------ ingest
+    def _to_table(self, data: TableLike, schema: Optional[Schema],
+                  treat_fields_as_ragged=(), convert_to_fixed_shape=True) -> Table:
+        if isinstance(data, Table):
+            t = data
+        elif isinstance(data, dict):
+            t = Table.from_pydict(data, treat_fields_as_ragged=treat_fields_as_ragged,
+                                  convert_to_fixed_shape=convert_to_fixed_shape)
+        elif isinstance(data, list):
+            t = Table.from_pylist(data, treat_fields_as_ragged=treat_fields_as_ragged,
+                                  convert_to_fixed_shape=convert_to_fixed_shape)
+        else:
+            raise TypeError(f"unsupported input type {type(data)}")
+        if schema is not None:
+            t = t.align_to_schema(schema.unify(t.schema))
+        return t
+
+    def _write_file(self, path: str, table: Table,
+                    row_group_rows: Optional[int] = None,
+                    page_rows: Optional[int] = None) -> None:
+        row_group_rows = row_group_rows or self.row_group_rows
+        page_rows = page_rows or self.page_rows
+        with TPQWriter(path, codec=self.codec, level=self.level,
+                       encoding=self.encoding, page_rows=page_rows,
+                       row_group_rows=row_group_rows, with_bloom=self.with_bloom,
+                       field_encodings=self.field_encodings,
+                       field_codecs=self.field_codecs) as w:
+            w.write_table(table)
+
+    # ------------------------------------------------------------------ create
+    def create(self, data: TableLike, schema: Optional[Schema] = None,
+               metadata: Optional[dict] = None,
+               fields_metadata: Optional[Dict[str, dict]] = None,
+               normalize_dataset: bool = False,
+               normalize_config: Optional[NormalizeConfig] = None,
+               treat_fields_as_ragged: Sequence[str] = (),
+               convert_to_fixed_shape: bool = True) -> np.ndarray:
+        """Insert records; returns the assigned ids."""
+        incoming = self._to_table(data, schema, treat_fields_as_ragged,
+                                  convert_to_fixed_shape)
+        with self._dir.acquire_lock():
+            man = self._dir.load()
+            current = self._manifest_schema(man)
+            # id generation (paper §4.5.1)
+            ids = np.arange(man.next_row_id,
+                            man.next_row_id + incoming.num_rows, dtype=np.int64)
+            man.next_row_id = int(man.next_row_id + incoming.num_rows)
+            incoming = incoming.set_column(ID_COLUMN, Column.numeric(ids))
+            unified = current.unify(incoming.schema)
+            if metadata:
+                unified = unified.with_metadata(metadata)
+            if fields_metadata:
+                unified = _apply_fields_metadata(unified, fields_metadata)
+            schema_changed = not unified.equals_names_types(current) and man.files
+            new_files = list(man.files)
+            if schema_changed and self.eager_schema_align:
+                # paper: "Existing data is rewritten to align with the new schema"
+                new_files = []
+                for fn in man.files:
+                    t = _get_reader(self._dir.file_path(fn)).read().align_to_schema(unified)
+                    nf = self._dir.new_file_name(man)
+                    self._write_file(self._dir.file_path(nf), t)
+                    new_files.append(nf)
+            out = self._dir.new_file_name(man)
+            self._write_file(self._dir.file_path(out),
+                             incoming.align_to_schema(unified))
+            new_files.append(out)
+            man.files = new_files
+            self._set_manifest_schema(man, unified)
+            if normalize_dataset:
+                self._normalize_locked(man, normalize_config or NormalizeConfig())
+            self._dir.commit(man)
+            self._dir.gc(man)
+        return ids
+
+    # ------------------------------------------------------------------ read
+    def _resolve_columns(self, columns: Optional[Sequence[str]],
+                         include_cols: bool) -> List[str]:
+        schema = self.schema
+        if columns is None:
+            return schema.names
+        resolved: List[str] = []
+        for c in columns:
+            kids = nested.children_of(schema.names, c)
+            if not kids:
+                raise KeyError(f"unknown column {c!r}")
+            resolved.extend(kids)
+        if include_cols:
+            return resolved
+        drop = set(resolved)
+        return [n for n in schema.names if n not in drop]
+
+    def _build_filter(self, ids, filters) -> Optional[Expr]:
+        parts: List[Expr] = []
+        if ids is not None:
+            parts.append(IsIn(ID_COLUMN, [int(i) for i in ids]))
+        if filters:
+            parts.extend(filters)
+        return combine_filters(parts)
+
+    def read(self, ids: Optional[Sequence[int]] = None,
+             columns: Optional[Sequence[str]] = None,
+             include_cols: bool = True,
+             filters: Optional[Sequence[Expr]] = None,
+             load_format: str = "table",
+             batch_size: Optional[int] = None,
+             rebuild_nested_struct: bool = False,
+             rebuild_nested_from_scratch: bool = False,
+             load_config: Optional[LoadConfig] = None):
+        cfg = load_config or LoadConfig()
+        if batch_size:
+            cfg = dataclasses.replace(cfg, batch_size=batch_size)
+        expr = self._build_filter(ids, filters)
+        if rebuild_nested_struct:
+            return self._read_nested(columns, expr, rebuild_nested_from_scratch)
+        names = self._resolve_columns(columns, include_cols)
+        if load_format == "table":
+            if not self._dir.load().files:
+                return Table.empty(self.schema.select(names))
+            parts = list(self._iter_batches(names, expr, None, cfg))
+            if not parts:
+                return Table.empty(self.schema.select(names))
+            return concat_tables(parts)
+        if load_format == "batches":
+            return self._iter_batches(names, expr, cfg.batch_size, cfg)
+        if load_format == "dataset":
+            return Dataset(self, names, expr, cfg)
+        raise ValueError(f"unknown load_format {load_format!r}")
+
+    def _iter_batches(self, columns, expr: Optional[Expr],
+                      batch_size: Optional[int], cfg: LoadConfig
+                      ) -> Generator[Table, None, None]:
+        names = self._resolve_columns(columns, True)
+        man = self._dir.load()
+        schema = self._manifest_schema(man)
+        read_schema = schema.select(
+            _dedup(names + [c for c in (expr.columns() if expr else [])
+                            if c in schema]))
+        out_schema = schema.select(names)
+
+        def pieces() -> Generator[Table, None, None]:
+            for fn in man.files:
+                rd = _get_reader(self._dir.file_path(fn))
+                have = set(rd.schema.names)
+                cols_here = [n for n in read_schema.names if n in have]
+                pushdown = expr if expr is not None and all(
+                    c in have for c in expr.columns()) else None
+                for t in rd.iter_row_group_tables(cols_here, pushdown):
+                    t = t.align_to_schema(read_schema)
+                    if expr is not None and pushdown is None:
+                        mask = expr.evaluate(t)
+                        if not mask.all():
+                            t = t.filter_mask(mask)
+                    if t.num_rows:
+                        yield t.select(out_schema.names)
+
+        stream = (_prefetch(pieces(), cfg.fragment_readahead)
+                  if cfg.use_threads else pieces())
+        if batch_size is None:
+            yield from stream
+            return
+        # re-chunk to batch_size
+        buf: List[Table] = []
+        count = 0
+        for t in stream:
+            while t.num_rows:
+                take = min(batch_size - count, t.num_rows)
+                buf.append(t.slice(0, take))
+                t = t.slice(take, t.num_rows)
+                count += take
+                if count == batch_size:
+                    yield concat_tables(buf)
+                    buf, count = [], 0
+        if buf:
+            yield concat_tables(buf)
+
+    # -- nested rebuild (paper §4.6.1) -------------------------------------------
+    def _nested_path(self) -> str:
+        return self.db_path.rstrip("/") + "_nested"
+
+    def _read_nested(self, columns, expr, from_scratch: bool) -> Table:
+        npath = self._nested_path()
+        ndb_exists = os.path.exists(os.path.join(npath, "_manifest.json"))
+        if from_scratch and ndb_exists:
+            import shutil
+            shutil.rmtree(npath)
+            ndb_exists = False
+        ndb = ParquetDB(npath, self.dataset_name + "_nested",
+                        codec=self.codec, encoding=self.encoding)
+        if not ndb_exists:
+            flat = self.read()  # full table
+            rows = flat.to_pylist(rebuild_nested=True)
+            for r in rows:
+                r.pop(ID_COLUMN, None)
+            ndb.create(rows, convert_to_fixed_shape=False)
+        parents = None
+        if columns is not None:
+            parents = sorted({c.split(nested.SEP, 1)[0] for c in columns})
+        nschema = ndb.schema
+        cols = None
+        if parents is not None:
+            cols = []
+            for p in parents:
+                cols.extend(nested.children_of(nschema.names, p))
+        filters = [expr] if expr is not None else None
+        try:
+            return ndb.read(columns=cols, filters=filters)
+        except (KeyError, TypeError):
+            # filter referenced a flattened-only column: filter on flat side
+            keep = self.read(columns=[ID_COLUMN],
+                             filters=[expr] if expr else None)
+            ids = keep.column(ID_COLUMN).values.tolist()
+            return ndb.read(ids=ids, columns=cols)
+
+    # ------------------------------------------------------------------ update
+    def update(self, data: TableLike, schema: Optional[Schema] = None,
+               metadata: Optional[dict] = None,
+               fields_metadata: Optional[Dict[str, dict]] = None,
+               update_keys: Union[str, List[str]] = ID_COLUMN,
+               treat_fields_as_ragged: Sequence[str] = (),
+               convert_to_fixed_shape: bool = True,
+               normalize_config: Optional[NormalizeConfig] = None) -> int:
+        """Update matching records; returns number of rows updated."""
+        keys = [update_keys] if isinstance(update_keys, str) else list(update_keys)
+        incoming = self._to_table(data, schema, treat_fields_as_ragged,
+                                  convert_to_fixed_shape)
+        for k in keys:
+            if k not in incoming:
+                raise ValueError(f"update data must contain key column {k!r}")
+        updated = 0
+        with self._dir.acquire_lock():
+            man = self._dir.load()
+            current = self._manifest_schema(man)
+            unified = current.unify(incoming.schema)
+            if metadata:
+                unified = unified.with_metadata(metadata)
+            if fields_metadata:
+                unified = _apply_fields_metadata(unified, fields_metadata)
+            schema_changed = not unified.equals_names_types(current)
+            inc_aligned = incoming.align_to_schema(
+                unified.select([f.name for f in unified
+                                if f.name in incoming.columns]))
+            key_of = _key_index(incoming, keys)
+            new_files = []
+            for fn in man.files:
+                rd = _get_reader(self._dir.file_path(fn))
+                # pushdown: can this file contain any incoming key?
+                if not schema_changed and not _file_may_match(rd, incoming, keys):
+                    new_files.append(fn)
+                    continue
+                t = rd.read().align_to_schema(unified)
+                hit_dst, hit_src = _match_rows(t, key_of, keys)
+                if len(hit_dst) == 0 and not schema_changed:
+                    new_files.append(fn)
+                    continue
+                if len(hit_dst):
+                    t = _apply_updates(t, inc_aligned, hit_dst, hit_src, keys)
+                    updated += len(hit_dst)
+                nf = self._dir.new_file_name(man)
+                self._write_file(self._dir.file_path(nf), t)
+                new_files.append(nf)
+            man.files = new_files
+            self._set_manifest_schema(man, unified)
+            if normalize_config is not None:
+                self._normalize_locked(man, normalize_config)
+            self._dir.commit(man)
+            self._dir.gc(man)
+        return updated
+
+    # ------------------------------------------------------------------ delete
+    def delete(self, ids: Optional[Sequence[int]] = None,
+               columns: Optional[Sequence[str]] = None,
+               filters: Optional[Sequence[Expr]] = None,
+               normalize_config: Optional[NormalizeConfig] = None) -> int:
+        """Delete rows (by ids/filters) or columns.  Returns rows/cols removed."""
+        if columns is not None and (ids is not None or filters is not None):
+            raise ValueError("row and column deletion are mutually exclusive")
+        removed = 0
+        with self._dir.acquire_lock():
+            man = self._dir.load()
+            current = self._manifest_schema(man)
+            if columns is not None:
+                cols = []
+                for c in columns:
+                    cols.extend(nested.children_of(current.names, c))
+                if ID_COLUMN in cols:
+                    raise ValueError("cannot delete the primary key column 'id'")
+                missing = [c for c in cols if c not in current]
+                if missing:
+                    raise KeyError(f"unknown columns {missing}")
+                new_files = []
+                for fn in man.files:
+                    t = _get_reader(self._dir.file_path(fn)).read()
+                    t = t.drop([c for c in cols if c in t])
+                    nf = self._dir.new_file_name(man)
+                    self._write_file(self._dir.file_path(nf), t)
+                    new_files.append(nf)
+                man.files = new_files
+                self._set_manifest_schema(man, current.drop(cols))
+                removed = len(cols)
+            else:
+                expr = self._build_filter(ids, filters)
+                if expr is None:
+                    raise ValueError("delete needs ids, filters, or columns")
+                new_files = []
+                for fn in man.files:
+                    rd = _get_reader(self._dir.file_path(fn))
+                    stats_may = any(
+                        expr.prune(rd.row_group_stats(i))
+                        for i in range(len(rd.row_groups))
+                    ) if all(c in rd.schema for c in expr.columns()) else True
+                    if not stats_may:
+                        new_files.append(fn)
+                        continue
+                    t = rd.read().align_to_schema(current)
+                    mask = expr.evaluate(t)
+                    k = int(mask.sum())
+                    if k == 0:
+                        new_files.append(fn)
+                        continue
+                    removed += k
+                    t = t.filter_mask(~mask)
+                    if t.num_rows == 0:
+                        continue  # drop empty file
+                    nf = self._dir.new_file_name(man)
+                    self._write_file(self._dir.file_path(nf), t)
+                    new_files.append(nf)
+                man.files = new_files
+            if normalize_config is not None:
+                self._normalize_locked(man, normalize_config)
+            self._dir.commit(man)
+            self._dir.gc(man)
+        return removed
+
+    # ------------------------------------------------------------------ normalize
+    def normalize(self, normalize_config: Optional[NormalizeConfig] = None,
+                  **kwargs) -> None:
+        cfg = normalize_config or NormalizeConfig(**kwargs)
+        with self._dir.acquire_lock():
+            man = self._dir.load()
+            self._normalize_locked(man, cfg)
+            self._dir.commit(man)
+            self._dir.gc(man)
+
+    def _normalize_locked(self, man: Manifest, cfg: NormalizeConfig) -> None:
+        schema = self._manifest_schema(man)
+        batches: List[Table] = []
+        for fn in man.files:
+            rd = _get_reader(self._dir.file_path(fn))
+            for t in rd.iter_row_group_tables():
+                batches.append(t.align_to_schema(schema))
+        if not batches:
+            return
+        full = concat_tables(batches)
+        new_files = []
+        rg = max(int(cfg.max_rows_per_group), 1)
+        page = max(min(DEFAULT_PAGE_ROWS, rg), 1)
+        for s in range(0, full.num_rows, max(cfg.max_rows_per_file, 1)):
+            piece = full.slice(s, s + cfg.max_rows_per_file)
+            nf = self._dir.new_file_name(man)
+            self._write_file(self._dir.file_path(nf), piece,
+                             row_group_rows=rg, page_rows=page)
+            new_files.append(nf)
+        man.files = new_files
+
+
+# ---------------------------------------------------------------------------
+# update helpers
+# ---------------------------------------------------------------------------
+def _dedup(names: List[str]) -> List[str]:
+    seen, out = set(), []
+    for n in names:
+        if n not in seen:
+            seen.add(n)
+            out.append(n)
+    return out
+
+
+def _key_index(incoming: Table, keys: List[str]) -> Dict[Any, int]:
+    cols = [incoming.column(k).to_pylist() for k in keys]
+    out: Dict[Any, int] = {}
+    for i in range(incoming.num_rows):
+        kv = cols[0][i] if len(keys) == 1 else tuple(c[i] for c in cols)
+        out[kv] = i  # last wins
+    return out
+
+
+def _file_may_match(rd: TPQReader, incoming: Table, keys: List[str]) -> bool:
+    if len(keys) != 1 or keys[0] not in rd.schema:
+        return True
+    vals = incoming.column(keys[0])
+    if not vals.dtype.is_numeric:
+        return True
+    lo, hi = vals.values.min(), vals.values.max()
+    for i in range(len(rd.row_groups)):
+        st = rd.row_group_stats(i).get(keys[0])
+        if st is None or st.min is None or not (hi < st.min or lo > st.max):
+            return True
+    return False
+
+
+def _match_rows(t: Table, key_of: Dict[Any, int], keys: List[str]):
+    if len(keys) == 1 and t.column(keys[0]).dtype.is_numeric and all(
+            isinstance(k, (int, float)) for k in key_of):
+        vals = t.column(keys[0]).values
+        inc = np.fromiter(key_of.keys(), dtype=vals.dtype, count=len(key_of))
+        src = np.fromiter(key_of.values(), dtype=np.int64, count=len(key_of))
+        order = np.argsort(inc)
+        inc, src = inc[order], src[order]
+        pos = np.searchsorted(inc, vals)
+        pos = np.clip(pos, 0, len(inc) - 1)
+        hit = inc[pos] == vals
+        return np.nonzero(hit)[0], src[pos[hit]]
+    cols = [t.column(k).to_pylist() for k in keys]
+    dst, src = [], []
+    for i in range(t.num_rows):
+        kv = cols[0][i] if len(keys) == 1 else tuple(c[i] for c in cols)
+        j = key_of.get(kv)
+        if j is not None:
+            dst.append(i)
+            src.append(j)
+    return np.array(dst, np.int64), np.array(src, np.int64)
+
+
+def _apply_updates(t: Table, incoming: Table, dst: np.ndarray,
+                   src: np.ndarray, keys: List[str]) -> Table:
+    for name in incoming.column_names:
+        if name in keys:
+            continue
+        tgt = t.column(name)
+        upd = incoming.column(name).take(src)
+        merged = _scatter_column(tgt, dst, upd)
+        t = t.set_column(name, merged, metadata=t.schema[name].metadata
+                         if name in t.schema else None)
+    return t
+
+
+def _scatter_column(tgt: Column, dst: np.ndarray, upd: Column) -> Column:
+    """Out-of-place scatter: tgt[dst] = upd (validity-aware)."""
+    n = len(tgt)
+    idx = np.arange(n, dtype=np.int64)
+    take_from_upd = np.full(n, -1, np.int64)
+    take_from_upd[dst] = np.arange(len(dst))
+    # build combined via take trick: concat(tgt, upd).take(sel)
+    from .table import concat_columns
+    both = concat_columns([tgt, upd.cast(tgt.dtype)])
+    sel = np.where(take_from_upd >= 0, take_from_upd + n, idx)
+    return both.take(sel)
+
+
+def _apply_fields_metadata(schema: Schema, fm: Dict[str, dict]) -> Schema:
+    fields = []
+    for f in schema:
+        if f.name in fm:
+            fields.append(Field(f.name, f.dtype, f.nullable,
+                                {**(f.metadata or {}), **fm[f.name]}))
+        else:
+            fields.append(f)
+    return Schema(fields, schema.metadata)
+
+
+def _prefetch(gen: Iterable[Table], depth: int) -> Generator[Table, None, None]:
+    """Background-thread readahead (LoadConfig.fragment_readahead)."""
+    q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
+    DONE = object()
+
+    def worker():
+        try:
+            for item in gen:
+                q.put(item)
+            q.put(DONE)
+        except BaseException as e:  # propagate
+            q.put(e)
+
+    th = threading.Thread(target=worker, daemon=True)
+    th.start()
+    while True:
+        item = q.get()
+        if item is DONE:
+            return
+        if isinstance(item, BaseException):
+            raise item
+        yield item

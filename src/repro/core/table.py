@@ -1,0 +1,578 @@
+"""In-memory columnar Table — the unified internal representation.
+
+Mirrors the paper's data flow (§4.4): every accepted input format (list of
+dicts, dict of column arrays, list/np arrays) is converted into this columnar
+form before any storage operation.  Columns are numpy-backed with optional
+validity masks; nested dicts are flattened to dotted columns by
+:mod:`repro.core.nested` before they reach the Table.
+
+Column physical layouts
+  numeric  values:(n,) ndarray
+  tensor   values:(n, *shape) ndarray          (fixed-shape per-row tensors)
+  string   offsets:(n+1,) int64 + utf-8 blob uint8
+  binary   offsets:(n+1,) int64 + raw blob uint8
+  list     offsets:(n+1,) int64 + child Column (flat values)
+  null     just a length
+"""
+from __future__ import annotations
+
+import json
+import pickle
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import nested
+from .dtypes import (DType, KIND_BINARY, KIND_LIST, KIND_NULL, KIND_NUMERIC,
+                     KIND_STRING, KIND_TENSOR, promote)
+from .schema import Field, Schema
+
+# Field-metadata key marking transparently-serialized python objects
+SERIALIZED_KEY = "serialized"  # value: "json" | "pickle"
+
+
+# ---------------------------------------------------------------------------
+# Column
+# ---------------------------------------------------------------------------
+class Column:
+    __slots__ = ("dtype", "values", "offsets", "blob", "child", "validity", "_n")
+
+    def __init__(self, dtype: DType, *, values=None, offsets=None, blob=None,
+                 child: "Column" = None, validity: Optional[np.ndarray] = None,
+                 length: Optional[int] = None):
+        self.dtype = dtype
+        self.values = values
+        self.offsets = offsets
+        self.blob = blob
+        self.child = child
+        self.validity = validity
+        if dtype.kind in (KIND_NUMERIC, KIND_TENSOR):
+            self._n = len(values)
+        elif dtype.kind in (KIND_STRING, KIND_BINARY, KIND_LIST):
+            self._n = len(offsets) - 1
+        else:  # null
+            self._n = int(length)
+
+    def __len__(self) -> int:
+        return self._n
+
+    @property
+    def null_count(self) -> int:
+        if self.dtype.kind == KIND_NULL:
+            return self._n
+        return 0 if self.validity is None else int((~self.validity).sum())
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def nulls(n: int) -> "Column":
+        return Column(DType.null(), length=n)
+
+    @staticmethod
+    def numeric(arr: np.ndarray, validity=None) -> "Column":
+        arr = np.ascontiguousarray(arr)
+        return Column(DType.from_numpy(arr.dtype), values=arr, validity=validity)
+
+    @staticmethod
+    def tensor(arr: np.ndarray, validity=None) -> "Column":
+        arr = np.ascontiguousarray(arr)
+        dt = DType.tensor(DType.from_numpy(arr.dtype).code, arr.shape[1:])
+        return Column(dt, values=arr, validity=validity)
+
+    @staticmethod
+    def strings(strs: Sequence[Optional[str]]) -> "Column":
+        return _varlen_from_bytes(
+            [None if s is None else s.encode("utf-8") for s in strs],
+            DType.string())
+
+    @staticmethod
+    def binary(bs: Sequence[Optional[bytes]], dtype: Optional[DType] = None) -> "Column":
+        return _varlen_from_bytes(list(bs), dtype or DType.binary())
+
+    @staticmethod
+    def list_(offsets: np.ndarray, child: "Column", validity=None) -> "Column":
+        return Column(DType.list_(child.dtype), offsets=np.asarray(offsets, np.int64),
+                      child=child, validity=validity)
+
+    # -- element access (slow path, used by to_pylist) ------------------------
+    def _get(self, i: int):
+        if self.validity is not None and not self.validity[i]:
+            return None
+        k = self.dtype.kind
+        if k == KIND_NUMERIC:
+            return self.values[i].item()
+        if k == KIND_TENSOR:
+            return self.values[i]
+        if k in (KIND_STRING, KIND_BINARY):
+            b = bytes(self.blob[self.offsets[i]:self.offsets[i + 1]])
+            return b.decode("utf-8") if k == KIND_STRING else b
+        if k == KIND_LIST:
+            lo, hi = int(self.offsets[i]), int(self.offsets[i + 1])
+            return [self.child._get(j) for j in range(lo, hi)]
+        return None  # null column
+
+    def to_pylist(self) -> list:
+        k = self.dtype.kind
+        if k == KIND_NUMERIC:                      # C-speed fast path
+            out = self.values.tolist()
+            if self.validity is not None:
+                for i in np.nonzero(~self.validity)[0]:
+                    out[i] = None
+            return out
+        if k == KIND_TENSOR and self.validity is None:
+            return list(self.values)
+        if k == KIND_STRING and self.validity is None:
+            off = self.offsets
+            blob = self.blob.tobytes()
+            return [blob[off[i]:off[i + 1]].decode("utf-8")
+                    for i in range(self._n)]
+        return [self._get(i) for i in range(self._n)]
+
+    def to_numpy(self) -> np.ndarray:
+        k = self.dtype.kind
+        if k in (KIND_NUMERIC, KIND_TENSOR):
+            if self.validity is not None and not self.validity.all():
+                if self.dtype.is_float:
+                    out = self.values.astype(self.dtype.np, copy=True)
+                    out[~self.validity] = np.nan
+                    return out
+            return self.values
+        raise TypeError(f"to_numpy unsupported for {self.dtype}")
+
+    # -- bulk ops -------------------------------------------------------------
+    def take(self, idx: np.ndarray) -> "Column":
+        idx = np.asarray(idx, np.int64)
+        val = None if self.validity is None else self.validity[idx]
+        k = self.dtype.kind
+        if k in (KIND_NUMERIC, KIND_TENSOR):
+            return Column(self.dtype, values=self.values[idx], validity=val)
+        if k in (KIND_STRING, KIND_BINARY):
+            lens = (self.offsets[1:] - self.offsets[:-1])[idx]
+            new_off = np.zeros(len(idx) + 1, np.int64)
+            np.cumsum(lens, out=new_off[1:])
+            new_blob = np.empty(int(new_off[-1]), np.uint8)
+            src_off = self.offsets
+            for out_i, src_i in enumerate(idx):
+                lo, hi = src_off[src_i], src_off[src_i + 1]
+                new_blob[new_off[out_i]:new_off[out_i + 1]] = self.blob[lo:hi]
+            return Column(self.dtype, offsets=new_off, blob=new_blob, validity=val)
+        if k == KIND_LIST:
+            lens = (self.offsets[1:] - self.offsets[:-1])[idx]
+            new_off = np.zeros(len(idx) + 1, np.int64)
+            np.cumsum(lens, out=new_off[1:])
+            # gather child indices
+            child_idx = np.empty(int(new_off[-1]), np.int64)
+            for out_i, src_i in enumerate(idx):
+                lo, hi = int(self.offsets[src_i]), int(self.offsets[src_i + 1])
+                child_idx[new_off[out_i]:new_off[out_i + 1]] = np.arange(lo, hi)
+            return Column(self.dtype, offsets=new_off,
+                          child=self.child.take(child_idx), validity=val)
+        return Column.nulls(len(idx))
+
+    def slice(self, start: int, stop: int) -> "Column":
+        val = None if self.validity is None else self.validity[start:stop]
+        k = self.dtype.kind
+        if k in (KIND_NUMERIC, KIND_TENSOR):
+            return Column(self.dtype, values=self.values[start:stop], validity=val)
+        if k in (KIND_STRING, KIND_BINARY):
+            off = self.offsets[start:stop + 1]
+            blob = self.blob[off[0]:off[-1]]
+            return Column(self.dtype, offsets=off - off[0], blob=blob, validity=val)
+        if k == KIND_LIST:
+            off = self.offsets[start:stop + 1]
+            child = self.child.slice(int(off[0]), int(off[-1]))
+            return Column(self.dtype, offsets=(off - off[0]).astype(np.int64),
+                          child=child, validity=val)
+        return Column.nulls(stop - start)
+
+    def cast(self, dtype: DType) -> "Column":
+        if dtype == self.dtype:
+            return self
+        if self.dtype.kind == KIND_NULL:
+            return null_column_of(dtype, self._n)
+        k = self.dtype.kind
+        if k == KIND_NUMERIC and dtype.kind == KIND_NUMERIC:
+            return Column(dtype, values=self.values.astype(dtype.np),
+                          validity=self.validity)
+        if k == KIND_TENSOR and dtype.kind == KIND_TENSOR and dtype.shape == self.dtype.shape:
+            return Column(dtype, values=self.values.astype(dtype.np),
+                          validity=self.validity)
+        if k == KIND_LIST and dtype.kind == KIND_LIST:
+            return Column(dtype, offsets=self.offsets,
+                          child=self.child.cast(dtype.child), validity=self.validity)
+        raise TypeError(f"cannot cast {self.dtype} -> {dtype}")
+
+    def combined_validity(self) -> Optional[np.ndarray]:
+        return self.validity
+
+
+def _varlen_from_bytes(items: List[Optional[bytes]], dtype: DType) -> Column:
+    n = len(items)
+    validity = None
+    if any(it is None for it in items):
+        validity = np.array([it is not None for it in items], bool)
+        items = [b"" if it is None else it for it in items]
+    offsets = np.zeros(n + 1, np.int64)
+    np.cumsum([len(it) for it in items], out=offsets[1:])
+    blob = np.frombuffer(b"".join(items), np.uint8).copy() if n else np.empty(0, np.uint8)
+    return Column(dtype, offsets=offsets, blob=blob, validity=validity)
+
+
+def null_column_of(dtype: DType, n: int) -> Column:
+    """All-null column with a concrete dtype (for schema-evolution backfill)."""
+    validity = np.zeros(n, bool)
+    k = dtype.kind
+    if k == KIND_NUMERIC:
+        return Column(dtype, values=np.zeros(n, dtype.np), validity=validity)
+    if k == KIND_TENSOR:
+        return Column(dtype, values=np.zeros((n, *dtype.shape), dtype.np), validity=validity)
+    if k in (KIND_STRING, KIND_BINARY):
+        return Column(dtype, offsets=np.zeros(n + 1, np.int64),
+                      blob=np.empty(0, np.uint8), validity=validity)
+    if k == KIND_LIST:
+        return Column(dtype, offsets=np.zeros(n + 1, np.int64),
+                      child=null_column_of(dtype.child, 0), validity=validity)
+    return Column.nulls(n)
+
+
+def concat_columns(cols: List[Column]) -> Column:
+    """Concatenate columns of identical dtype (callers promote/cast first)."""
+    assert cols, "empty concat"
+    dtype = cols[0].dtype
+    assert all(c.dtype == dtype for c in cols), [str(c.dtype) for c in cols]
+    n = sum(len(c) for c in cols)
+    if any(c.validity is not None for c in cols):
+        validity = np.concatenate([
+            c.validity if c.validity is not None else np.ones(len(c), bool)
+            for c in cols])
+    else:
+        validity = None
+    k = dtype.kind
+    if k in (KIND_NUMERIC, KIND_TENSOR):
+        return Column(dtype, values=np.concatenate([c.values for c in cols]),
+                      validity=validity)
+    if k in (KIND_STRING, KIND_BINARY, KIND_LIST):
+        sizes = [c.offsets[-1] for c in cols]
+        bases = np.zeros(len(cols), np.int64)
+        np.cumsum(sizes[:-1], out=bases[1:])
+        offsets = np.concatenate(
+            [np.zeros(1, np.int64)] +
+            [c.offsets[1:] + b for c, b in zip(cols, bases)])
+        if k == KIND_LIST:
+            child = concat_columns([c.child for c in cols])
+            return Column(dtype, offsets=offsets, child=child, validity=validity)
+        blob = np.concatenate([c.blob for c in cols]) if n else np.empty(0, np.uint8)
+        return Column(dtype, offsets=offsets, blob=blob, validity=validity)
+    return Column.nulls(n)
+
+
+# ---------------------------------------------------------------------------
+# Python-value -> Column inference
+# ---------------------------------------------------------------------------
+def _try_json(v) -> Optional[bytes]:
+    try:
+        return json.dumps(v).encode("utf-8")
+    except (TypeError, ValueError):
+        return None
+
+
+def infer_column(values: List[Any], *, ragged: bool = False,
+                 convert_to_fixed_shape: bool = True) -> Tuple[Column, Optional[dict]]:
+    """Build a Column from a list of python values.
+
+    Returns (column, field_metadata).  field_metadata is non-None when values
+    were transparently serialized (dict / heterogeneous objects), mirroring the
+    paper's ``serialize_python_objects``.
+    """
+    n = len(values)
+    # fast path: uniform numeric values, no Nones — one C-level conversion
+    # instead of 2n isinstance checks (the pylist ingest hot path)
+    try:
+        arr = np.asarray(values)
+        if arr.ndim == 1 and arr.dtype != object and arr.dtype.kind in "biuf":
+            return Column.numeric(arr if arr.dtype.kind != "i"
+                                  else arr.astype(np.int64, copy=False)), None
+    except (ValueError, TypeError, OverflowError):
+        pass
+    present = [v for v in values if v is not None]
+    if not present:
+        return Column.nulls(n), None
+    first = present[0]
+
+    if isinstance(first, (bool, np.bool_)) and all(isinstance(v, (bool, np.bool_)) for v in present):
+        return _masked_numeric(values, np.bool_), None
+    if isinstance(first, str) and all(isinstance(v, str) for v in present):
+        return Column.strings(values), None
+    if isinstance(first, bytes) and all(isinstance(v, bytes) for v in present):
+        return Column.binary(values), None
+    if _all_scalar_number(present):
+        if any(isinstance(v, (float, np.floating)) for v in present):
+            return _masked_numeric(values, np.float64), None
+        return _masked_numeric(values, np.int64), None
+    if isinstance(first, np.ndarray) or isinstance(first, (list, tuple)):
+        col = _infer_sequence_column(values, present, ragged, convert_to_fixed_shape)
+        if col is not None:
+            return col, None
+    # fallback: serialize objects (dicts, lists-of-dicts, ...)
+    enc, meta = [], {SERIALIZED_KEY: "json"}
+    for v in values:
+        if v is None:
+            enc.append(None)
+            continue
+        b = _try_json(v)
+        if b is None:
+            meta = {SERIALIZED_KEY: "pickle"}
+            break
+        enc.append(b)
+    if meta[SERIALIZED_KEY] == "pickle":
+        enc = [None if v is None else pickle.dumps(v) for v in values]
+    return Column.binary(enc), meta
+
+
+def _all_scalar_number(vals) -> bool:
+    return all(
+        isinstance(v, (int, float, np.integer, np.floating))
+        and not isinstance(v, (bool, np.bool_)) for v in vals)
+
+
+def _masked_numeric(values: List[Any], np_dtype) -> Column:
+    validity = None
+    if any(v is None for v in values):
+        validity = np.array([v is not None for v in values], bool)
+        fill = False if np_dtype is np.bool_ else 0
+        values = [fill if v is None else v for v in values]
+    return Column(DType.from_numpy(np.dtype(np_dtype)),
+                  values=np.asarray(values, np_dtype), validity=validity)
+
+
+def _infer_sequence_column(values, present, ragged, convert_to_fixed_shape):
+    """list/ndarray values -> tensor column (fixed shape) or ragged list."""
+    arrs = []
+    for v in present:
+        a = np.asarray(v)
+        if a.dtype == object or a.dtype.kind in "US":
+            # list of strings -> ragged list of strings; anything else -> None
+            if all(isinstance(x, str) for x in _flat_py(v)):
+                return _ragged_strings(values)
+            return None
+        arrs.append(a)
+    shapes = {a.shape for a in arrs}
+    if len(shapes) == 1 and not ragged and convert_to_fixed_shape:
+        shape = next(iter(shapes))
+        dt = np.result_type(*[a.dtype for a in arrs])
+        stack = np.zeros((len(values), *shape), dt)
+        validity = np.ones(len(values), bool)
+        j = 0
+        for i, v in enumerate(values):
+            if v is None:
+                validity[i] = False
+            else:
+                stack[i] = arrs[j]
+                j += 1
+        val = None if validity.all() else validity
+        return Column(DType.tensor(DType.from_numpy(dt).code, shape),
+                      values=stack, validity=val)
+    # ragged 1-d lists
+    if all(a.ndim == 1 for a in arrs):
+        dt = np.result_type(*[a.dtype for a in arrs]) if arrs else np.int64
+        validity = np.array([v is not None for v in values], bool)
+        lens = [0 if v is None else len(np.asarray(v)) for v in values]
+        offsets = np.zeros(len(values) + 1, np.int64)
+        np.cumsum(lens, out=offsets[1:])
+        flat = (np.concatenate([a.astype(dt) for a in arrs])
+                if arrs else np.empty(0, dt))
+        child = Column(DType.from_numpy(dt), values=flat)
+        val = None if validity.all() else validity
+        return Column(DType.list_(child.dtype), offsets=offsets, child=child,
+                      validity=val)
+    return None  # ragged nd — fall back to serialization
+
+
+def _flat_py(v):
+    for x in v:
+        if isinstance(x, (list, tuple)):
+            yield from _flat_py(x)
+        else:
+            yield x
+
+
+def _ragged_strings(values):
+    validity = np.array([v is not None for v in values], bool)
+    lens = [0 if v is None else len(v) for v in values]
+    offsets = np.zeros(len(values) + 1, np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    flat: List[str] = []
+    for v in values:
+        if v is not None:
+            flat.extend(v)
+    child = Column.strings(flat)
+    val = None if validity.all() else validity
+    return Column(DType.list_(child.dtype), offsets=offsets, child=child, validity=val)
+
+
+# ---------------------------------------------------------------------------
+# Table
+# ---------------------------------------------------------------------------
+class Table:
+    """Immutable-ish columnar table: Schema + aligned Columns."""
+
+    def __init__(self, schema: Schema, columns: Dict[str, Column]):
+        self.schema = schema
+        self.columns = {name: columns[name] for name in schema.names}
+        lens = {len(c) for c in self.columns.values()}
+        if len(lens) > 1:
+            raise ValueError(f"ragged table: column lengths {lens}")
+        self._n = lens.pop() if lens else 0
+
+    # -- properties -----------------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        return self._n
+
+    @property
+    def num_columns(self) -> int:
+        return len(self.columns)
+
+    @property
+    def column_names(self) -> List[str]:
+        return self.schema.names
+
+    def column(self, name: str) -> Column:
+        return self.columns[name]
+
+    def __getitem__(self, name: str) -> Column:
+        return self.columns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    # -- constructors ----------------------------------------------------------
+    @staticmethod
+    def empty(schema: Optional[Schema] = None) -> "Table":
+        schema = schema or Schema([])
+        return Table(schema, {f.name: null_column_of(f.dtype, 0) for f in schema})
+
+    @staticmethod
+    def from_pylist(records: List[dict], *, treat_fields_as_ragged=(),
+                    convert_to_fixed_shape: bool = True,
+                    metadata: Optional[dict] = None) -> "Table":
+        flats = nested.flatten_records(records)
+        names: List[str] = sorted({k for r in flats for k in r})
+        cols, fields = {}, []
+        for name in names:
+            vals = [r.get(name) for r in flats]
+            col, fmeta = infer_column(
+                vals, ragged=name in set(treat_fields_as_ragged),
+                convert_to_fixed_shape=convert_to_fixed_shape)
+            cols[name] = col
+            fields.append(Field(name, col.dtype, metadata=fmeta))
+        t = Table(Schema(fields, metadata=metadata), cols)
+        t._n = len(records) if not names else t._n
+        return t
+
+    @staticmethod
+    def from_pydict(data: Dict[str, Any], *, treat_fields_as_ragged=(),
+                    convert_to_fixed_shape: bool = True,
+                    metadata: Optional[dict] = None) -> "Table":
+        cols, fields = {}, []
+        for name in sorted(data.keys()):
+            v = data[name]
+            if isinstance(v, Column):
+                col, fmeta = v, None
+            elif isinstance(v, np.ndarray) and v.ndim == 1 and v.dtype != object:
+                col, fmeta = Column.numeric(v), None
+            elif isinstance(v, np.ndarray) and v.ndim > 1:
+                col, fmeta = Column.tensor(v), None
+            else:
+                col, fmeta = infer_column(
+                    list(v), ragged=name in set(treat_fields_as_ragged),
+                    convert_to_fixed_shape=convert_to_fixed_shape)
+            cols[name] = col
+            fields.append(Field(name, col.dtype, metadata=fmeta))
+        return Table(Schema(fields, metadata=metadata), cols)
+
+    @staticmethod
+    def from_columns(schema: Schema, columns: Dict[str, Column]) -> "Table":
+        return Table(schema, columns)
+
+    # -- transforms --------------------------------------------------------------
+    def select(self, names: List[str]) -> "Table":
+        return Table(self.schema.select(names), {n: self.columns[n] for n in names})
+
+    def drop(self, names: List[str]) -> "Table":
+        keep = [n for n in self.column_names if n not in set(names)]
+        return self.select(keep)
+
+    def take(self, idx: np.ndarray) -> "Table":
+        return Table(self.schema, {n: c.take(idx) for n, c in self.columns.items()})
+
+    def filter_mask(self, mask: np.ndarray) -> "Table":
+        return self.take(np.nonzero(np.asarray(mask, bool))[0])
+
+    def slice(self, start: int, stop: int) -> "Table":
+        stop = min(stop, self._n)
+        t = Table(self.schema,
+                  {n: c.slice(start, stop) for n, c in self.columns.items()})
+        t._n = max(stop - start, 0)
+        return t
+
+    def set_column(self, name: str, col: Column, metadata: Optional[dict] = None) -> "Table":
+        fields = [f for f in self.schema if f.name != name]
+        fields.append(Field(name, col.dtype, metadata=metadata))
+        cols = dict(self.columns)
+        cols[name] = col
+        return Table(Schema(fields, metadata=self.schema.metadata), cols)
+
+    def align_to_schema(self, schema: Schema) -> "Table":
+        """Cast/backfill so this table matches ``schema`` exactly.
+
+        Missing fields become all-null columns of the target dtype; numeric
+        columns widen (paper: 'casts the data to fit the existing schema').
+        """
+        cols: Dict[str, Column] = {}
+        for f in schema:
+            if f.name in self.columns:
+                cols[f.name] = self.columns[f.name].cast(f.dtype)
+            else:
+                cols[f.name] = null_column_of(f.dtype, self._n)
+        t = Table(schema, cols)
+        t._n = self._n
+        return t
+
+    # -- export -------------------------------------------------------------------
+    def to_pylist(self, *, rebuild_nested: bool = False) -> List[dict]:
+        pl = {n: _decode_objects(self.schema[n], c) for n, c in self.columns.items()}
+        rows = [{n: pl[n][i] for n in self.column_names} for i in range(self._n)]
+        if rebuild_nested:
+            rows = nested.rebuild_records(rows)
+        return rows
+
+    def to_pydict(self) -> Dict[str, list]:
+        return {n: _decode_objects(self.schema[n], c)
+                for n, c in self.columns.items()}
+
+    def __repr__(self) -> str:
+        return f"Table[{self._n} rows x {self.num_columns} cols]({self.schema})"
+
+
+def _decode_objects(field: Field, col: Column) -> list:
+    vals = col.to_pylist()
+    mode = (field.metadata or {}).get(SERIALIZED_KEY)
+    if mode == "json":
+        return [None if v is None else json.loads(v) for v in vals]
+    if mode == "pickle":
+        return [None if v is None else pickle.loads(v) for v in vals]
+    return vals
+
+
+def concat_tables(tables: List[Table]) -> Table:
+    """Concatenate with schema unification (evolution-aware)."""
+    tables = [t for t in tables if t.num_rows or t.num_columns]
+    if not tables:
+        return Table.empty()
+    schema = tables[0].schema
+    for t in tables[1:]:
+        schema = schema.unify(t.schema)
+    aligned = [t.align_to_schema(schema) for t in tables]
+    cols = {f.name: concat_columns([t.columns[f.name] for t in aligned])
+            for f in schema}
+    return Table(schema, cols)

@@ -1,0 +1,1 @@
+"""Data pipeline on the columnar store: token storage + sharded loading."""

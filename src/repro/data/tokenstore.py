@@ -1,0 +1,104 @@
+"""TokenStore: pretokenized training data in the paper's columnar store.
+
+Each row is one fixed-length sequence: tokens (tensor<i4, (S,)>), plus
+filterable metadata columns (domain, quality, n_tokens, doc_id).  The paper's
+two pushdowns become data-pipeline features:
+
+* projection pushdown — training reads ONLY the ``tokens`` column; metadata
+  bytes never leave disk;
+* predicate pushdown — quality/domain filters prune whole row groups from the
+  footer statistics before any token is read.
+
+Tokens are written with BITPACK field encoding (ceil(log2 V) bits/token, e.g.
+18 for a 152k vocab vs 32 for int32) — the host can also ship the *packed*
+stream to the device and decode with the Pallas bitunpack kernel
+(``device_feed``), which is the beyond-paper PCIe-bandwidth optimization.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from ..core import ParquetDB, Table, field
+from ..core import encodings as enc
+from ..core.store import LoadConfig
+
+
+class TokenStore:
+    def __init__(self, path: str, seq_len: int, vocab: int,
+                 codec: str = "zlib"):
+        self.seq_len = seq_len
+        self.vocab = vocab
+        self.db = ParquetDB(
+            path, "tokens", codec=codec,
+            field_encodings={"tokens": enc.BITPACK},
+            with_bloom=False)
+
+    # -- write -------------------------------------------------------------------
+    def append_documents(self, token_arrays: Sequence[np.ndarray],
+                         domain: str = "default",
+                         quality: Optional[Sequence[float]] = None) -> int:
+        """Pack documents into fixed-length rows and append."""
+        flat = np.concatenate([np.asarray(t, np.int32) for t in token_arrays])
+        n_seq = len(flat) // self.seq_len
+        if n_seq == 0:
+            return 0
+        seqs = flat[:n_seq * self.seq_len].reshape(n_seq, self.seq_len)
+        q = (np.asarray(quality, np.float32)[:n_seq] if quality is not None
+             else np.ones(n_seq, np.float32))
+        self.db.create({
+            "tokens": seqs,
+            "domain": [domain] * n_seq,
+            "quality": q,
+            "n_tokens": np.full(n_seq, self.seq_len, np.int32),
+        })
+        return n_seq
+
+    @property
+    def n_sequences(self) -> int:
+        return self.db.n_rows
+
+    # -- read --------------------------------------------------------------------
+    def read_batches(self, batch_size: int, *, dp_rank: int = 0,
+                     dp_size: int = 1, seed: int = 0, epoch: int = 0,
+                     min_quality: Optional[float] = None,
+                     domains: Optional[List[str]] = None,
+                     drop_remainder: bool = True) -> Iterator[np.ndarray]:
+        """Yield (batch_size, seq_len) int32 arrays for this data-parallel rank.
+
+        Work distribution is at row-group granularity: the global shuffled
+        row-group list is dealt round-robin to ranks; a rank that exhausts its
+        share steals from the global tail (straggler mitigation — see
+        ``sharded_loader``).
+        """
+        filters = []
+        if min_quality is not None:
+            filters.append(field("quality") >= float(min_quality))
+        if domains is not None:
+            filters.append(field("domain").isin(domains))
+        gen = self.db.read(columns=["tokens"], filters=filters or None,
+                           load_format="batches", batch_size=batch_size * 4,
+                           load_config=LoadConfig(use_threads=False))
+        buf: List[np.ndarray] = []
+        count = 0
+        rng = np.random.default_rng(seed + epoch)
+        idx = 0
+        for t in gen:
+            arr = t.column("tokens").values
+            take = arr
+            if dp_size > 1:
+                # deal rows round-robin to ranks (deterministic)
+                take = arr[dp_rank::dp_size]
+            perm = rng.permutation(len(take))
+            take = take[perm]
+            buf.append(take)
+            count += len(take)
+            idx += 1
+            while count >= batch_size:
+                merged = np.concatenate(buf)
+                yield merged[:batch_size]
+                rest = merged[batch_size:]
+                buf, count = ([rest] if len(rest) else []), len(rest)
+        if buf and not drop_remainder:
+            yield np.concatenate(buf)

@@ -1,0 +1,4 @@
+"""Distribution: logical-axis sharding rules and mesh helpers."""
+from . import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,140 @@
+"""Logical-axis sharding rules → PartitionSpec / NamedSharding.
+
+Every parameter declares logical axes (see ``repro.models.layers.P``); this
+module maps them onto the physical mesh:
+
+  vocab/heads/ffn/exp/inner → "model"   (tensor / expert parallel)
+  embed (d_model)           → "data"    (ZeRO-3/FSDP: weights gathered per
+                                         layer inside the scan — XLA SPMD
+                                         overlaps the all-gather with compute)
+  batch                     → ("pod", "data")   (pure DP across pods)
+
+Assignment is divisibility-aware with a second pass: if "model" could not be
+placed on its preferred axis (e.g. phi4's 24 heads on a 16-wide model axis),
+it stacks onto the FSDP dim instead (embed gets ("data", "model")) so the
+weights stay fully distributed rather than silently replicating.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+# primary mesh axis per logical axis
+PRIMARY = {
+    "vocab": "model", "heads": "model", "ffn": "model", "exp": "model",
+    "inner": "model", "kv": "model",
+    "embed": "data",
+    "batch": ("pod", "data"),
+    "seq": None, "hdim": None, "layers": None, "state": None,
+    "conv": None,
+}
+# fallback hosts for "model" if its primary placement failed (in priority
+# order) — e.g. phi4's 24 heads or a GQA kv=2 cache on a 16-wide model axis:
+# the model axis stacks onto the FSDP dim (weights) or the sequence dim
+# (KV caches) instead of silently replicating.
+MODEL_FALLBACK = ("embed", "ffn", "vocab", "inner", "seq")
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[a] for a in name if a in mesh.shape]))
+    return mesh.shape.get(name, 1) if hasattr(mesh.shape, "get") else mesh.shape[name]
+
+
+def _mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             mesh: Mesh) -> PS:
+    """PartitionSpec for one array; every dim divisible or left replicated."""
+    assert len(shape) == len(axes), (shape, axes)
+    names = set(_mesh_axes(mesh))
+    parts: list = [None] * len(axes)
+    used: set = set()
+
+    def fits(dim: int, mesh_axis) -> bool:
+        if isinstance(mesh_axis, tuple):
+            mesh_axis = tuple(a for a in mesh_axis if a in names)
+            if not mesh_axis:
+                return False
+            sz = int(np.prod([mesh.shape[a] for a in mesh_axis]))
+        else:
+            if mesh_axis not in names:
+                return False
+            sz = mesh.shape[mesh_axis]
+        return dim % sz == 0 and sz > 1
+
+    for i, ax in enumerate(axes):
+        pref = PRIMARY.get(ax)
+        if pref is None:
+            continue
+        if isinstance(pref, tuple):
+            avail = tuple(a for a in pref if a in names and a not in used)
+            if avail and fits(shape[i], avail):
+                parts[i] = avail if len(avail) > 1 else avail[0]
+                used.update(avail)
+        elif pref not in used and fits(shape[i], pref):
+            parts[i] = pref
+            used.add(pref)
+
+    # second pass: place an unused "model" axis onto a fallback dim
+    if "model" in names and "model" not in used:
+        for fb in MODEL_FALLBACK:
+            for i, ax in enumerate(axes):
+                if ax != fb:
+                    continue
+                cur = parts[i]
+                cur_t = (cur,) if isinstance(cur, str) else (cur or ())
+                combined = cur_t + ("model",)
+                sz = int(np.prod([mesh.shape[a] for a in combined]))
+                if shape[i] % sz == 0:
+                    parts[i] = combined if len(combined) > 1 else combined[0]
+                    used.add("model")
+                    break
+            if "model" in used:
+                break
+    return PS(*parts)
+
+
+def tree_specs(abstract_tree: Any, axes_tree: Any, mesh: Mesh) -> Any:
+    """Map (shapes, logical axes) trees -> PartitionSpec tree."""
+    leaves, treedef = jax.tree.flatten(abstract_tree)
+    axes_leaves, _ = jax.tree.flatten(
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(leaves) == len(axes_leaves), \
+        f"params/axes tree mismatch: {len(leaves)} vs {len(axes_leaves)}"
+    specs = [spec_for(l.shape, a, mesh) for l, a in zip(leaves, axes_leaves)]
+    return jax.tree.unflatten(treedef, specs)
+
+
+def tree_shardings(abstract_tree: Any, axes_tree: Any, mesh: Mesh) -> Any:
+    specs = tree_specs(abstract_tree, axes_tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, PS))
+
+
+def batch_spec(mesh: Mesh, ndim: int = 2, batch_dim: Optional[int] = None) -> PS:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if batch_dim is not None:
+        sz = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+        while axes and batch_dim % sz != 0:
+            axes = axes[:-1]     # drop trailing axis until divisible
+            sz = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    lead = axes if len(axes) > 1 else (axes[0] if axes else None)
+    return PS(lead, *([None] * (ndim - 1)))
+
+
+def batch_shardings(mesh: Mesh, specs: Dict[str, Any]) -> Dict[str, Any]:
+    """Shardings for an input-batch dict of ShapeDtypeStructs
+    (divisibility-aware: a batch of 1 stays replicated)."""
+    return {k: NamedSharding(mesh, batch_spec(mesh, len(v.shape),
+                                              batch_dim=v.shape[0]))
+            for k, v in specs.items()}
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, PS())

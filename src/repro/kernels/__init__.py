@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the TPQ decode hot path.
+
+Each kernel module holds a ``pl.pallas_call`` with explicit BlockSpec VMEM
+tiling; :mod:`.ops` has the jit'd wrappers; :mod:`.ref` the pure-jnp oracles
+the tests sweep against.
+"""
+from .ops import (bitunpack, bss_decode, decode_on_device, delta_decode,
+                  dict_decode, filter_range, page_minmax)
+
+__all__ = ["bitunpack", "bss_decode", "decode_on_device", "delta_decode",
+           "dict_decode", "filter_range", "page_minmax"]

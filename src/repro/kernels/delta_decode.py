@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: DELTA decode (zigzag + running prefix sum).
+
+The sequential dependency (a cumulative sum over the whole column) maps onto
+the TPU's *sequential grid*: each grid step computes the inclusive cumsum of
+its block in VMEM and threads the running total to the next step through an
+SMEM scratch cell — the same carry idiom TPU matmul kernels use for
+accumulators.  No second pass and no host round-trip.
+
+Input convention (matches ``repro.core.encodings._enc_delta``): ``zz`` holds
+zigzag-encoded deltas with a leading 0 slot, so ``out = first + cumsum(deltas)``
+has length n.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 2048
+
+
+def _unzigzag(u: jnp.ndarray) -> jnp.ndarray:
+    u = u.astype(jnp.uint32)
+    neg = -(u & jnp.uint32(1)).astype(jnp.int32)
+    return ((u >> jnp.uint32(1)) ^ neg.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def _delta_kernel(zz_ref, first_ref, out_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = first_ref[0]
+
+    deltas = _unzigzag(zz_ref[...])                 # (B,)
+    csum = jnp.cumsum(deltas, dtype=jnp.int32)      # in-VMEM scan
+    out_ref[...] = carry_ref[0] + csum
+    carry_ref[0] = carry_ref[0] + csum[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_decode(zz: jnp.ndarray, first: jnp.ndarray, *,
+                 interpret: bool = True) -> jnp.ndarray:
+    n = zz.shape[0]
+    if n == 0:
+        return jnp.zeros(0, jnp.int32)
+    blocks = -(-n // BLOCK)
+    zzp = jnp.pad(zz.astype(jnp.uint32), (0, blocks * BLOCK - n))
+    out = pl.pallas_call(
+        _delta_kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # scalar `first`
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((blocks * BLOCK,), jnp.int32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(zzp, first.astype(jnp.int32).reshape(1))
+    return out[:n]

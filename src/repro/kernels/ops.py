@@ -1,0 +1,85 @@
+"""Public jit'd wrappers: on-device decode of TPQ-encoded column buffers.
+
+``decode_on_device`` is the bridge between the storage layer
+(:mod:`repro.core.encodings`) and the TPU: the host hands over the *encoded*
+payload (as uint8/uint32 arrays) and the matching footer metadata; decode runs
+as Pallas kernels next to the consumer.  This is the beyond-paper
+serialization-bottleneck fix for TPU (DESIGN.md §2, §7).
+
+``interpret`` defaults to True off-TPU so the whole path validates on CPU.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import encodings as enc
+from .bitunpack import bitunpack
+from .bss_decode import bss_decode
+from .delta_decode import delta_decode
+from .dict_decode import dict_decode
+from .filter_kernel import filter_range
+from .stats_kernel import page_minmax
+
+__all__ = ["bitunpack", "bss_decode", "delta_decode", "dict_decode",
+           "filter_range", "page_minmax", "decode_on_device",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _payload_words(payload: bytes) -> jnp.ndarray:
+    pad = (-len(payload)) % 4
+    if pad:
+        payload = payload + b"\x00" * pad
+    return jnp.asarray(np.frombuffer(payload, np.uint32))
+
+
+def decode_on_device(encoding: str, meta: dict, payload: bytes, n: int,
+                     np_dtype, *, interpret: bool = True) -> jnp.ndarray:
+    """Device-side equivalent of ``encodings.decode`` for the kernelized
+    encodings (BITPACK / DICT / DELTA / BSS).  Others fall back to host decode
+    + transfer (PLAIN has nothing to decode anyway)."""
+    dt = np.dtype(np_dtype)
+    if encoding == enc.BITPACK:
+        vals = bitunpack(_payload_words(payload), n, meta["bits"],
+                         interpret=interpret)
+        if dt == np.bool_:
+            return vals.astype(jnp.bool_)
+        return (vals + jnp.int32(meta["ref"])).astype(dt) \
+            if meta["ref"] else vals.astype(dt)
+    if encoding == enc.DICT:
+        dl = meta["dict_len"]
+        dictionary = jnp.asarray(
+            np.frombuffer(payload[:dl], np.dtype(dt).newbyteorder("<")).astype(dt))
+        idx = bitunpack(_payload_words(payload[dl:]), n, meta["bits"],
+                        interpret=interpret)
+        return dict_decode(idx, dictionary, interpret=interpret)
+    if encoding == enc.DELTA:
+        # encoder stores n-1 deltas; prepend a zero slot for the kernel
+        zz = enc.unpack_bits(payload, n - 1, meta["bits"]) if n > 1 else \
+            np.zeros(0, np.uint64)
+        zz = jnp.asarray(np.concatenate([[0], zz]).astype(np.uint32))
+        return delta_decode(zz, jnp.int32(meta["first"]),
+                            interpret=interpret).astype(dt)
+    if encoding == enc.BSS and dt == np.float32:
+        planes = jnp.asarray(
+            np.frombuffer(payload, np.uint8).reshape(dt.itemsize, n))
+        return bss_decode(planes, interpret=interpret)
+    # fallback: host decode, then transfer
+    return jnp.asarray(enc.decode(encoding, meta, payload, n, dt))
+
+
+def decode_and_filter(encoding: str, meta: dict, payload: bytes, n: int,
+                      np_dtype, lo, hi, *, interpret: bool = True
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused decode -> range predicate; returns (values, mask, block_counts)."""
+    vals = decode_on_device(encoding, meta, payload, n, np_dtype,
+                            interpret=interpret)
+    mask, counts = filter_range(vals, lo, hi, interpret=interpret)
+    return vals, mask, counts

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These mirror the numpy codecs in :mod:`repro.core.encodings` but are written
+in jnp so the kernels can be validated shape-for-shape on any backend.
+"""
+from __future__ import annotations
+
+import jax.lax
+import jax.numpy as jnp
+
+
+def bitunpack(words: jnp.ndarray, n: int, k: int) -> jnp.ndarray:
+    """Unpack n k-bit values from a little-endian uint32 word stream."""
+    if k == 0:
+        return jnp.zeros(n, jnp.int32)
+    j = jnp.arange(n, dtype=jnp.uint32)
+    bit = j * jnp.uint32(k)
+    w0 = (bit >> 5).astype(jnp.int32)
+    shift = bit & jnp.uint32(31)
+    words = words.astype(jnp.uint32)
+    lo = words[w0] >> shift
+    # high part (guard shift-by-32: select, don't rely on UB)
+    w1 = jnp.minimum(w0 + 1, words.shape[0] - 1)
+    hi = jnp.where(shift == 0, jnp.uint32(0),
+                   words[w1] << (jnp.uint32(32) - shift))
+    mask = jnp.uint32((1 << k) - 1) if k < 32 else jnp.uint32(0xFFFFFFFF)
+    return ((lo | hi) & mask).astype(jnp.int32)
+
+
+def dict_decode(indices: jnp.ndarray, dictionary: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(dictionary, indices.astype(jnp.int32), axis=0)
+
+
+def unzigzag32(u: jnp.ndarray) -> jnp.ndarray:
+    u = u.astype(jnp.uint32)
+    return ((u >> jnp.uint32(1)) ^ (-(u & jnp.uint32(1)).astype(jnp.int32)).astype(jnp.uint32)).astype(jnp.int32)
+
+
+def delta_decode(zz: jnp.ndarray, first: jnp.ndarray) -> jnp.ndarray:
+    """zz: zigzag'd deltas with a leading 0 slot; out[i] = first + cumsum."""
+    deltas = unzigzag32(zz)
+    return (first.astype(jnp.int32) + jnp.cumsum(deltas, dtype=jnp.int32))
+
+
+def bss_decode(byte_planes: jnp.ndarray) -> jnp.ndarray:
+    """byte_planes: (4, n) uint8 split-stream -> float32 (n,)."""
+    b = byte_planes.astype(jnp.uint32)
+    word = b[0] | (b[1] << 8) | (b[2] << 16) | (b[3] << 24)
+    return jax.lax.bitcast_convert_type(word, jnp.float32)
+
+
+def filter_range(x: jnp.ndarray, lo, hi) -> jnp.ndarray:
+    return (x >= lo) & (x <= hi)
+
+
+def page_minmax(x: jnp.ndarray, page: int):
+    """Per-page (min, max) for n divisible by page."""
+    r = x.reshape(-1, page)
+    return r.min(axis=1), r.max(axis=1)

@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: fused per-page min/max statistics (the write path).
+
+When device-resident data is written back into the columnar store (e.g. the
+checkpoint-as-database path), page statistics have to be computed before
+encoding.  This kernel reduces each page to (min, max) in one VMEM pass —
+the footer statistics the reader later prunes on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stats_kernel(x_ref, min_ref, max_ref):
+    x = x_ref[...]
+    min_ref[0] = x.min()
+    max_ref[0] = x.max()
+
+
+@functools.partial(jax.jit, static_argnames=("page", "interpret"))
+def page_minmax(x: jnp.ndarray, page: int, *, interpret: bool = True):
+    """Per-page (min, max); n must be padded to a multiple of ``page``."""
+    n = x.shape[0]
+    pages = -(-n // page)
+    if pages * page != n:
+        # pad with the last element so stats are unaffected
+        x = jnp.concatenate([x, jnp.full(pages * page - n, x[-1], x.dtype)])
+    mins, maxs = pl.pallas_call(
+        _stats_kernel,
+        grid=(pages,),
+        in_specs=[pl.BlockSpec((page,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((1,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((pages,), x.dtype),
+                   jax.ShapeDtypeStruct((pages,), x.dtype)],
+        interpret=interpret,
+    )(x)
+    return mins, maxs

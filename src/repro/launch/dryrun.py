@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, WITHOUT allocating any real tensors:
+  * compiled.memory_analysis()  — per-device footprint (proves it fits),
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective bytes parsed from the post-SPMD HLO text,
+and appends a JSON record under benchmarks/dryrun_results/ that
+``launch/roofline.py`` aggregates into EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from ..configs import registry
+from ..models import Model
+from ..train import optimizer as opt
+from ..train.train_step import build_serve_step, build_train_step
+from .mesh import make_production_mesh
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective operand bytes, summed per op kind.
+
+    Operates on post-SPMD HLO: shapes are per-device.  For each collective
+    instruction line, the first shape is the result; subsequent shapes are
+    operands — we sum operand bytes (the §Roofline recipe).
+    """
+    out: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "= " not in line:
+            continue
+        kind = m.group(1)
+        shapes = _SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        rhs = line.split("= ", 1)[1]
+        shapes_rhs = _SHAPE_RE.findall(rhs)
+        # result shape(s) come before the op name; operands after the '('
+        paren = rhs.find("(")
+        operand_shapes = _SHAPE_RE.findall(rhs[paren:]) if paren >= 0 else []
+        if not operand_shapes:
+            operand_shapes = shapes_rhs[1:] or shapes_rhs
+        b = sum(_shape_bytes(d, s) for d, s in operand_shapes)
+        out[kind] = out.get(kind, 0) + b
+        count[kind] = count.get(kind, 0) + 1
+    out["total_bytes"] = sum(v for k, v in out.items())
+    out["counts"] = count
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               microbatches: int = 1, verbose: bool = True,
+               overrides: Optional[Dict] = None,
+               grad_dtype: str = "float32") -> Dict:
+    import dataclasses as _dc
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = registry.get(arch)
+    if overrides:
+        cfg = _dc.replace(cfg, **overrides)
+    model = Model(cfg)
+    shape = registry.SHAPES[shape_name]
+    t0 = time.time()
+
+    if shape.kind == "train":
+        _, jit_step, shards = build_train_step(
+            model, mesh, opt.OptConfig(grad_dtype=grad_dtype),
+            microbatches=microbatches)
+        specs = model.input_specs(shape.global_batch, shape.seq_len)
+        abs_params = model.init_abstract()
+        abs_opt = jax.eval_shape(opt.init_opt_state, abs_params)
+        lowered = jit_step(specs).lower(abs_params, abs_opt, specs)
+    elif shape.kind == "prefill":
+        jit_serve, jit_prefill, _ = build_serve_step(model, mesh)
+        specs = model.input_specs(shape.global_batch, shape.seq_len)
+        abs_params = _bf16(model.init_abstract())
+        fn = jit_prefill(specs, cache_len=shape.seq_len)
+        lowered = fn.lower(abs_params, specs)
+    else:  # decode: one new token against a seq_len-deep cache
+        jit_serve, _, _ = build_serve_step(model, mesh)
+        fn, c_shard = jit_serve(shape.global_batch, shape.seq_len)
+        abs_params = _bf16(model.init_abstract())
+        cache_abs = model.cache_abstract(shape.global_batch, shape.seq_len)
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jax.numpy.int32)
+        pos = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        lowered = fn.lower(abs_params, cache_abs, tok, pos)
+    t_lower = time.time() - t0
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+
+    cost = dict(compiled.cost_analysis())
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # loop-aware analysis (XLA's aggregate counts scan bodies once — see
+    # hlo_cost.py calibration); these are the roofline inputs.
+    from .hlo_cost import analyze_hlo
+    la = analyze_hlo(hlo)
+    coll = la["collective_bytes"]
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "flops_per_device": la["flops"],
+        "bytes_per_device": la["memory_bytes"],
+        "collectives": coll,
+        "xla_raw": {"flops": cost.get("flops", 0.0),
+                    "bytes": cost.get("bytes accessed", 0.0),
+                    "collective_bytes":
+                        collective_stats(hlo).get("total_bytes", 0.0)},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "model": {
+            "total_params": cfg.total_params_estimate(),
+            "active_params": cfg.active_params_estimate(),
+        },
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    if verbose:
+        print(f"[{rec['mesh']}] {arch} × {shape_name}: "
+              f"compile {t_compile:.1f}s  "
+              f"flops/dev {rec['flops_per_device']:.3e}  "
+              f"bytes/dev {rec['bytes_per_device']:.3e}  "
+              f"coll/dev {coll.get('total_bytes', 0):.3e}B")
+        print("  memory_analysis:", rec["memory"])
+    return rec
+
+
+def _bf16(tree):
+    import jax.numpy as jnp
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if s.dtype == jnp.float32 else s, tree)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="architecture id")
+    ap.add_argument("--shape", default=None, choices=list(registry.SHAPES))
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default="benchmarks/dryrun_results")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose result JSON already exists")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override, e.g. --set attn_scores_bf16=1")
+    ap.add_argument("--grad-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    ap.add_argument("--tag", default="", help="suffix for result filenames")
+    args = ap.parse_args(argv)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = (v in ("1", "true", "True")) if v in (
+            "0", "1", "true", "false", "True", "False") else (
+            int(v) if v.isdigit() else v)
+
+    cells = []
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    if args.all:
+        for a in registry.ARCH_NAMES:
+            for s in registry.cells_for(a):
+                cells.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi_pod in meshes:
+        tag = "2x16x16" if multi_pod else "16x16"
+        for arch, shape in cells:
+            fname = f"{tag}_{arch}_{shape}"
+            if args.tag:
+                fname += f"_{args.tag}"
+            path = os.path.join(args.out, fname + ".json")
+            if args.resume and os.path.exists(path):
+                print(f"skip (exists): {tag} {arch} {shape}")
+                continue
+            try:
+                rec = lower_cell(arch, shape, multi_pod=multi_pod,
+                                 microbatches=args.microbatches,
+                                 overrides=overrides,
+                                 grad_dtype=args.grad_dtype)
+                rec["tag"] = args.tag
+                rec["overrides"] = {**overrides,
+                                    "grad_dtype": args.grad_dtype,
+                                    "microbatches": args.microbatches}
+                with open(path, "w") as fh:
+                    json.dump(rec, fh, indent=1)
+            except Exception as e:  # a failing cell is a bug — surface it
+                failures.append((tag, arch, shape, repr(e)))
+                print(f"FAIL {tag} {arch} {shape}: {e!r}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print("\nall requested cells lowered+compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,266 @@
+"""Loop-aware cost analysis over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts a while-loop body
+ONCE — a 64-layer ``lax.scan`` is undercounted 64×, for flops, bytes AND the
+collectives inside the loop (verified by calibration: a lax.scan of 10
+matmuls reports 1 matmul).  This module re-derives the three roofline inputs
+from the compiled HLO text with loop multipliers:
+
+  * flops        — 2·prod(out)·prod(contracted) per dot, ×∏(enclosing trip
+                   counts); fusion-internal dots included;
+  * memory bytes — per-instruction operand+output bytes at fusion granularity
+                   (fusion internals don't touch HBM), ×trip counts;
+  * collective bytes — operand bytes of all-gather / all-reduce /
+                   reduce-scatter / all-to-all / collective-permute,
+                   ×trip counts, split per op kind.
+
+Trip counts come from the ``known_trip_count`` backend_config XLA attaches to
+rolled loops.  Shapes are per-device in post-SPMD HLO, so every number is
+per-device.  Elementwise flops are ignored (dots dominate every cell here);
+the roofline notes call this out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+                "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z0-9]*)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*?)\s([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"(?:true_computation|false_computation|branch_computations=\{[^}]*)=?%?([\w\.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_BYTES_OPS = {"tuple", "get-tuple-element", "parameter", "constant",
+                   "bitcast", "copy", "copy-start", "copy-done", "after-all",
+                   "iota", "while", "conditional", "call"}
+
+
+def _shape_list_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    result_type: str
+    out_bytes: int
+    operands: List[str]
+    flops: float = 0.0
+    trip: int = 1
+    called: List[str] = dataclasses.field(default_factory=list)
+    fusion_called: List[str] = dataclasses.field(default_factory=list)
+    collective: Optional[str] = None
+
+
+class HLOModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.shapes: Dict[Tuple[str, str], str] = {}
+        self.fusion_targets: Set[str] = set()
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._compute_dot_flops()
+
+    # -- parsing ---------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            # computation definitions start at column 0 and end with '{';
+            # instruction lines are indented.  (Signatures may contain
+            # '/*index=N*/' comments, so don't key off '='.)
+            if line and not raw.startswith(" ") and line.endswith("{") \
+                    and "->" in line:
+                mname = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*[\s(]", line)
+                if mname:
+                    cur = mname.group(1)
+                    self.computations[cur] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if cur is None:
+                continue
+            mi = _INSTR_RE.match(line)
+            if not mi:
+                continue
+            name, result_type, opcode = mi.groups()
+            # operand region: inside the first balanced paren group after opcode
+            paren = line.find(opcode + "(") + len(opcode)
+            depth, j = 0, paren
+            for j in range(paren, len(line)):
+                if line[j] == "(":
+                    depth += 1
+                elif line[j] == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            operand_str = line[paren:j + 1]
+            attrs = line[j + 1:]
+            operands = _OPERAND_RE.findall(operand_str)
+            ins = Instr(name=name, opcode=opcode, result_type=result_type,
+                        out_bytes=_shape_list_bytes(result_type),
+                        operands=operands)
+            if opcode == "while":
+                mt = _TRIP_RE.search(attrs)
+                ins.trip = int(mt.group(1)) if mt else 1
+                mb, mcnd = _BODY_RE.search(attrs), _COND_RE.search(attrs)
+                ins.called = [m.group(1) for m in (mb, mcnd) if m]
+            elif opcode == "fusion":
+                mcall = _CALLS_RE.search(attrs)
+                if mcall:
+                    ins.fusion_called = [mcall.group(1)]
+                    self.fusion_targets.add(mcall.group(1))
+            elif opcode in ("call", "async-start", "custom-call"):
+                mcall = _CALLS_RE.search(attrs)
+                if mcall:
+                    ins.called = [mcall.group(1)]
+            elif opcode == "conditional":
+                ins.called = _BRANCH_RE.findall(attrs)
+            base = opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not opcode.endswith("-done"):
+                ins.collective = base
+            if opcode in ("dot", "convolution"):
+                mlhs = _LHS_C_RE.search(attrs)
+                ins.called = []
+                ins._lhs_contract = ([int(x) for x in mlhs.group(1).split(",")
+                                      if x] if mlhs else [])
+            self.computations[cur].append(ins)
+            self.shapes[(cur, name)] = result_type
+
+    def _compute_dot_flops(self) -> None:
+        for comp, instrs in self.computations.items():
+            for ins in instrs:
+                if ins.opcode not in ("dot", "convolution"):
+                    continue
+                out_dims = _first_shape_dims(ins.result_type) or []
+                out_elems = 1
+                for d in out_dims:
+                    out_elems *= d
+                contract = 1
+                lhs = ins.operands[0] if ins.operands else None
+                lhs_type = self.shapes.get((comp, lhs), "") if lhs else ""
+                lhs_dims = _first_shape_dims(lhs_type) or []
+                for i in getattr(ins, "_lhs_contract", []):
+                    if i < len(lhs_dims):
+                        contract *= lhs_dims[i]
+                ins.flops = 2.0 * out_elems * max(contract, 1)
+
+    # -- walking ------------------------------------------------------------------
+    def analyze(self, top_n: int = 0) -> Dict:
+        flops = 0.0
+        mem_bytes = 0.0
+        coll: Dict[str, float] = {}
+        coll_count: Dict[str, int] = {}
+        contributors: List[Tuple[float, str, str, str]] = []
+
+        def op_bytes(comp: str, ins: Instr) -> float:
+            if ins.opcode in _SKIP_BYTES_OPS:
+                return 0.0
+            # aliasing/windowed ops: traffic is the window, not the buffer.
+            # (a scan's residual stack is updated in place every iteration —
+            # counting the whole buffer per step overestimates 100x)
+            if ins.opcode == "dynamic-update-slice":
+                upd = (self.shapes.get((comp, ins.operands[1]), "")
+                       if len(ins.operands) > 1 else "")
+                return 2.0 * _shape_list_bytes(upd)
+            if ins.opcode in ("dynamic-slice", "gather", "slice"):
+                return 2.0 * float(ins.out_bytes)
+            if ins.opcode == "scatter":
+                upd = (self.shapes.get((comp, ins.operands[-1]), "")
+                       if ins.operands else "")
+                return 2.0 * _shape_list_bytes(upd)
+            total = float(ins.out_bytes)
+            skip_alias = None
+            if ins.opcode == "fusion" and ins.fusion_called:
+                # loop fusion around an in-place dynamic-update-slice: the
+                # full-buffer operand is aliased with the output — its bytes
+                # are not traffic; count the update window via out_bytes only
+                inner = self.computations.get(ins.fusion_called[0], [])
+                if any(x.opcode == "dynamic-update-slice" for x in inner):
+                    for o in ins.operands:
+                        t = self.shapes.get((comp, o), "")
+                        if t and _shape_list_bytes(t) == ins.out_bytes:
+                            skip_alias = o
+                            total = 0.0  # output aliased too
+                            break
+            for o in ins.operands:
+                if o == skip_alias:
+                    continue
+                t = self.shapes.get((comp, o))
+                if t:
+                    total += _shape_list_bytes(t)
+            return total
+
+        def walk(comp: str, mult: float, in_fusion: bool, depth: int = 0):
+            nonlocal flops, mem_bytes
+            if depth > 50 or comp not in self.computations:
+                return
+            for ins in self.computations[comp]:
+                flops += ins.flops * mult
+                if not in_fusion:
+                    b = op_bytes(comp, ins) * mult
+                    mem_bytes += b
+                    if top_n and b > 0:
+                        contributors.append(
+                            (b, ins.opcode, ins.result_type[:70],
+                             f"x{mult:.0f}"))
+                    if ins.collective:
+                        cb = sum(_shape_list_bytes(self.shapes.get((comp, o), ""))
+                                 for o in ins.operands)
+                        if cb == 0:
+                            cb = ins.out_bytes
+                        coll[ins.collective] = coll.get(ins.collective, 0) + cb * mult
+                        coll_count[ins.collective] = \
+                            coll_count.get(ins.collective, 0) + 1
+                for f in ins.fusion_called:
+                    walk(f, mult, True, depth + 1)
+                for c in ins.called:
+                    walk(c, mult * ins.trip, in_fusion, depth + 1)
+
+        if self.entry:
+            walk(self.entry, 1.0, False)
+        out = {
+            "flops": flops,
+            "memory_bytes": mem_bytes,
+            "collective_bytes": {**coll, "total_bytes": sum(coll.values()),
+                                 "counts": coll_count},
+        }
+        if top_n:
+            contributors.sort(reverse=True)
+            out["top_bytes"] = contributors[:top_n]
+        return out
+
+
+def analyze_hlo(text: str) -> Dict:
+    return HLOModule(text).analyze()

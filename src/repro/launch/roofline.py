@@ -1,0 +1,146 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, from the JSON records dryrun.py wrote:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s          (197 TF bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw               (819 GB/s)
+  collective term = collective_bytes_per_device / link_bw       (~50 GB/s)
+
+(cost_analysis numbers are already per-device on a post-SPMD module, so the
+"/chips" in the spec formulas is baked in.)  Also reports MODEL_FLOPS = 6·N·D
+(N = active params for MoE) and the usefulness ratio
+MODEL_FLOPS / (HLO_FLOPs × chips) — remat/redundancy waste shows up here.
+
+Usage: python -m repro.launch.roofline [--dir benchmarks/dryrun_results]
+           [--format md|csv] [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def tokens_of(rec: Dict) -> float:
+    if rec["kind"] == "train":
+        return rec["global_batch"] * rec["seq_len"]
+    if rec["kind"] == "prefill":
+        return rec["global_batch"] * rec["seq_len"]
+    return rec["global_batch"] * 1.0   # decode: one token per sequence
+
+
+def analyze(rec: Dict) -> Dict:
+    flops = rec["flops_per_device"]
+    bytes_ = rec["bytes_per_device"]
+    coll = rec["collectives"].get("total_bytes", 0.0)
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    n_active = rec["model"]["active_params"]
+    d_tokens = tokens_of(rec)
+    model_flops = 6.0 * n_active * d_tokens
+    if rec["kind"] != "train":
+        model_flops /= 3.0             # forward only: 2·N·D
+    hlo_total = flops * rec["n_devices"]
+    useful = model_flops / hlo_total if hlo_total else 0.0
+    bound = terms[dominant]
+    mfu_bound = (model_flops / rec["n_devices"] / PEAK_FLOPS_BF16) / bound \
+        if bound else 0.0
+    return {**rec, "t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dominant,
+            "model_flops": model_flops, "useful_ratio": useful,
+            "roofline_fraction": min(mfu_bound, 1.0)}
+
+
+def load(dirpath: str, mesh: str = None) -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as fh:
+            rec = json.load(fh)
+        if mesh and rec["mesh"] != mesh:
+            continue
+        recs.append(analyze(rec))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def table(recs: List[Dict], fmt: str = "md") -> str:
+    hdr = ["mesh", "arch", "shape", "t_compute", "t_memory", "t_collective",
+           "dominant", "useful", "roofline_frac"]
+    rows = []
+    for r in recs:
+        rows.append([r["mesh"], r["arch"], r["shape"],
+                     fmt_s(r["t_compute"]), fmt_s(r["t_memory"]),
+                     fmt_s(r["t_collective"]), r["dominant"],
+                     f"{r['useful_ratio']:.2f}",
+                     f"{r['roofline_fraction']:.3f}"])
+    if fmt == "csv":
+        return "\n".join(",".join(h for h in hdr) + "\n" if i == 0 else
+                         ",".join(row) for i, row in enumerate([hdr] + rows))
+    w = [max(len(str(r[i])) for r in [hdr] + rows) for i in range(len(hdr))]
+    lines = ["| " + " | ".join(str(h).ljust(w[i]) for i, h in enumerate(hdr)) + " |",
+             "|" + "|".join("-" * (w[i] + 2) for i in range(len(hdr))) + "|"]
+    for row in rows:
+        lines.append("| " + " | ".join(str(c).ljust(w[i])
+                                       for i, c in enumerate(row)) + " |")
+    return "\n".join(lines)
+
+
+def compare_table(base_dir: str, opt_dir: str, mesh: str = "16x16") -> str:
+    """Baseline vs optimized: per-cell term ratios (baseline / optimized)."""
+    base = {(r["arch"], r["shape"]): r for r in load(base_dir, mesh)}
+    opt = {(r["arch"], r["shape"]): r for r in load(opt_dir, mesh)}
+    lines = ["| arch × shape | mem base | mem opt | ×mem | ×flops | ×coll | dominant (opt) |",
+             "|---|---|---|---|---|---|---|"]
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+
+        def ratio(a, c):
+            return a / c if c else float("inf")
+        lines.append(
+            f"| {key[0]} × {key[1]} | {fmt_s(b['t_memory'])} | "
+            f"{fmt_s(o['t_memory'])} | "
+            f"{ratio(b['bytes_per_device'], o['bytes_per_device']):.1f} | "
+            f"{ratio(b['flops_per_device'], o['flops_per_device']):.1f} | "
+            f"{ratio(b['collectives'].get('total_bytes', 0), o['collectives'].get('total_bytes', 1)):.1f} | "
+            f"{o['dominant']} |")
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/dryrun_results")
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--format", default="md", choices=["md", "csv"])
+    ap.add_argument("--compare", default=None,
+                    help="optimized-results dir: print baseline-vs-opt ratios")
+    args = ap.parse_args(argv)
+    if args.compare:
+        print(compare_table(args.dir, args.compare, args.mesh or "16x16"))
+        return 0
+    recs = load(args.dir, args.mesh)
+    if not recs:
+        print("no dry-run records found — run repro.launch.dryrun first")
+        return 1
+    print(table(recs, args.format))
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,5 @@
+"""Model stack: configs + unified Model facade over all assigned families."""
+from .config import AttnCfg, ModelConfig, MoECfg, SSMCfg
+from .model import Model
+
+__all__ = ["AttnCfg", "ModelConfig", "MoECfg", "SSMCfg", "Model"]

@@ -1,0 +1,259 @@
+"""GQA attention: blockwise (flash-style) training path + KV-cache decode.
+
+The training/prefill path never materializes the (S, S) score matrix: KV is
+scanned block-by-block with an online-softmax carry (m, l, acc), so peak
+activation memory is O(S·block_kv) per head — this is what lets the 32k
+prefill shapes fit HBM in the dry run.  Causal and sliding-window masks are
+applied per block.  GQA is computed in grouped form (B, KH, G, ...) so the
+KV tensors are never broadcast to n_heads.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import AttnCfg, ModelConfig
+from .layers import P, apply_rope, rope
+
+NEG_INF = -1e30
+
+
+def attn_spec(cfg: ModelConfig) -> Dict[str, P]:
+    a, d = cfg.attn, cfg.d_model
+    spec = {
+        "wq": P((d, a.n_heads, a.head_dim), ("embed", "heads", "hdim")),
+        "wk": P((d, a.n_kv_heads, a.head_dim), ("embed", "kv", "hdim")),
+        "wv": P((d, a.n_kv_heads, a.head_dim), ("embed", "kv", "hdim")),
+        "wo": P((a.n_heads, a.head_dim, d), ("heads", "hdim", "embed"),
+                scale=0.02 / 2),
+    }
+    if a.qkv_bias:
+        spec["bq"] = P((a.n_heads, a.head_dim), ("heads", "hdim"), init="zeros")
+        spec["bk"] = P((a.n_kv_heads, a.head_dim), ("kv", "hdim"), init="zeros")
+        spec["bv"] = P((a.n_kv_heads, a.head_dim), ("kv", "hdim"), init="zeros")
+    if a.qk_norm:
+        spec["q_norm"] = P((a.head_dim,), ("hdim",), init="ones")
+        spec["k_norm"] = P((a.head_dim,), ("hdim",), init="ones")
+    return spec
+
+
+def _rms(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def project_qkv(p: Dict, x: jnp.ndarray, a: AttnCfg,
+                positions: Optional[jnp.ndarray]) -> Tuple[jnp.ndarray, ...]:
+    """x (B,S,d) -> q (B,S,H,dh), k/v (B,S,KH,dh) with bias/qk-norm/rope."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if a.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if a.qk_norm:
+        q = _rms(q, p["q_norm"])
+        k = _rms(k, p["k_norm"])
+    if positions is not None:
+        cos, sin = rope(positions, a.head_dim, a.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        pos_q: jnp.ndarray, pos_kv: jnp.ndarray,
+                        *, causal: bool = True,
+                        window: Optional[int] = None,
+                        block_kv: int = 1024,
+                        scores_bf16: bool = False) -> jnp.ndarray:
+    """Online-softmax attention over KV blocks.
+
+    q (B,Sq,H,dh); k,v (B,Skv,KH,dh); pos_* absolute positions (Sq,)/(Skv,).
+    ``scores_bf16`` (§Perf) keeps the S²-sized score/prob tensors in bf16
+    while the softmax statistics (m, l) and the accumulator stay f32.
+    Returns (B,Sq,H,dh).
+    """
+    B, Sq, H, dh = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    qf = (q * (dh ** -0.5)).reshape(B, Sq, KH, G, dh)
+    s_dtype = jnp.bfloat16 if scores_bf16 else jnp.float32
+    s_neg = jnp.asarray(NEG_INF, s_dtype)   # -1e30 is representable in bf16
+
+    nb = -(-Skv // block_kv)
+    pad = nb * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_kv = jnp.pad(pos_kv, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    kb = k.reshape(B, nb, block_kv, KH, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, block_kv, KH, dh).transpose(1, 0, 2, 3, 4)
+    pb = pos_kv.reshape(nb, block_kv)
+
+    m0 = jnp.full((B, KH, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, KH, G, Sq, dh), jnp.float32)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kj, vj, pj = blk
+        # the dot emits bf16 (inputs are bf16); only the baseline pays for an
+        # f32 copy of the S²-sized tensor
+        s = jnp.einsum("bqkgd,bpkd->bkgqp", qf, kj).astype(s_dtype)
+        mask = jnp.ones((Sq, block_kv), bool)
+        if causal:
+            mask &= pj[None, :] <= pos_q[:, None]
+        else:
+            mask &= (pj[None, :] < jnp.iinfo(jnp.int32).max)
+        if window is not None:
+            mask &= pj[None, :] > pos_q[:, None] - window
+        s = jnp.where(mask[None, None, None], s, s_neg)
+        m_new = jnp.maximum(m, s.max(axis=-1).astype(jnp.float32))
+        # exp stays in s_dtype; reductions accumulate in f32 WITHOUT
+        # materializing an f32 copy (dtype= / preferred_element_type=)
+        p = jnp.exp(s - m_new[..., None].astype(s_dtype))
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, dtype=jnp.float32)
+        pv = jnp.einsum("bkgqp,bpkd->bkgqd", p.astype(vj.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def _maybe_shard_q(q: jnp.ndarray, cfg: ModelConfig, mesh):
+    """§Perf: when heads don't divide the model axis (phi4: 24 vs 16) the
+    S²-score compute replicates over "model"; shard the *query-sequence* dim
+    there instead (each q row's softmax is independent, KV stays as-is)."""
+    if not cfg.attn_batch_shard or mesh is None:
+        return q
+    if q.shape[1] % mesh.shape["model"]:
+        return q
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    batch = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    spec = PS(batch if len(batch) > 1 else batch[0], "model", None, None)
+    return jax.lax.with_sharding_constraint(q, NamedSharding(mesh, spec))
+
+
+def attn_train(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+               positions: jnp.ndarray, *, causal: bool = True,
+               mesh=None) -> jnp.ndarray:
+    a = cfg.attn
+    q, k, v = project_qkv(p, x, a, positions)
+    if cfg.shard_activations:
+        from .act_sharding import constrain
+        q = constrain(q, mesh, ("batch", None, "model", None))
+        k = constrain(k, mesh, ("batch", None, "model", None))
+        v = constrain(v, mesh, ("batch", None, "model", None))
+    q = _maybe_shard_q(q, cfg, mesh)
+    out = blockwise_attention(q, k, v, positions, positions, causal=causal,
+                              window=a.window, block_kv=cfg.attn_block_kv,
+                              scores_bf16=cfg.attn_scores_bf16)
+    if cfg.shard_activations:
+        out = constrain(out, mesh, ("batch", None, "model", None))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def cross_attn_train(p: Dict, x: jnp.ndarray, enc: jnp.ndarray,
+                     cfg: ModelConfig, mesh=None) -> jnp.ndarray:
+    """Decoder cross-attention: kv from encoder output, no mask, no rope."""
+    a = cfg.attn
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", enc.astype(dt), p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc.astype(dt), p["wv"].astype(dt))
+    if cfg.shard_activations:
+        from .act_sharding import constrain
+        q = constrain(q, mesh, ("batch", None, "model", None))
+        k = constrain(k, mesh, ("batch", None, "model", None))
+        v = constrain(v, mesh, ("batch", None, "model", None))
+    pos_kv = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    pos_q = jnp.arange(x.shape[1], dtype=jnp.int32)
+    out = blockwise_attention(q, k, v, pos_q, pos_kv, causal=False,
+                              block_kv=cfg.attn_block_kv,
+                              scores_bf16=cfg.attn_scores_bf16)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# decode with KV cache
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  n_layers: int, dtype=jnp.bfloat16):
+    a = cfg.attn
+    size = min(max_seq, a.window) if a.window else max_seq
+    shape = (n_layers, batch, size, a.n_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_axes(_: ModelConfig):
+    ax = ("layers", "batch", "seq", "kv", "hdim")
+    return {"k": ax, "v": ax}
+
+
+def attn_decode(p: Dict, x: jnp.ndarray, k_cache: jnp.ndarray,
+                v_cache: jnp.ndarray, pos, cfg: ModelConfig
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token step.  x (B,1,d); k/v_cache (B,C,KH,dh).
+
+    ``pos`` is scalar int32 (synchronized decode — the dry-run/benchmark path,
+    lowers to dynamic_update_slice) or (B,) int32 (per-slot positions for the
+    continuous-batching engine, lowers to a batched scatter).
+
+    For sliding-window attention the cache is a ring buffer of size window
+    (write slot = pos % window); otherwise the cache is the full context.
+    Returns (y (B,1,d), new_k, new_v).
+    """
+    a = cfg.attn
+    pos = jnp.asarray(pos, jnp.int32)
+    B = x.shape[0]
+    rope_pos = (jnp.full((1,), pos, jnp.int32) if pos.ndim == 0
+                else pos[:, None])
+    q, k_new, v_new = project_qkv(p, x, a, rope_pos)
+    C = k_cache.shape[1]
+    idx = jnp.arange(C, dtype=jnp.int32)
+    if pos.ndim == 0:
+        slot = (pos % C) if a.window else pos
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k_new.astype(k_cache.dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v_new.astype(v_cache.dtype), (0, slot, 0, 0))
+        if a.window:
+            age = (slot - idx) % C                 # 0 = current token
+            valid = (age < jnp.minimum(pos + 1, C))[None]
+        else:
+            valid = (idx <= pos)[None]             # (1, C) broadcasts over B
+    else:
+        slot = (pos % C) if a.window else pos      # (B,)
+        barange = jnp.arange(B)
+        k_cache = k_cache.at[barange, slot].set(
+            k_new[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[barange, slot].set(
+            v_new[:, 0].astype(v_cache.dtype))
+        if a.window:
+            age = (slot[:, None] - idx[None, :]) % C
+            valid = age < jnp.minimum(pos + 1, C)[:, None]
+        else:
+            valid = idx[None, :] <= pos[:, None]   # (B, C)
+
+    _, _, H, dh = q.shape
+    KH = a.n_kv_heads
+    G = H // KH
+    qf = (q * (dh ** -0.5)).reshape(B, KH, G, dh)
+    s = jnp.einsum("bkgd,bckd->bkgc", qf,
+                   k_cache.astype(q.dtype)).astype(jnp.float32)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", w.astype(v_cache.dtype),
+                     v_cache).reshape(B, 1, H, dh).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, k_cache, v_cache

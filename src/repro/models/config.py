@@ -1,0 +1,143 @@
+"""Model configuration dataclasses for all assigned architecture families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    window: Optional[int] = None       # sliding-window attention (danube)
+    rope_theta: float = 10_000.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMCfg:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 1
+    chunk: int = 256                    # SSD chunk length
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+@dataclasses.dataclass(frozen=True)
+class MoECfg:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    shared_ff: int = 0                  # shared-expert FFN width (0 = none)
+    every_k_layers: int = 1             # 2 = MoE every other layer (llama4)
+    first_dense: int = 0                # N leading dense layers (moonshot)
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3
+    aux_coef: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                         # dense|ssm|hybrid|moe|encdec|vlm
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    attn: Optional[AttnCfg] = None
+    ssm: Optional[SSMCfg] = None
+    moe: Optional[MoECfg] = None
+    # hybrid (zamba2): one *shared* attention block applied every k SSM layers
+    hybrid_share_period: int = 6
+    # encoder-decoder (seamless)
+    enc_layers: int = 0
+    src_seq: int = 1024                 # precomputed frontend frames (stub)
+    # vlm (pixtral): patch embeddings prepended to the text stream
+    frontend: Optional[str] = None      # None|"audio"|"vision"
+    frontend_seq: int = 0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # attention is computed blockwise (flash-style online softmax)
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+    remat: bool = True
+    # ---- §Perf hillclimb knobs (OFF = paper-faithful baseline) ----
+    # store attention scores/probs in bf16 (softmax stats stay f32): halves
+    # the dominant S² HBM traffic
+    attn_scores_bf16: bool = False
+    # shard attention activations over ("data","model") on batch when heads
+    # don't divide the model axis (phi4: 24 heads vs 16) — trades one
+    # activation reshard for 16x less replicated S² traffic
+    attn_batch_shard: bool = False
+    # pin block-boundary activation shardings (batch->(pod,data),
+    # heads->model): stops GSPMD replicating S² score tensors when the GQA
+    # kv dim offers no shardable axis
+    shard_activations: bool = False
+    # rms_norm: f32-accumulated variance + bf16 multiply (no f32 (B,S,d)
+    # materialization — 6 of them per layer dominate the memory term)
+    rmsnorm_bf16: bool = False
+    # long-context capability: True for SSM / hybrid / SWA archs
+    supports_long_context: bool = False
+    # encoder-only models have no decode step
+    supports_decode: bool = True
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def active_params_estimate(self) -> int:
+        """~N for 6·N·D roofline math (MoE: active-expert share only)."""
+        d, v, L = self.d_model, self.vocab, self.n_layers
+        total = 2 * v * d  # embed + head
+        if self.family in ("ssm",):
+            per = self._ssm_layer_params(d)
+            return total + L * per
+        if self.family == "hybrid":
+            per = self._ssm_layer_params(d)
+            shared = self._attn_layer_params(d) + 3 * d * self.d_ff
+            return total + L * per + shared
+        attn = self._attn_layer_params(d) if self.attn else 0
+        if self.moe:
+            m = self.moe
+            n_moe = (L - m.first_dense) // m.every_k_layers
+            n_dense = L - n_moe
+            dense_ff = 3 * d * self.d_ff
+            act_ff = 3 * d * m.d_ff_expert * m.top_k + 3 * d * m.shared_ff \
+                + d * m.num_experts
+            return total + L * attn + n_dense * dense_ff + n_moe * act_ff
+        ff = 3 * d * self.d_ff
+        enc = self.enc_layers * (self._attn_layer_params(d) + ff)
+        cross = self.enc_layers and L * self._attn_layer_params(d)  # decoder cross-attn
+        return total + L * (attn + ff) + enc + (cross or 0)
+
+    def total_params_estimate(self) -> int:
+        if not self.moe:
+            return self.active_params_estimate()
+        d, L, m = self.d_model, self.n_layers, self.moe
+        n_moe = (L - m.first_dense) // m.every_k_layers
+        n_dense = L - n_moe
+        attn = self._attn_layer_params(d)
+        return (2 * self.vocab * d + L * attn + n_dense * 3 * d * self.d_ff
+                + n_moe * (3 * d * m.d_ff_expert * m.num_experts
+                           + 3 * d * m.shared_ff + d * m.num_experts))
+
+    def _attn_layer_params(self, d: int) -> int:
+        a = self.attn
+        if a is None:
+            return 0
+        return d * a.head_dim * (a.n_heads * 2 + a.n_kv_heads * 2)
+
+    def _ssm_layer_params(self, d: int) -> int:
+        s = self.ssm
+        di = s.d_inner(d)
+        return d * di * 2 + 2 * d * s.ngroups * s.d_state + d * s.n_heads(d) \
+            + di * d

@@ -1,0 +1,203 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The modality frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, S_src, D) straight into the encoder.  The
+decoder is a standard causal transformer with per-layer cross-attention to the
+encoder output; decode caches both the self-attention KV ring and the
+(position-independent) cross KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attn_decode, attn_spec, attn_train, blockwise_attention,
+                        cross_attn_train, project_qkv)
+from .config import ModelConfig
+from .layers import P, Params, axes_tree, init_tree, mlp_spec, rms_norm, \
+    stack_axes, stack_init, swiglu
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def enc_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"ln1": P((d,), ("embed",), init="ones"),
+            "attn": attn_spec(cfg),
+            "ln2": P((d,), ("embed",), init="ones"),
+            "mlp": mlp_spec(d, cfg.d_ff)}
+
+
+def dec_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"ln1": P((d,), ("embed",), init="ones"),
+            "attn": attn_spec(cfg),
+            "lnx": P((d,), ("embed",), init="ones"),
+            "xattn": attn_spec(cfg),
+            "ln2": P((d,), ("embed",), init="ones"),
+            "mlp": mlp_spec(d, cfg.d_ff)}
+
+
+def _outer_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab
+    return {"embed": {"table": P((v, d), ("vocab", "embed"), scale=1.0)},
+            "enc_norm": P((d,), ("embed",), init="ones"),
+            "final_norm": P((d,), ("embed",), init="ones"),
+            "head": {"w": P((d, v), ("embed", "vocab"))}}
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    r0, r1, r2 = jax.random.split(rng, 3)
+    params = init_tree(r0, _outer_spec(cfg))
+    params["encoder"] = stack_init(r1, enc_block_spec(cfg), cfg.enc_layers)
+    params["decoder"] = stack_init(r2, dec_block_spec(cfg), cfg.n_layers)
+    return params
+
+
+def params_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    axes = axes_tree(_outer_spec(cfg))
+    axes["encoder"] = stack_axes(enc_block_spec(cfg))
+    axes["decoder"] = stack_axes(dec_block_spec(cfg))
+    return axes
+
+
+def encode(params: Params, cfg: ModelConfig, src: jnp.ndarray,
+           mesh=None) -> jnp.ndarray:
+    """src (B, S_src, D) precomputed frontend embeddings -> encoder states."""
+    x = src.astype(COMPUTE_DTYPE)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(h, p):
+        if cfg.shard_activations:
+            from .act_sharding import constrain
+            h = constrain(h, mesh, ("batch", None, None))
+        h = h + attn_train(p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+                           cfg, positions, causal=False, mesh=mesh)
+        h = h + swiglu(rms_norm(h, p["ln2"], cfg.norm_eps), **p["mlp"])
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_fwd(p, x, enc, cfg, positions, mesh=None):
+    if cfg.shard_activations:
+        from .act_sharding import constrain
+        x = constrain(x, mesh, ("batch", None, None))
+    x = x + attn_train(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                       cfg, positions, mesh=mesh)
+    x = x + cross_attn_train(p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps),
+                             enc, cfg, mesh=mesh)
+    x = x + swiglu(rms_norm(x, p["ln2"], cfg.norm_eps), **p["mlp"])
+    return x
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            src_embeds: jnp.ndarray, mesh=None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(tokens (B,S), src (B,Ssrc,D)) -> (logits (B,S,V), aux=0)."""
+    enc = encode(params, cfg, src_embeds, mesh=mesh)
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    step = (lambda p, h: (_dec_fwd(p, h, enc, cfg, positions, mesh), None))
+    if cfg.remat:
+        step = jax.checkpoint(step)
+    x, _ = jax.lax.scan(lambda h, p: step(p, h), x, params["decoder"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["head"]["w"].astype(COMPUTE_DTYPE))
+    return logits, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    a = cfg.attn
+    L = cfg.n_layers
+    kv = (L, batch, max_seq, a.n_kv_heads, a.head_dim)
+    xkv = (L, batch, cfg.src_seq, a.n_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(kv, COMPUTE_DTYPE), "v": jnp.zeros(kv, COMPUTE_DTYPE),
+            "xk": jnp.zeros(xkv, COMPUTE_DTYPE),
+            "xv": jnp.zeros(xkv, COMPUTE_DTYPE)}
+
+
+def cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    ax = ("layers", "batch", "seq", "kv", "hdim")
+    return {"k": ax, "v": ax, "xk": ax, "xv": ax}
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            src_embeds: jnp.ndarray, mesh=None,
+            cache_len: Optional[int] = None) -> Tuple[jnp.ndarray, Params]:
+    enc = encode(params, cfg, src_embeds, mesh=mesh)
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    S = x.shape[1]
+    C = cache_len or S
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(h, p):
+        if cfg.shard_activations:
+            from .act_sharding import constrain
+            h = constrain(h, mesh, ("batch", None, None))
+        hn = rms_norm(h, p["ln1"], cfg.norm_eps)
+        q, k, v = project_qkv(p["attn"], hn, cfg.attn, positions)
+        out = blockwise_attention(q, k, v, positions, positions, causal=True,
+                                  block_kv=cfg.attn_block_kv)
+        h = h + jnp.einsum("bshk,hkd->bsd", out,
+                           p["attn"]["wo"].astype(h.dtype))
+        h = h + cross_attn_train(p["xattn"], rms_norm(h, p["lnx"], cfg.norm_eps),
+                                 enc, cfg)
+        h = h + swiglu(rms_norm(h, p["ln2"], cfg.norm_eps), **p["mlp"])
+        dt = COMPUTE_DTYPE
+        xk = jnp.einsum("bsd,dhk->bshk", enc, p["xattn"]["wk"].astype(enc.dtype))
+        xv = jnp.einsum("bsd,dhk->bshk", enc, p["xattn"]["wv"].astype(enc.dtype))
+        pad = ((0, 0), (0, C - S), (0, 0), (0, 0))
+        return h, (jnp.pad(k.astype(dt), pad), jnp.pad(v.astype(dt), pad),
+                   xk.astype(dt), xv.astype(dt))
+
+    x, (ks, vs, xks, xvs) = jax.lax.scan(body, x, params["decoder"])
+    x_last = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x_last,
+                        params["head"]["w"].astype(COMPUTE_DTYPE))
+    return logits, {"k": ks, "v": vs, "xk": xks, "xv": xvs}
+
+
+def _cross_decode(p, x, xk, xv, cfg):
+    a = cfg.attn
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    B, _, H, dh = q.shape
+    KH = a.n_kv_heads
+    qf = (q * (dh ** -0.5)).reshape(B, KH, H // KH, dh)
+    s = jnp.einsum("bkgd,bckd->bkgc", qf, xk.astype(dt)).astype(jnp.float32)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", w.astype(xv.dtype), xv)
+    out = out.reshape(B, 1, H, dh).astype(dt)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def decode(params: Params, cfg: ModelConfig, cache: Params,
+           tokens: jnp.ndarray, pos: jnp.ndarray, mesh=None
+           ) -> Tuple[jnp.ndarray, Params]:
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(COMPUTE_DTYPE)
+
+    def body(h, inp):
+        p, k, v, xk, xv = inp
+        y, k, v = attn_decode(p["attn"], rms_norm(h, p["ln1"], cfg.norm_eps),
+                              k, v, pos, cfg)
+        h = h + y
+        h = h + _cross_decode(p["xattn"], rms_norm(h, p["lnx"], cfg.norm_eps),
+                              xk, xv, cfg)
+        h = h + swiglu(rms_norm(h, p["ln2"], cfg.norm_eps), **p["mlp"])
+        return h, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["head"]["w"].astype(COMPUTE_DTYPE))
+    return logits, {**cache, "k": ks, "v": vs}

@@ -1,0 +1,39 @@
+"""Modality-frontend STUBS (per the assignment: ``[audio]``/``[vlm]`` entries
+specify the transformer BACKBONE only; ``input_specs()`` provides precomputed
+frame/patch embeddings).
+
+These helpers define the shapes/dtypes of the precomputed embeddings and a
+deterministic synthetic generator for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int):
+    """(B, S_frontend, D) precomputed embeddings fed around the tokenizer."""
+    if cfg.family == "encdec":
+        return (batch, cfg.src_seq, cfg.d_model)
+    if cfg.frontend is not None:
+        return (batch, cfg.frontend_seq, cfg.d_model)
+    return None
+
+
+def frontend_embed_struct(cfg: ModelConfig, batch: int):
+    shape = frontend_embed_shape(cfg, batch)
+    if shape is None:
+        return None
+    return jax.ShapeDtypeStruct(shape, jnp.bfloat16)
+
+
+def synthetic_embeds(cfg: ModelConfig, batch: int, seed: int = 0):
+    shape = frontend_embed_shape(cfg, batch)
+    if shape is None:
+        return None
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * 0.02,
+                       dtype=jnp.bfloat16)

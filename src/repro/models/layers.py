@@ -1,0 +1,139 @@
+"""Shared building blocks: param specs, norms, MLP, rotary embeddings.
+
+Params are plain nested dicts of jnp arrays.  Each module declares its
+parameters as a dict of :class:`P` specs (shape + logical sharding axes +
+initializer); ``init_tree`` materializes weights, ``axes_tree`` the parallel
+tree of logical axes consumed by :mod:`repro.distributed.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | zeros | ones | ssm_a | ssm_dt
+    scale: float = 0.02
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(rng, p: P) -> jnp.ndarray:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, p.dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, p.dtype)
+    if p.init == "ssm_a":      # A_log init in [~log1, log16] (mamba2)
+        u = jax.random.uniform(rng, p.shape, p.dtype, 1.0, 16.0)
+        return jnp.log(u)
+    if p.init == "ssm_dt":     # dt_bias ~ softplus^-1(U[1e-3, 1e-1])
+        u = jax.random.uniform(rng, p.shape, p.dtype, 1e-3, 1e-1)
+        return u + jnp.log(-jnp.expm1(-u))
+    return jax.random.normal(rng, p.shape, p.dtype) * p.scale
+
+
+def init_tree(rng, spec: Dict[str, Any]) -> Params:
+    out: Params = {}
+    keys = jax.random.split(rng, max(len(spec), 1))
+    for k, (name, sub) in zip(keys, sorted(spec.items())):
+        out[name] = _init_leaf(k, sub) if isinstance(sub, P) else init_tree(k, sub)
+    return out
+
+
+def axes_tree(spec: Dict[str, Any]) -> Dict[str, Any]:
+    return {name: (sub.axes if isinstance(sub, P) else axes_tree(sub))
+            for name, sub in spec.items()}
+
+
+def stack_init(rng, spec: Dict[str, Any], n: int) -> Params:
+    """Init n layers and stack leaves along a leading 'layers' axis (for scan)."""
+    rngs = jax.random.split(rng, n)
+    layers = [init_tree(r, spec) for r in rngs]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def stack_axes(spec: Dict[str, Any]) -> Dict[str, Any]:
+    return jax.tree.map(lambda a: ("layers",) + a, axes_tree(spec),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# ops
+# ---------------------------------------------------------------------------
+# §Perf iteration 4: when True, rms_norm computes the variance with an
+# f32-accumulating dot and multiplies in bf16 — the f32 (B,S,d) upcast is
+# never materialized (6 such tensors/layer dominated the memory term).
+# Set via ModelConfig.rmsnorm_bf16 (threaded by the forward entry points).
+_RMSNORM_BF16 = False
+
+
+def set_rmsnorm_bf16(on: bool) -> None:
+    global _RMSNORM_BF16
+    _RMSNORM_BF16 = bool(on)
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    if _RMSNORM_BF16 and dt != jnp.float32:
+        var = jnp.einsum("...d,...d->...", x, x,
+                         preferred_element_type=jnp.float32) / x.shape[-1]
+        r = jax.lax.rsqrt(var + eps).astype(dt)[..., None]
+        return x * r * scale.astype(dt)
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x: jnp.ndarray, w_gate, w_up, w_down) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u,
+                      w_down.astype(x.dtype))
+
+
+def mlp_spec(d: int, f: int) -> Dict[str, P]:
+    return {
+        "w_gate": P((d, f), ("embed", "ffn")),
+        "w_up": P((d, f), ("embed", "ffn")),
+        "w_down": P((f, d), ("ffn", "embed"), scale=0.02 / 2),
+    }
+
+
+def rope(positions: jnp.ndarray, head_dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions (...,) int -> cos/sin (..., head_dim/2) f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., n_heads, head_dim); cos/sin broadcastable to (..., 1, hd/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token CE.  logits (B,S,V) — may be vocab-sharded; the lse
+    reduction lowers to a sharded reduce."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return (nll * m).sum() / jnp.maximum(m.sum(), 1.0)
+    return nll.mean()

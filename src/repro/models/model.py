@@ -1,0 +1,98 @@
+"""Unified Model facade: init / loss / prefill / decode across all families.
+
+The training batch dict is produced by the data pipeline (or ``input_specs``
+for the dry run):
+  tokens   (B, S) int32      — always present
+  embeds   (B, Sf, D) bf16   — only for frontend-stub archs (audio/vlm/encdec)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .config import ModelConfig
+from .frontends import frontend_embed_struct
+from .layers import cross_entropy_loss, set_rmsnorm_bf16
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self._mod = encdec if cfg.family == "encdec" else transformer
+
+    # -- params ----------------------------------------------------------------
+    def init(self, rng) -> Dict[str, Any]:
+        return self._mod.init_params(self.cfg, rng)
+
+    def init_abstract(self, rng=None) -> Dict[str, Any]:
+        """Shape-only params (no allocation) for the dry run."""
+        return jax.eval_shape(
+            lambda: self._mod.init_params(self.cfg, jax.random.key(0)))
+
+    def params_axes(self) -> Dict[str, Any]:
+        return self._mod.params_axes(self.cfg)
+
+    # -- train -------------------------------------------------------------------
+    def loss(self, params, batch: Dict[str, jnp.ndarray], mesh=None
+             ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        cfg = self.cfg
+        set_rmsnorm_bf16(cfg.rmsnorm_bf16)
+        tokens = batch["tokens"]
+        if cfg.family == "encdec":
+            logits, aux = encdec.forward(params, cfg, tokens, batch["embeds"],
+                                         mesh=mesh)
+            ce = cross_entropy_loss(logits[:, :-1], tokens[:, 1:])
+        elif cfg.frontend is not None:   # vlm/audio decoder-only
+            logits, aux = transformer.forward(params, cfg, tokens,
+                                              extra_embeds=batch["embeds"],
+                                              mesh=mesh)
+            sf = batch["embeds"].shape[1]
+            ce = cross_entropy_loss(logits[:, sf - 1:-1], tokens)
+        else:
+            logits, aux = transformer.forward(params, cfg, tokens, mesh=mesh)
+            ce = cross_entropy_loss(logits[:, :-1], tokens[:, 1:])
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # -- serve --------------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, jnp.ndarray], mesh=None,
+                cache_len: Optional[int] = None):
+        cfg = self.cfg
+        set_rmsnorm_bf16(cfg.rmsnorm_bf16)
+        if cfg.family == "encdec":
+            return encdec.prefill(params, cfg, batch["tokens"], batch["embeds"],
+                                  mesh=mesh, cache_len=cache_len)
+        return transformer.prefill(params, cfg, batch["tokens"],
+                                   extra_embeds=batch.get("embeds"),
+                                   mesh=mesh, cache_len=cache_len)
+
+    def decode_step(self, params, cache, tokens, pos, mesh=None):
+        set_rmsnorm_bf16(self.cfg.rmsnorm_bf16)
+        if self.cfg.family == "encdec":
+            return encdec.decode(params, self.cfg, cache, tokens, pos, mesh=mesh)
+        return transformer.decode(params, self.cfg, cache, tokens, pos,
+                                  mesh=mesh)
+
+    def init_cache(self, batch: int, max_seq: int):
+        if self.cfg.family == "encdec":
+            return encdec.init_cache(self.cfg, batch, max_seq)
+        return transformer.init_cache(self.cfg, batch, max_seq)
+
+    def cache_axes(self):
+        if self.cfg.family == "encdec":
+            return encdec.cache_axes(self.cfg)
+        return transformer.cache_axes(self.cfg)
+
+    def cache_abstract(self, batch: int, max_seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+    # -- dry-run inputs --------------------------------------------------------------
+    def input_specs(self, batch: int, seq: int) -> Dict[str, Any]:
+        specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+        emb = frontend_embed_struct(self.cfg, batch)
+        if emb is not None:
+            specs["embeds"] = emb
+        return specs

@@ -1,0 +1,231 @@
+"""Mamba2 (SSD — state-space duality) block: chunked train path + O(1) decode.
+
+Training uses the SSD chunked dual form (Dao & Gu 2024, §6): the sequence is
+split into chunks of length Q; within a chunk the dual quadratic (attention-
+like) form runs on the MXU, across chunks the O(N) state recurrence threads
+through a `lax.scan` — exactly the block-diagonal + low-rank decomposition the
+paper derives.  Decode keeps (B, H, P, N) state + a (K-1)-deep conv ring.
+
+Logical sharding: SSM heads (and therefore d_inner) shard over "model";
+B/C projections (ngroups=1) are replicated, matching how Mamba2 is TP-sharded
+in practice.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig, SSMCfg
+from .layers import P, rms_norm
+
+NEG_INF = -1e30
+
+
+def ssm_spec(cfg: ModelConfig) -> Dict[str, P]:
+    s, d = cfg.ssm, cfg.d_model
+    di, H, GN = s.d_inner(d), s.n_heads(d), s.ngroups * s.d_state
+    conv_dim = di + 2 * GN
+    return {
+        "wz": P((d, di), ("embed", "inner")),
+        "wx": P((d, di), ("embed", "inner")),
+        "wB": P((d, GN), ("embed", None)),
+        "wC": P((d, GN), ("embed", None)),
+        "wdt": P((d, H), ("embed", "heads")),
+        "dt_bias": P((H,), ("heads",), init="ssm_dt"),
+        "A_log": P((H,), ("heads",), init="ssm_a"),
+        "D_skip": P((H,), ("heads",), init="ones"),
+        "conv_w": P((s.d_conv, conv_dim), (None, "inner"), scale=0.1),
+        "conv_b": P((conv_dim,), ("inner",), init="zeros"),
+        "gate_norm": P((di,), ("inner",), init="ones"),
+        "out_proj": P((di, d), ("inner", "embed"), scale=0.02 / 2),
+    }
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv along T.  xBC (B,T,C); w (K,C)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)          # (B, T+K-1, C)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i].astype(xBC.dtype)
+              for i in range(K))
+    return out + b.astype(xBC.dtype)
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a (..., Q) -> (..., Q, Q): out[i,j] = sum_{k=j+1..i} a[k], -inf above diag."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(Q)
+    return jnp.where(i[:, None] >= i[None, :], diff, NEG_INF)
+
+
+def ssd_chunked(Xdt: jnp.ndarray, A_: jnp.ndarray, Bm: jnp.ndarray,
+                Cm: jnp.ndarray, chunk: int,
+                init_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD dual form.
+
+    Xdt (B,T,H,P) — inputs pre-multiplied by dt;  A_ (B,T,H) = dt*A (<=0);
+    Bm, Cm (B,T,G,N).  Returns (Y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    B, T, H, Pd = Xdt.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    HG = H // G
+    T0 = T
+    if T % chunk:  # pad tail: A_=0 (decay 1) and X=0 leave the state intact
+        pad = chunk - T % chunk
+        Xdt = jnp.pad(Xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        A_ = jnp.pad(A_, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T = Xdt.shape[1]
+    nc = T // chunk
+
+    # group-major reshapes: (B, nc, Q, G, HG, ...)
+    Xg = Xdt.reshape(B, nc, chunk, G, HG, Pd)
+    Ag = A_.reshape(B, nc, chunk, G, HG).astype(jnp.float32)
+    Bg = Bm.reshape(B, nc, chunk, G, N)
+    Cg = Cm.reshape(B, nc, chunk, G, N)
+
+    cs = jnp.cumsum(Ag, axis=2)                         # (B,nc,Q,G,HG)
+    # ---- intra-chunk (quadratic dual form) ----
+    L = jnp.exp(_segsum(Ag.transpose(0, 1, 3, 4, 2)))   # (B,nc,G,HG,Q,Q)
+    scores = jnp.einsum("bcqgn,bcpgn->bcgqp", Cg, Bg)   # (B,nc,G,Q,Q)
+    Y_diag = jnp.einsum("bcgqp,bcghqp,bcpghd->bcqghd",
+                        scores.astype(jnp.float32), L,
+                        Xg.astype(jnp.float32))
+
+    # ---- chunk-local end states ----
+    decay_to_end = jnp.exp(cs[:, :, -1:, :, :] - cs)    # (B,nc,Q,G,HG)
+    S_local = jnp.einsum("bcqgn,bcqghd,bcqgh->bcghdn",
+                         Bg.astype(jnp.float32), Xg.astype(jnp.float32),
+                         decay_to_end)                  # (B,nc,G,HG,P,N)
+
+    # ---- inter-chunk recurrence (the O(N) half of the duality) ----
+    chunk_decay = jnp.exp(cs[:, :, -1, :, :])           # (B,nc,G,HG)
+    S0 = (jnp.zeros((B, G, HG, Pd, N), jnp.float32) if init_state is None
+          else init_state.reshape(B, G, HG, Pd, N).astype(jnp.float32))
+
+    def step(S_prev, inp):
+        dec, S_loc = inp                                # (B,G,HG), (B,G,HG,P,N)
+        S = S_prev * dec[..., None, None] + S_loc
+        return S, S_prev                                # emit state *entering* chunk
+
+    S_final, S_in = jax.lax.scan(
+        step, S0, (chunk_decay.transpose(1, 0, 2, 3),
+                   S_local.transpose(1, 0, 2, 3, 4, 5)))
+    S_in = S_in.transpose(1, 0, 2, 3, 4, 5)             # (B,nc,G,HG,P,N)
+
+    Y_off = jnp.einsum("bcqgn,bcghdn,bcqgh->bcqghd",
+                       Cg.astype(jnp.float32), S_in, jnp.exp(cs))
+    Y = (Y_diag + Y_off).reshape(B, T, H, Pd)[:, :T0]
+    return Y.astype(Xdt.dtype), S_final.reshape(B, H, Pd, N)
+
+
+def _project(p: Dict, x: jnp.ndarray, s: SSMCfg, d: int):
+    dt_ = x.dtype
+    z = jnp.einsum("btd,de->bte", x, p["wz"].astype(dt_))
+    xs = jnp.einsum("btd,de->bte", x, p["wx"].astype(dt_))
+    Bm = jnp.einsum("btd,dn->btn", x, p["wB"].astype(dt_))
+    Cm = jnp.einsum("btd,dn->btn", x, p["wC"].astype(dt_))
+    dt = jax.nn.softplus(
+        jnp.einsum("btd,dh->bth", x, p["wdt"].astype(dt_)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    return z, xs, Bm, Cm, dt
+
+
+def ssm_train(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+              return_state: bool = False, mesh=None):
+    """Full Mamba2 block (pre-norm happens in the caller). x (B,T,d).
+
+    With ``return_state`` also emits (ssm_state (B,H,P,N), conv_state
+    (B,K-1,C)) so prefill can hand off to the recurrent decode path.
+    """
+    s, d = cfg.ssm, cfg.d_model
+    di, H, Pd = s.d_inner(d), s.n_heads(d), s.headdim
+    G, N = s.ngroups, s.d_state
+    B, T, _ = x.shape
+
+    z, xs, Bm, Cm, dt = _project(p, x, s, d)
+    if cfg.shard_activations and mesh is not None:
+        from .act_sharding import constrain
+        z = constrain(z, mesh, ("batch", None, "model"))
+        xs = constrain(xs, mesh, ("batch", None, "model"))
+        dt = constrain(dt, mesh, ("batch", None, "model"))
+    xBC_pre = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC_pre, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # (H,) < 0
+    Xh = xs.reshape(B, T, H, Pd)
+    Xdt = Xh * dt[..., None].astype(Xh.dtype)
+    Y, state = ssd_chunked(Xdt, dt * A, Bm.reshape(B, T, G, N),
+                           Cm.reshape(B, T, G, N), s.chunk)
+    Y = Y + p["D_skip"].astype(Y.dtype)[None, None, :, None] * Xh
+    y = Y.reshape(B, T, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(x.dtype))
+    if return_state:
+        conv_state = xBC_pre[:, T - (s.d_conv - 1):, :]  # pre-activation tail
+        return out, state, conv_state
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (recurrent form)
+# ---------------------------------------------------------------------------
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int,
+                   dtype=jnp.float32):
+    s, d = cfg.ssm, cfg.d_model
+    di, H, Pd = s.d_inner(d), s.n_heads(d), s.headdim
+    conv_dim = di + 2 * s.ngroups * s.d_state
+    return {
+        "ssm_state": jnp.zeros((n_layers, batch, H, Pd, s.d_state), dtype),
+        "conv_state": jnp.zeros((n_layers, batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_cache_axes(_: ModelConfig):
+    return {"ssm_state": ("layers", "batch", "heads", None, None),
+            "conv_state": ("layers", "batch", None, "inner")}
+
+
+def ssm_decode(p: Dict, x: jnp.ndarray, ssm_state: jnp.ndarray,
+               conv_state: jnp.ndarray, cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One token.  x (B,1,d); ssm_state (B,H,P,N); conv_state (B,K-1,C)."""
+    s, d = cfg.ssm, cfg.d_model
+    di, H, Pd = s.d_inner(d), s.n_heads(d), s.headdim
+    G, N = s.ngroups, s.d_state
+    B = x.shape[0]
+
+    z, xs, Bm, Cm, dt = _project(p, x, s, d)
+    xBC = jnp.concatenate([xs, Bm, Cm], axis=-1)        # (B,1,C)
+    window = jnp.concatenate([conv_state.astype(xBC.dtype), xBC], axis=1)
+    out = sum(window[:, i] * p["conv_w"][i].astype(xBC.dtype)
+              for i in range(s.d_conv))
+    xBC_t = jax.nn.silu(out + p["conv_b"].astype(xBC.dtype))  # (B,C)
+    new_conv = window[:, 1:]
+
+    xs_t, B_t, C_t = jnp.split(xBC_t, [di, di + G * N], axis=-1)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt_t = dt[:, 0]                                     # (B,H)
+    dA = jnp.exp(dt_t * A)                              # (B,H)
+    Xh = xs_t.reshape(B, H, Pd).astype(jnp.float32)
+    Bh = jnp.repeat(B_t.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C_t.reshape(B, G, N), H // G, axis=1).astype(jnp.float32)
+    new_state = (ssm_state.astype(jnp.float32) * dA[..., None, None]
+                 + (dt_t[..., None] * Xh)[..., None] * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * Xh
+    y = y.reshape(B, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(x.dtype))
+    return out, new_state.astype(ssm_state.dtype), new_conv.astype(conv_state.dtype)

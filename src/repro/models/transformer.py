@@ -1,0 +1,514 @@
+"""Decoder-only LM assembly for the dense / moe / ssm / hybrid families.
+
+Layers are *scanned* (params stacked on a leading "layers" axis) so the HLO
+stays compact at 64 layers × 512 devices, with optional per-block remat.
+Three entry points per family: ``forward`` (training logits), ``prefill``
+(logits + cache), ``decode`` (one token with cache).
+
+Family structure:
+  dense    scan L × [attn, mlp]
+  moe      every_k_layers=2 → scan L/2 × [dense-block, moe-block] (llama4)
+           first_dense=n    → n unscanned dense + scan (L-n) × moe-block
+  ssm      scan L × [mamba2]
+  hybrid   scan G groups × [period × mamba2 + one SHARED attn block]
+           (zamba2: the attention block's params are shared across groups)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attn_decode, attn_spec, attn_train, init_kv_cache,
+                        kv_cache_axes)
+from .config import ModelConfig
+from .layers import (P, Params, axes_tree, init_tree, mlp_spec, rms_norm,
+                     stack_axes, stack_init, swiglu)
+from .moe import moe_apply, moe_spec
+from .ssm import (init_ssm_cache, ssm_cache_axes, ssm_decode, ssm_spec,
+                  ssm_train)
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# block specs
+# ---------------------------------------------------------------------------
+def dense_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"ln1": P((d,), ("embed",), init="ones"),
+            "attn": attn_spec(cfg),
+            "ln2": P((d,), ("embed",), init="ones"),
+            "mlp": mlp_spec(d, cfg.d_ff)}
+
+
+def moe_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"ln1": P((d,), ("embed",), init="ones"),
+            "attn": attn_spec(cfg),
+            "ln2": P((d,), ("embed",), init="ones"),
+            "moe": moe_spec(cfg)}
+
+
+def ssm_block_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"norm": P((d,), ("embed",), init="ones"),
+            "ssm": ssm_spec(cfg)}
+
+
+def _outer_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab
+    return {
+        "embed": {"table": P((v, d), ("vocab", "embed"), scale=1.0)},
+        "final_norm": P((d,), ("embed",), init="ones"),
+        "head": {"w": P((d, v), ("embed", "vocab"))},
+    }
+
+
+def _moe_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    m = cfg.moe
+    n_moe = (cfg.n_layers - m.first_dense) // m.every_k_layers
+    return m.first_dense, n_moe
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    r_out, r_blocks, r_extra = jax.random.split(rng, 3)
+    params = init_tree(r_out, _outer_spec(cfg))
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        params["blocks"] = stack_init(r_blocks, dense_block_spec(cfg), cfg.n_layers)
+    elif fam == "ssm":
+        params["blocks"] = stack_init(r_blocks, ssm_block_spec(cfg), cfg.n_layers)
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.hybrid_share_period
+        flat = stack_init(r_blocks, ssm_block_spec(cfg), cfg.n_layers)
+        params["blocks"] = jax.tree.map(
+            lambda x: x.reshape(g, cfg.hybrid_share_period, *x.shape[1:]), flat)
+        params["shared_attn"] = init_tree(r_extra, dense_block_spec(cfg))
+    elif fam == "moe":
+        first_dense, n_moe = _moe_layout(cfg)
+        if cfg.moe.every_k_layers == 2:
+            params["blocks"] = stack_init(
+                r_blocks, {"dense": dense_block_spec(cfg),
+                           "moe": moe_block_spec(cfg)}, cfg.n_layers // 2)
+        else:
+            if first_dense:
+                params["first"] = stack_init(r_extra, dense_block_spec(cfg),
+                                             first_dense)
+            params["blocks"] = stack_init(r_blocks, moe_block_spec(cfg), n_moe)
+    else:
+        raise ValueError(fam)
+    return params
+
+
+def params_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    axes = axes_tree(_outer_spec(cfg))
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        axes["blocks"] = stack_axes(dense_block_spec(cfg))
+    elif fam == "ssm":
+        axes["blocks"] = stack_axes(ssm_block_spec(cfg))
+    elif fam == "hybrid":
+        axes["blocks"] = jax.tree.map(
+            lambda a: ("layers",) + a, stack_axes(ssm_block_spec(cfg)),
+            is_leaf=lambda x: isinstance(x, tuple))
+        axes["shared_attn"] = axes_tree(dense_block_spec(cfg))
+    elif fam == "moe":
+        first_dense, _ = _moe_layout(cfg)
+        if cfg.moe.every_k_layers == 2:
+            axes["blocks"] = stack_axes({"dense": dense_block_spec(cfg),
+                                         "moe": moe_block_spec(cfg)})
+        else:
+            if first_dense:
+                axes["first"] = stack_axes(dense_block_spec(cfg))
+            axes["blocks"] = stack_axes(moe_block_spec(cfg))
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# block forward fns (training): (params, x, positions) -> (x, aux)
+# ---------------------------------------------------------------------------
+def _dense_fwd(p, x, cfg, positions, mesh=None):
+    if cfg.shard_activations:
+        from .act_sharding import constrain
+        x = constrain(x, mesh, ("batch", None, None))
+    x = x + attn_train(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                       positions, mesh=mesh)
+    x = x + swiglu(rms_norm(x, p["ln2"], cfg.norm_eps), **p["mlp"])
+    return x, jnp.float32(0.0)
+
+
+def _moe_fwd(p, x, cfg, positions, mesh):
+    if cfg.shard_activations:
+        from .act_sharding import constrain
+        x = constrain(x, mesh, ("batch", None, None))
+    x = x + attn_train(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                       positions, mesh=mesh)
+    y, aux = moe_apply(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, mesh)
+    return x + y, aux
+
+
+def _ssm_fwd(p, x, cfg, mesh=None):
+    if cfg.shard_activations:
+        from .act_sharding import constrain
+        x = constrain(x, mesh, ("batch", None, None))
+    return x + ssm_train(p["ssm"], rms_norm(x, p["norm"], cfg.norm_eps), cfg,
+                         mesh=mesh), jnp.float32(0.0)
+
+
+def _scan(step, params_stacked, x, remat: bool):
+    f = jax.checkpoint(step) if remat else step
+
+    def body(carry, layer_p):
+        h, aux = carry
+        h, a = f(layer_p, h)
+        return (h, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params_stacked)
+    return x, aux
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            extra_embeds: Optional[jnp.ndarray] = None,
+            mesh=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens (B,S) -> (logits (B,S_total,V) bf16, aux_loss)."""
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    if extra_embeds is not None:   # vlm/audio stub frontends prepend embeddings
+        x = jnp.concatenate([extra_embeds.astype(COMPUTE_DTYPE), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    fam = cfg.family
+
+    if fam in ("dense", "vlm"):
+        x, aux = _scan(lambda p, h: _dense_fwd(p, h, cfg, positions, mesh),
+                       params["blocks"], x, cfg.remat)
+    elif fam == "ssm":
+        x, aux = _scan(lambda p, h: _ssm_fwd(p, h, cfg, mesh),
+                       params["blocks"], x, cfg.remat)
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_step(p, h):
+            h, a = _scan(lambda q, g: _ssm_fwd(q, g, cfg, mesh), p, h, False)
+            h, a2 = _dense_fwd(shared, h, cfg, positions, mesh)
+            return h, a + a2
+
+        x, aux = _scan(group_step, params["blocks"], x, cfg.remat)
+    elif fam == "moe":
+        first_dense, _ = _moe_layout(cfg)
+        aux = jnp.float32(0.0)
+        if cfg.moe.every_k_layers == 2:
+            def pair_step(p, h):
+                h, _ = _dense_fwd(p["dense"], h, cfg, positions, mesh)
+                return _moe_fwd(p["moe"], h, cfg, positions, mesh)
+            x, aux = _scan(pair_step, params["blocks"], x, cfg.remat)
+        else:
+            if first_dense:
+                x, _ = _scan(lambda p, h: _dense_fwd(p, h, cfg, positions,
+                                                     mesh),
+                             params["first"], x, cfg.remat)
+            x, aux = _scan(lambda p, h: _moe_fwd(p, h, cfg, positions, mesh),
+                           params["blocks"], x, cfg.remat)
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["head"]["w"].astype(COMPUTE_DTYPE))
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return init_kv_cache(cfg, batch, max_seq, cfg.n_layers)
+    if fam == "ssm":
+        return init_ssm_cache(cfg, batch, cfg.n_layers)
+    if fam == "hybrid":
+        g = cfg.n_layers // cfg.hybrid_share_period
+        ssm = init_ssm_cache(cfg, batch, cfg.n_layers)
+        ssm = jax.tree.map(
+            lambda x: x.reshape(g, cfg.hybrid_share_period, *x.shape[1:]), ssm)
+        kv = init_kv_cache(cfg, batch, max_seq, g)
+        return {**ssm, **kv}
+    if fam == "moe":
+        first_dense, n_moe = _moe_layout(cfg)
+        if cfg.moe.every_k_layers == 2:
+            kv = init_kv_cache(cfg, batch, max_seq, cfg.n_layers // 2)
+            return {"k": jnp.stack([kv["k"], kv["k"]], 1),
+                    "v": jnp.stack([kv["v"], kv["v"]], 1)}
+        out = init_kv_cache(cfg, batch, max_seq, n_moe)
+        if first_dense:
+            fkv = init_kv_cache(cfg, batch, max_seq, first_dense)
+            out = {**out, "k_first": fkv["k"], "v_first": fkv["v"]}
+        return out
+    raise ValueError(fam)
+
+
+def cache_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    fam = cfg.family
+    kv_ax = kv_cache_axes(cfg)
+    if fam in ("dense", "vlm"):
+        return kv_ax
+    if fam == "ssm":
+        return ssm_cache_axes(cfg)
+    if fam == "hybrid":
+        ssm_ax = {k: ("layers",) + v for k, v in ssm_cache_axes(cfg).items()}
+        return {**ssm_ax, **kv_ax}
+    if fam == "moe":
+        first_dense, _ = _moe_layout(cfg)
+        if cfg.moe.every_k_layers == 2:
+            ax = ("layers", None, "batch", "seq", "kv", "hdim")
+            return {"k": ax, "v": ax}
+        out = dict(kv_ax)
+        if first_dense:
+            out["k_first"] = kv_ax["k"]
+            out["v_first"] = kv_ax["v"]
+        return out
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# prefill: forward pass that also materializes the decode caches.
+# Logits are computed for the LAST position only (a (B,S,V) logits tensor at
+# 32k prefill would be hundreds of GB).
+# ---------------------------------------------------------------------------
+def _to_kv_cache(k: jnp.ndarray, C: int) -> jnp.ndarray:
+    """k (B,S,KH,dh) -> cache (B,C,KH,dh); ring-rolled when C < S (SWA)."""
+    B, S = k.shape[0], k.shape[1]
+    k = k.astype(COMPUTE_DTYPE)
+    if C >= S:
+        return jnp.pad(k, ((0, 0), (0, C - S), (0, 0), (0, 0)))
+    last = k[:, S - C:]
+    return jnp.roll(last, shift=(S - C) % C, axis=1)
+
+
+def _dense_prefill(p, x, cfg, positions, C, mesh=None):
+    from .attention import _maybe_shard_q, blockwise_attention, project_qkv
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(p["attn"], h, cfg.attn, positions)
+    if cfg.shard_activations:
+        from .act_sharding import constrain
+        q = constrain(q, mesh, ("batch", None, "model", None))
+        k = constrain(k, mesh, ("batch", None, "model", None))
+        v = constrain(v, mesh, ("batch", None, "model", None))
+    q = _maybe_shard_q(q, cfg, mesh)
+    out = blockwise_attention(q, k, v, positions, positions, causal=True,
+                              window=cfg.attn.window,
+                              block_kv=cfg.attn_block_kv,
+                              scores_bf16=cfg.attn_scores_bf16)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(x.dtype))
+    x = x + swiglu(rms_norm(x, p["ln2"], cfg.norm_eps), **p["mlp"])
+    return x, _to_kv_cache(k, C), _to_kv_cache(v, C)
+
+
+def _moe_prefill(p, x, cfg, positions, C, mesh):
+    from .attention import _maybe_shard_q, blockwise_attention, project_qkv
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = project_qkv(p["attn"], h, cfg.attn, positions)
+    if cfg.shard_activations:
+        from .act_sharding import constrain
+        q = constrain(q, mesh, ("batch", None, "model", None))
+        k = constrain(k, mesh, ("batch", None, "model", None))
+        v = constrain(v, mesh, ("batch", None, "model", None))
+    q = _maybe_shard_q(q, cfg, mesh)
+    out = blockwise_attention(q, k, v, positions, positions, causal=True,
+                              window=cfg.attn.window,
+                              block_kv=cfg.attn_block_kv,
+                              scores_bf16=cfg.attn_scores_bf16)
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(x.dtype))
+    y, _ = moe_apply(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, mesh)
+    return x + y, _to_kv_cache(k, C), _to_kv_cache(v, C)
+
+
+def _ssm_prefill(p, x, cfg, mesh=None):
+    if cfg.shard_activations:
+        from .act_sharding import constrain
+        x = constrain(x, mesh, ("batch", None, None))
+    y, st, cv = ssm_train(p["ssm"], rms_norm(x, p["norm"], cfg.norm_eps),
+                          cfg, return_state=True, mesh=mesh)
+    return x + y, st, cv
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            extra_embeds: Optional[jnp.ndarray] = None,
+            mesh=None, cache_len: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, Params]:
+    """tokens (B,S) -> (last-position logits (B,1,V), cache)."""
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(COMPUTE_DTYPE), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    a = cfg.attn
+    C = cache_len or S
+    if a is not None and a.window:
+        C = min(C, a.window)
+    fam = cfg.family
+    cache: Dict[str, Any] = {}
+
+    if fam in ("dense", "vlm"):
+        def body(h, p):
+            h, kc, vc = _dense_prefill(p, h, cfg, positions, C, mesh)
+            return h, (kc, vc)
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"k": ks, "v": vs}
+    elif fam == "ssm":
+        def body(h, p):
+            h, st, cv = _ssm_prefill(p, h, cfg, mesh)
+            return h, (st, cv)
+        x, (sts, cvs) = jax.lax.scan(body, x, params["blocks"])
+        cache = {"ssm_state": sts, "conv_state": cvs}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(h, p):
+            def inner(hh, q):
+                hh, st, cv = _ssm_prefill(q, hh, cfg, mesh)
+                return hh, (st, cv)
+            h, (st, cv) = jax.lax.scan(inner, h, p)
+            h, kc, vc = _dense_prefill(shared, h, cfg, positions, C, mesh)
+            return h, (st, cv, kc, vc)
+        x, (sts, cvs, ks, vs) = jax.lax.scan(group, x, params["blocks"])
+        cache = {"ssm_state": sts, "conv_state": cvs, "k": ks, "v": vs}
+    elif fam == "moe":
+        first_dense, _ = _moe_layout(cfg)
+        if cfg.moe.every_k_layers == 2:
+            def pair(h, p):
+                h, kd, vd = _dense_prefill(p["dense"], h, cfg, positions, C,
+                                           mesh)
+                h, km, vm = _moe_prefill(p["moe"], h, cfg, positions, C, mesh)
+                return h, (jnp.stack([kd, km]), jnp.stack([vd, vm]))
+            x, (ks, vs) = jax.lax.scan(pair, x, params["blocks"])
+            cache = {"k": ks, "v": vs}
+        else:
+            if first_dense:
+                def fbody(h, p):
+                    h, kc, vc = _dense_prefill(p, h, cfg, positions, C, mesh)
+                    return h, (kc, vc)
+                x, (kf, vf) = jax.lax.scan(fbody, x, params["first"])
+                cache["k_first"], cache["v_first"] = kf, vf
+
+            def mbody(h, p):
+                h, kc, vc = _moe_prefill(p, h, cfg, positions, C, mesh)
+                return h, (kc, vc)
+            x, (ks, vs) = jax.lax.scan(mbody, x, params["blocks"])
+            cache["k"], cache["v"] = ks, vs
+    else:
+        raise ValueError(fam)
+
+    x_last = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x_last,
+                        params["head"]["w"].astype(COMPUTE_DTYPE))
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode: one token through all layers, caches scanned alongside params
+# ---------------------------------------------------------------------------
+def _dense_dec(p, x, k, v, pos, cfg):
+    y, k, v = attn_decode(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                          k, v, pos, cfg)
+    x = x + y
+    x = x + swiglu(rms_norm(x, p["ln2"], cfg.norm_eps), **p["mlp"])
+    return x, k, v
+
+
+def _moe_dec(p, x, k, v, pos, cfg, mesh):
+    y, k, v = attn_decode(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                          k, v, pos, cfg)
+    x = x + y
+    y, _ = moe_apply(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, mesh)
+    return x + y, k, v
+
+
+def _ssm_dec(p, x, st, cv, cfg):
+    y, st, cv = ssm_decode(p["ssm"], rms_norm(x, p["norm"], cfg.norm_eps),
+                           st, cv, cfg)
+    return x + y, st, cv
+
+
+def decode(params: Params, cfg: ModelConfig, cache: Params,
+           tokens: jnp.ndarray, pos: jnp.ndarray,
+           mesh=None) -> Tuple[jnp.ndarray, Params]:
+    """tokens (B,1) int32, pos scalar int32 -> (logits (B,1,V), new cache)."""
+    x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(COMPUTE_DTYPE)
+    fam = cfg.family
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm"):
+        def body(h, inp):
+            p, k, v = inp
+            h, k, v = _dense_dec(p, h, k, v, pos, cfg)
+            return h, (k, v)
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+    elif fam == "ssm":
+        def body(h, inp):
+            p, st, cv = inp
+            h, st, cv = _ssm_dec(p, h, st, cv, cfg)
+            return h, (st, cv)
+        x, (sts, cvs) = jax.lax.scan(
+            body, x, (params["blocks"], cache["ssm_state"], cache["conv_state"]))
+        new_cache = {"ssm_state": sts, "conv_state": cvs}
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def group(h, inp):
+            p, st, cv, k, v = inp
+
+            def inner(hh, ii):
+                q, s2, c2 = ii
+                hh, s2, c2 = _ssm_dec(q, hh, s2, c2, cfg)
+                return hh, (s2, c2)
+            h, (st, cv) = jax.lax.scan(inner, h, (p, st, cv))
+            h, k, v = _dense_dec(shared, h, k, v, pos, cfg)
+            return h, (st, cv, k, v)
+
+        x, (sts, cvs, ks, vs) = jax.lax.scan(
+            group, x, (params["blocks"], cache["ssm_state"],
+                       cache["conv_state"], cache["k"], cache["v"]))
+        new_cache = {"ssm_state": sts, "conv_state": cvs, "k": ks, "v": vs}
+    elif fam == "moe":
+        first_dense, _ = _moe_layout(cfg)
+        if cfg.moe.every_k_layers == 2:
+            def pair(h, inp):
+                p, k2, v2 = inp
+                h, kd, vd = _dense_dec(p["dense"], h, k2[0], v2[0], pos, cfg)
+                h, km, vm = _moe_dec(p["moe"], h, k2[1], v2[1], pos, cfg, mesh)
+                return h, (jnp.stack([kd, km]), jnp.stack([vd, vm]))
+            x, (ks, vs) = jax.lax.scan(pair, x, (params["blocks"],
+                                                 cache["k"], cache["v"]))
+            new_cache = {"k": ks, "v": vs}
+        else:
+            new_cache = dict(cache)
+            if first_dense:
+                def fbody(h, inp):
+                    p, k, v = inp
+                    h, k, v = _dense_dec(p, h, k, v, pos, cfg)
+                    return h, (k, v)
+                x, (kf, vf) = jax.lax.scan(
+                    fbody, x, (params["first"], cache["k_first"],
+                               cache["v_first"]))
+                new_cache["k_first"], new_cache["v_first"] = kf, vf
+
+            def mbody(h, inp):
+                p, k, v = inp
+                h, k, v = _moe_dec(p, h, k, v, pos, cfg, mesh)
+                return h, (k, v)
+            x, (ks, vs) = jax.lax.scan(mbody, x, (params["blocks"],
+                                                  cache["k"], cache["v"]))
+            new_cache["k"], new_cache["v"] = ks, vs
+    else:
+        raise ValueError(fam)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["head"]["w"].astype(COMPUTE_DTYPE))
+    return logits, new_cache

@@ -1,0 +1,106 @@
+"""Batched serving engine: slot-based continuous batching over the decode step.
+
+A fixed pool of B slots shares one KV cache (the cache's batch dim).  New
+requests prefill into a free slot; every engine step decodes one token for all
+active slots (idle slots compute garbage that is masked out — the standard
+static-batch trade).  Per-slot positions require the vector-``pos`` decode
+path in :mod:`repro.models.attention`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                      # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, slots: int = 4, max_seq: int = 256,
+                 mesh=None, greedy: bool = True):
+        self.model, self.params, self.mesh = model, params, mesh
+        self.slots, self.max_seq = slots, max_seq
+        self.cache = model.init_cache(slots, max_seq)
+        self.pos = np.full(slots, -1, np.int64)        # -1 = free
+        self.active: Dict[int, Request] = {}
+        self._ids = itertools.count()
+        self.queue: List[Request] = []
+        self.greedy = greedy
+        self._decode = jax.jit(
+            lambda p, c, t, pos: model.decode_step(p, c, t, pos, mesh=mesh))
+
+    # -- API ---------------------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> int:
+        r = Request(next(self._ids), np.asarray(prompt, np.int32),
+                    max_new_tokens, eos_id)
+        self.queue.append(r)
+        return r.rid
+
+    def step(self) -> List[Request]:
+        """Admit + decode one token for all active slots; returns finished."""
+        self._admit()
+        finished: List[Request] = []
+        if not self.active:
+            return finished
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for slot, r in self.active.items():
+            last = (r.out_tokens[-1] if r.out_tokens else int(r.prompt[-1]))
+            tokens[slot, 0] = last
+        pos = jnp.asarray(np.maximum(self.pos, 0).astype(np.int32))
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens), pos)
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
+        for slot, r in list(self.active.items()):
+            tok = int(nxt[slot])
+            r.out_tokens.append(tok)
+            self.pos[slot] += 1
+            if (len(r.out_tokens) >= r.max_new_tokens
+                    or (r.eos_id is not None and tok == r.eos_id)
+                    or self.pos[slot] >= self.max_seq - 1):
+                r.done = True
+                finished.append(r)
+                del self.active[slot]
+                self.pos[slot] = -1
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> List[Request]:
+        out: List[Request] = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.active and not self.queue:
+                break
+        return out
+
+    # -- internals ---------------------------------------------------------------
+    def _admit(self):
+        free = [s for s in range(self.slots) if s not in self.active]
+        while free and self.queue:
+            slot = free.pop(0)
+            r = self.queue.pop(0)
+            r.slot = slot
+            # prefill the prompt into this slot, token by token through the
+            # decode path (slot-local; avoids a second compiled prefill shape)
+            for i, tok in enumerate(r.prompt[:-1]):
+                t = np.zeros((self.slots, 1), np.int32)
+                t[slot, 0] = int(tok)
+                pos_vec = np.maximum(self.pos, 0)
+                pos_vec[slot] = i
+                _, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(t),
+                    jnp.asarray(pos_vec.astype(np.int32)))
+            self.pos[slot] = len(r.prompt) - 1
+            self.active[slot] = r

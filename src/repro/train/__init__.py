@@ -1,0 +1,1 @@
+"""Training substrate: optimizer, pjit train step, checkpointing, trainer."""

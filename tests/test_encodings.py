@@ -1,0 +1,95 @@
+"""Encoding/codec roundtrips — including hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encodings as enc
+
+RNG = np.random.default_rng(0)
+
+CASES = [
+    ("plain", np.arange(100, dtype=np.int64)),
+    ("plain", RNG.standard_normal(333).astype(np.float32)),
+    ("dict", np.repeat(np.array([7, -3, 10**12], np.int64), 50)),
+    ("dict", RNG.integers(0, 4, 1000).astype(np.int32)),
+    ("rle", np.repeat(np.arange(10, dtype=np.int64), 100)),
+    ("bitpack", RNG.integers(-50, 1000, 777).astype(np.int64)),
+    ("bitpack", RNG.integers(0, 2, 64).astype(bool)),
+    ("delta", np.cumsum(RNG.integers(-3, 9, 500)).astype(np.int64)),
+    ("delta", np.arange(0, 10**7, 1000, dtype=np.int64)),
+    ("bss", RNG.standard_normal(256).astype(np.float64)),
+    ("bss", RNG.standard_normal(100).astype(np.float16)),
+]
+
+
+@pytest.mark.parametrize("encoding,arr", CASES,
+                         ids=[f"{e}-{a.dtype}-{len(a)}" for e, a in CASES])
+def test_roundtrip(encoding, arr):
+    chosen, meta, payload = enc.encode(arr, encoding)
+    out = enc.decode(chosen, meta, payload, len(arr), arr.dtype)
+    np.testing.assert_array_equal(out, arr)
+
+
+@pytest.mark.parametrize("encoding", ["plain", "dict", "rle", "bitpack", "delta"])
+def test_empty(encoding):
+    arr = np.empty(0, np.int64)
+    chosen, meta, payload = enc.encode(arr, encoding)
+    out = enc.decode(chosen, meta, payload, 0, np.int64)
+    assert len(out) == 0
+
+
+@pytest.mark.parametrize("codec", ["none", "zlib", "lzma"])
+def test_codecs(codec):
+    data = bytes(range(256)) * 40
+    assert enc.decompress(enc.compress(data, codec), codec) == data
+
+
+def test_auto_picks_sane_encodings():
+    assert enc.choose_encoding(np.zeros(1000, np.int64)) in ("bitpack", "dict", "rle", "delta")
+    assert enc.choose_encoding(RNG.standard_normal(100)) == "bss"
+    assert enc.choose_encoding(np.ones(10, bool)) == "bitpack"
+
+
+def test_bitpack_saves_space():
+    arr = RNG.integers(0, 16, 10000).astype(np.int64)
+    _, _, payload = enc.encode(arr, "bitpack")
+    assert len(payload) <= 10000 * 4 // 8 + 16  # 4 bits/value
+
+
+@given(st.lists(st.integers(min_value=-2**62, max_value=2**62), max_size=300),
+       st.sampled_from(["plain", "dict", "bitpack", "delta", "rle", "auto"]))
+@settings(max_examples=60, deadline=None)
+def test_property_int_roundtrip(xs, encoding):
+    arr = np.array(xs, np.int64)
+    if encoding == "delta" and len(arr) == 0:
+        encoding = "plain"
+    chosen, meta, payload = enc.encode(arr, encoding)
+    out = enc.decode(chosen, meta, payload, len(arr), np.int64)
+    np.testing.assert_array_equal(out, arr)
+
+
+@given(st.lists(st.floats(allow_nan=False, allow_infinity=False,
+                          width=32), max_size=200),
+       st.sampled_from(["plain", "bss", "auto"]))
+@settings(max_examples=40, deadline=None)
+def test_property_float_roundtrip(xs, encoding):
+    arr = np.array(xs, np.float32)
+    chosen, meta, payload = enc.encode(arr, encoding)
+    out = enc.decode(chosen, meta, payload, len(arr), np.float32)
+    np.testing.assert_array_equal(out, arr)
+
+
+@given(st.integers(min_value=0, max_value=64),
+       st.lists(st.integers(min_value=0), min_size=1, max_size=100))
+@settings(max_examples=60, deadline=None)
+def test_property_pack_bits(k, vals):
+    vals = [v % (2**k if k else 1) for v in vals]
+    arr = np.array(vals, np.uint64)
+    buf = enc.pack_bits(arr, k)
+    out = enc.unpack_bits(buf, len(arr), k)
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_zigzag_involution():
+    v = np.array([-2**62, -1, 0, 1, 2**62], np.int64)
+    np.testing.assert_array_equal(enc.unzigzag(enc.zigzag(v)), v)

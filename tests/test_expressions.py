@@ -1,0 +1,135 @@
+"""Expression evaluation + the pushdown-soundness property:
+pruning must NEVER discard a chunk that contains a matching row."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Table, field
+from repro.core.statistics import compute_stats
+from repro.core.table import Column
+from repro import compute as pc
+
+
+def make_stats(values):
+    col, _ = __import__("repro.core.table", fromlist=["infer_column"]).infer_column(values)
+    return {"x": compute_stats(col)}
+
+
+class TestEvaluate:
+    def setup_method(self):
+        self.t = Table.from_pydict({
+            "x": np.array([1, 5, 3, 5, 9]),
+            "s": ["a", "b", "c", "b", "e"],
+        })
+
+    def test_comparisons(self):
+        assert (field("x") == 5).evaluate(self.t).tolist() == [False, True, False, True, False]
+        assert (field("x") > 3).evaluate(self.t).sum() == 3
+        assert (field("s") == "b").evaluate(self.t).sum() == 2
+
+    def test_logical(self):
+        m = ((field("x") > 2) & (field("s") != "b")).evaluate(self.t)
+        assert m.tolist() == [False, False, True, False, True]
+        m2 = (~(field("x") == 5)).evaluate(self.t)
+        assert m2.sum() == 3
+
+    def test_field_vs_field(self):
+        t = Table.from_pydict({"a": np.array([1, 2, 3]), "b": np.array([3, 2, 1])})
+        assert (field("a") < field("b")).evaluate(t).tolist() == [True, False, False]
+
+    def test_nulls_never_match(self):
+        t = Table.from_pylist([{"x": 1}, {"x": None}])
+        assert (field("x") == 1).evaluate(t).tolist() == [True, False]
+        assert (field("x") != 1).evaluate(t).tolist() == [False, False]
+        assert field("x").is_null().evaluate(t).tolist() == [False, True]
+
+    def test_unknown_column_raises(self):
+        with pytest.raises(KeyError):
+            (field("nope") == 1).evaluate(self.t)
+
+    def test_if_else_band_gap_pattern(self):
+        t = Table.from_pydict({"ind": np.array([0.0, 0.5, 2.0]),
+                               "dir": np.array([1.0, 1.5, 1.0])})
+        expr = pc.if_else(
+            (field("ind") != 0) & (field("ind") < field("dir")),
+            (field("ind") > 0.1) & (field("ind") < 3),
+            (field("dir") > 0.1) & (field("dir") < 3))
+        assert expr.evaluate(t).tolist() == [True, True, True]
+
+
+class TestPrune:
+    def test_eq_range(self):
+        st_ = make_stats([10, 20, 30])
+        assert (field("x") == 20).prune(st_)
+        assert not (field("x") == 99).prune(st_)
+
+    def test_bloom_prunes_within_range(self):
+        st_ = make_stats([10, 20, 30])
+        # 25 is inside [10,30] but bloom says absent (w.h.p.)
+        assert not (field("x") == 25).prune(st_)
+
+    def test_inequalities(self):
+        st_ = make_stats([10, 20, 30])
+        assert not (field("x") < 10).prune(st_)
+        assert (field("x") <= 10).prune(st_)
+        assert not (field("x") > 30).prune(st_)
+        assert (field("x") >= 30).prune(st_)
+
+    def test_unknown_column_is_conservative(self):
+        assert (field("y") == 1).prune(make_stats([1]))
+
+    def test_isin(self):
+        st_ = make_stats([10, 20, 30])
+        assert (field("x").isin([99, 20])).prune(st_)
+        assert not (field("x").isin([99, 98])).prune(st_)
+
+    def test_all_null_chunk_pruned_for_eq(self):
+        st_ = make_stats([None, None])
+        assert not (field("x") == 1).prune(st_)
+        assert field("x").is_null().prune(st_)
+
+
+@given(st.lists(st.one_of(st.integers(-1000, 1000), st.none()),
+                min_size=1, max_size=50),
+       st.integers(-1000, 1000),
+       st.sampled_from(["==", "<", ">", "<=", ">=", "!="]))
+@settings(max_examples=200, deadline=None)
+def test_property_prune_soundness(values, probe, op):
+    """If any row matches, prune() must return True (may-match)."""
+    t = Table.from_pylist([{"x": v} for v in values])
+    stats = {"x": compute_stats(t.column("x"))}
+    expr = {"==": field("x") == probe, "<": field("x") < probe,
+            ">": field("x") > probe, "<=": field("x") <= probe,
+            ">=": field("x") >= probe, "!=": field("x") != probe}[op]
+    mask = expr.evaluate(t)
+    if mask.any():
+        assert expr.prune(stats), (values, probe, op)
+
+
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=80),
+       st.lists(st.integers(0, 50), min_size=1, max_size=5))
+@settings(max_examples=100, deadline=None)
+def test_property_isin_soundness(values, probes):
+    t = Table.from_pylist([{"x": v} for v in values])
+    stats = {"x": compute_stats(t.column("x"))}
+    expr = field("x").isin(probes)
+    if expr.evaluate(t).any():
+        assert expr.prune(stats)
+
+
+class TestCompute:
+    def test_min_max(self):
+        t = Table.from_pydict({"e": np.array([3.0, -1.0, 7.0])})
+        assert pc.min_max(t["e"]) == {"min": -1.0, "max": 7.0}
+
+    def test_list_flatten_parent_indices(self):
+        t = Table.from_pylist([{"el": ["H", "O"]}, {"el": ["Si"]}])
+        flat = pc.list_flatten(t["el"])
+        idx = pc.list_parent_indices(t["el"])
+        assert flat.to_pylist() == ["H", "O", "Si"]
+        assert idx.tolist() == [0, 0, 1]
+
+    def test_filter_take(self):
+        t = Table.from_pydict({"x": np.arange(5)})
+        assert pc.filter(t, np.array([1, 0, 1, 0, 1], bool)).num_rows == 3
+        assert pc.take(t, [4, 0])["x"].to_pylist() == [4, 0]

@@ -1,0 +1,139 @@
+"""TPQ file format: roundtrip, projection + predicate pushdown, page pruning."""
+import numpy as np
+import pytest
+
+from repro.core import Table, TPQReader, write_table, field
+
+
+def norm(v):
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, dict):
+        return {k: norm(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [norm(x) for x in v]
+    return v
+
+
+@pytest.fixture
+def mixed_table():
+    n = 1000
+    rng = np.random.default_rng(7)
+    return Table.from_pydict({
+        "i": np.arange(n),
+        "f": rng.standard_normal(n),
+        "s": [f"name_{i % 37}" for i in range(n)],
+        "t": rng.standard_normal((n, 3, 3)),
+        "l": [[j for j in range(i % 5)] for i in range(n)],
+        "b": rng.integers(0, 2, n).astype(bool),
+    })
+
+
+def test_roundtrip_all_kinds(tmp_path, mixed_table):
+    p = str(tmp_path / "m.tpq")
+    write_table(p, mixed_table)
+    out = TPQReader(p).read()
+    assert norm(out.to_pylist()) == norm(mixed_table.to_pylist())
+
+
+def test_roundtrip_with_nulls(tmp_path):
+    t = Table.from_pylist([
+        {"a": 1, "s": "x"}, {"a": None, "s": None}, {"a": 3, "s": "z"}])
+    p = str(tmp_path / "n.tpq")
+    write_table(p, t)
+    assert TPQReader(p).read().to_pylist() == t.to_pylist()
+
+
+def test_projection_reads_fewer_bytes(tmp_path, mixed_table):
+    p = str(tmp_path / "m.tpq")
+    write_table(p, mixed_table)
+    rd = TPQReader(p)
+    all_bytes = rd.read_row_group_bytes(0)
+    i_bytes = rd.read_row_group_bytes(0, columns=["i"])
+    assert i_bytes < all_bytes / 5  # tensor column dominates
+
+
+def test_predicate_pushdown_skips_row_groups(tmp_path):
+    n = 100_000
+    t = Table.from_pydict({"x": np.arange(n)})
+    p = str(tmp_path / "rg.tpq")
+    write_table(p, t, row_group_rows=10_000, page_rows=2_000)
+    rd = TPQReader(p)
+    assert len(rd.row_groups) == 10
+    out = rd.read(filter_expr=field("x") == 54_321)
+    assert out["x"].to_pylist() == [54_321]
+    # stats prune 9 of 10 row groups
+    pruned = sum(
+        (field("x") == 54_321).prune(rd.row_group_stats(i))
+        for i in range(10))
+    assert pruned == 1
+
+
+def test_page_pruning_matches_full_scan(tmp_path):
+    rng = np.random.default_rng(3)
+    n = 50_000
+    t = Table.from_pydict({"k": rng.integers(0, 10_000, n), "v": rng.standard_normal(n)})
+    p = str(tmp_path / "pp.tpq")
+    write_table(p, t, row_group_rows=50_000, page_rows=1_000)
+    rd = TPQReader(p)
+    expr = field("k") == 1234
+    pruned = rd.read(filter_expr=expr, prune_pages=True)
+    full = rd.read(filter_expr=expr, prune_pages=False)
+    assert norm(pruned.to_pylist()) == norm(full.to_pylist())
+
+
+def test_filter_column_not_projected_still_works(tmp_path, mixed_table):
+    p = str(tmp_path / "m.tpq")
+    write_table(p, mixed_table)
+    out = TPQReader(p).read(columns=["s"], filter_expr=field("i") < 3)
+    assert out.column_names == ["s"] and out.num_rows == 3
+
+
+def test_string_filter(tmp_path, mixed_table):
+    p = str(tmp_path / "m.tpq")
+    write_table(p, mixed_table)
+    out = TPQReader(p).read(columns=["i"], filter_expr=field("s") == "name_5")
+    assert all(i % 37 == 5 for i in out["i"].to_pylist())
+
+
+def test_empty_table_roundtrip(tmp_path):
+    t = Table.from_pydict({"a": np.empty(0, np.int64)})
+    p = str(tmp_path / "e.tpq")
+    write_table(p, t)
+    rd = TPQReader(p)
+    assert rd.num_rows == 0
+    assert rd.read().num_rows == 0
+
+
+def test_corrupt_file_detected(tmp_path):
+    p = str(tmp_path / "c.tpq")
+    write_table(p, Table.from_pydict({"a": np.arange(5)}))
+    with open(p, "r+b") as fh:
+        fh.seek(-2, 2)
+        fh.write(b"xx")
+    with pytest.raises(IOError):
+        TPQReader(p)
+
+
+def test_field_level_encoding_codec_override(tmp_path):
+    n = 10_000
+    t = Table.from_pydict({"a": np.arange(n), "b": np.arange(n)})
+    p1, p2 = str(tmp_path / "1.tpq"), str(tmp_path / "2.tpq")
+    write_table(p1, t, field_encodings={"a": "plain", "b": "plain"},
+                field_codecs={"a": "none", "b": "none"})
+    write_table(p2, t, field_encodings={"a": "delta", "b": "delta"})
+    import os
+    assert os.path.getsize(p2) < os.path.getsize(p1) / 4
+    np.testing.assert_array_equal(TPQReader(p2).read()["a"].values, t["a"].values)
+
+
+def test_isin_and_compound_filters(tmp_path):
+    t = Table.from_pydict({"x": np.arange(100), "y": np.arange(100) % 7})
+    p = str(tmp_path / "f.tpq")
+    write_table(p, t)
+    rd = TPQReader(p)
+    out = rd.read(filter_expr=(field("x") < 50) & (field("y").isin([0, 1])))
+    xs = out["x"].to_pylist()
+    assert all(x < 50 and x % 7 in (0, 1) for x in xs)
+    out2 = rd.read(filter_expr=(field("x") >= 98) | (field("x") < 1))
+    assert sorted(out2["x"].to_pylist()) == [0, 98, 99]

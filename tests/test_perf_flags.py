@@ -1,0 +1,64 @@
+"""§Perf optimization flags must not change numerics (only shardings/dtypes
+of intermediates).  Single-device: constraints are no-ops, dtype flags are
+exercised for correctness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import AttnCfg, Model, ModelConfig
+
+BASE = ModelConfig("tiny", "dense", 2, 64, 128, 128,
+                   attn=AttnCfg(4, 2, 16), remat=False)
+RNG = np.random.default_rng(7)
+
+
+def _loss(cfg, params, batch):
+    return float(Model(cfg).loss(params, batch)[0])
+
+
+@pytest.fixture
+def setup():
+    model = Model(BASE)
+    params = model.init(jax.random.key(0))
+    batch = {"tokens": jnp.asarray(RNG.integers(0, 128, (2, 32)), jnp.int32)}
+    return params, batch
+
+
+def test_scores_bf16_close_to_baseline(setup):
+    params, batch = setup
+    base = _loss(BASE, params, batch)
+    opt = _loss(dataclasses.replace(BASE, attn_scores_bf16=True), params, batch)
+    assert abs(base - opt) < 0.05, (base, opt)
+
+
+def test_rmsnorm_bf16_close_to_baseline(setup):
+    params, batch = setup
+    base = _loss(BASE, params, batch)
+    opt = _loss(dataclasses.replace(BASE, rmsnorm_bf16=True), params, batch)
+    assert abs(base - opt) < 0.05, (base, opt)
+
+
+def test_shard_flags_noop_without_mesh(setup):
+    params, batch = setup
+    base = _loss(BASE, params, batch)
+    opt = _loss(dataclasses.replace(BASE, shard_activations=True,
+                                    attn_batch_shard=True), params, batch)
+    assert base == opt  # exact: constraints are identity without a mesh
+
+
+def test_all_flags_decode_parity(setup):
+    params, batch = setup
+    cfg2 = dataclasses.replace(BASE, attn_scores_bf16=True, rmsnorm_bf16=True,
+                               shard_activations=True)
+    m1, m2 = Model(BASE), Model(cfg2)
+    _, c1 = m1.prefill(params, batch, cache_len=40)
+    _, c2 = m2.prefill(params, batch, cache_len=40)
+    l1, _ = m1.decode_step(params, c1, batch["tokens"][:, :1], jnp.int32(32))
+    l2, _ = m2.decode_step(params, c2, batch["tokens"][:, :1], jnp.int32(32))
+    a = np.asarray(l1, np.float32)
+    b = np.asarray(l2, np.float32)
+    assert (a.argmax(-1) == b.argmax(-1)).all()
+    np.testing.assert_allclose(a, b, rtol=0.1, atol=0.2)

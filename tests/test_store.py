@@ -1,0 +1,213 @@
+"""ParquetDB store: CRUD, schema evolution, normalize, nested rebuild."""
+import numpy as np
+import pytest
+
+from repro.core import (LoadConfig, NormalizeConfig, ParquetDB, Schema,
+                        Table, field)
+
+
+@pytest.fixture
+def db(tmp_path):
+    return ParquetDB(str(tmp_path / "db"), "db")
+
+
+class TestCreate:
+    def test_id_generation_monotonic(self, db):
+        ids1 = db.create([{"a": 1}, {"a": 2}])
+        ids2 = db.create([{"a": 3}])
+        assert ids1.tolist() == [0, 1] and ids2.tolist() == [2]
+
+    def test_ids_continue_after_delete(self, db):
+        db.create([{"a": 1}, {"a": 2}])
+        db.delete(ids=[1])
+        ids = db.create([{"a": 3}])
+        assert ids.tolist() == [2]  # never reused
+
+    def test_schema_evolution_backfills_null(self, db):
+        db.create([{"a": 1}])
+        db.create([{"a": 2, "b": "new"}])
+        rows = db.read().to_pylist()
+        assert rows[0]["b"] is None and rows[1]["b"] == "new"
+
+    def test_numeric_widening(self, db):
+        db.create([{"x": 1}])
+        db.create([{"x": 2.5}])
+        assert db.schema["x"].dtype.code == "f8"
+        assert db.read(columns=["x"]).to_pydict()["x"] == [1.0, 2.5]
+
+    def test_create_from_pydict_and_table(self, db):
+        db.create({"v": np.arange(4)})
+        db.create(Table.from_pydict({"v": np.arange(2)}))
+        assert db.n_rows == 6
+
+    def test_irreconcilable_schema_fails_cleanly(self, db):
+        db.create([{"x": 1}])
+        with pytest.raises(TypeError):
+            db.create([{"x": "string now"}])
+        assert db.n_rows == 1  # nothing committed
+
+    def test_table_metadata(self, db):
+        db.create([{"a": 1}], metadata={"source": "api"})
+        assert db.schema.metadata.get("source") == "api"
+
+
+class TestRead:
+    def test_ids_columns(self, db):
+        db.create([{"a": i, "b": -i} for i in range(10)])
+        t = db.read(ids=[3, 7], columns=["a"])
+        assert sorted(t.to_pydict()["a"]) == [3, 7]
+
+    def test_exclude_columns(self, db):
+        db.create([{"a": 1, "b": 2, "c": 3}])
+        t = db.read(columns=["b"], include_cols=False)
+        assert t.column_names == ["a", "c", "id"]
+
+    def test_filters_combined_with_and(self, db):
+        db.create([{"x": i, "y": i % 3} for i in range(30)])
+        t = db.read(filters=[field("x") < 10, field("y") == 1])
+        assert t.to_pydict()["x"] == [1, 4, 7]
+
+    def test_batches_generator(self, db):
+        db.create({"x": np.arange(1000)})
+        sizes = [b.num_rows for b in db.read(load_format="batches", batch_size=300)]
+        assert sizes == [300, 300, 300, 100]
+
+    def test_dataset_handle(self, db):
+        db.create({"x": np.arange(10)})
+        ds = db.read(load_format="dataset", columns=["x"])
+        assert ds.to_table().num_rows == 10
+
+    def test_dotted_parent_selects_children(self, db):
+        db.create([{"s": {"a": 1, "b": 2}}])
+        t = db.read(columns=["s"])
+        assert set(t.column_names) == {"s.a", "s.b"}
+
+    def test_empty_db_read(self, db):
+        assert db.read().num_rows == 0
+
+    def test_no_threads(self, db):
+        db.create({"x": np.arange(10)})
+        t = db.read(load_config=LoadConfig(use_threads=False))
+        assert t.num_rows == 10
+
+
+class TestUpdate:
+    def test_basic_update(self, db):
+        db.create([{"a": 1, "b": "x"}, {"a": 2, "b": "y"}])
+        n = db.update([{"id": 0, "a": 100}])
+        assert n == 1
+        rows = db.read().to_pylist()
+        assert rows[0]["a"] == 100 and rows[0]["b"] == "x"
+
+    def test_update_adds_new_field(self, db):
+        db.create([{"a": 1}, {"a": 2}])
+        db.update([{"id": 1, "z": 9.5}])
+        rows = db.read(columns=["z"]).to_pydict()["z"]
+        assert rows == [None, 9.5]
+
+    def test_update_requires_key(self, db):
+        db.create([{"a": 1}])
+        with pytest.raises(ValueError):
+            db.update([{"a": 5}])
+
+    def test_update_nonexistent_id_noop(self, db):
+        db.create([{"a": 1}])
+        assert db.update([{"id": 999, "a": 5}]) == 0
+
+    def test_update_by_custom_key(self, db):
+        db.create([{"k": "u1", "v": 1}, {"k": "u2", "v": 2}])
+        n = db.update([{"k": "u2", "v": 20}], update_keys="k")
+        assert n == 1
+        assert db.read(filters=[field("k") == "u2"]).to_pydict()["v"] == [20]
+
+    def test_bulk_update(self, db):
+        db.create({"x": np.zeros(5000, np.int64)})
+        n = db.update({"id": np.arange(0, 5000, 2),
+                       "x": np.ones(2500, np.int64)})
+        assert n == 2500
+        assert db.read(columns=["x"]).column("x").values.sum() == 2500
+
+    def test_last_write_wins(self, db):
+        db.create([{"a": 0}])
+        db.update([{"id": 0, "a": 1}, {"id": 0, "a": 2}])
+        assert db.read(columns=["a"]).to_pydict()["a"] == [2]
+
+
+class TestDelete:
+    def test_delete_rows_by_id(self, db):
+        db.create([{"a": i} for i in range(5)])
+        assert db.delete(ids=[1, 3]) == 2
+        assert db.read(columns=["a"]).to_pydict()["a"] == [0, 2, 4]
+
+    def test_delete_by_filter(self, db):
+        db.create([{"a": i} for i in range(10)])
+        assert db.delete(filters=[field("a") >= 5]) == 5
+        assert db.n_rows == 5
+
+    def test_delete_columns(self, db):
+        db.create([{"a": 1, "b": 2}])
+        db.delete(columns=["b"])
+        assert "b" not in db.schema
+
+    def test_cannot_delete_id(self, db):
+        db.create([{"a": 1}])
+        with pytest.raises(ValueError):
+            db.delete(columns=["id"])
+
+    def test_row_and_column_mutually_exclusive(self, db):
+        db.create([{"a": 1}])
+        with pytest.raises(ValueError):
+            db.delete(ids=[0], columns=["a"])
+
+
+class TestNormalize:
+    def test_normalize_balances_files(self, db):
+        for _ in range(8):
+            db.create({"x": np.arange(100)})
+        assert db.n_files == 8
+        db.normalize(NormalizeConfig(max_rows_per_file=400))
+        assert db.n_files == 2
+        assert db.n_rows == 800
+
+    def test_normalize_during_create(self, db):
+        db.create({"x": np.arange(10)})
+        db.create({"x": np.arange(10)}, normalize_dataset=True,
+                  normalize_config=NormalizeConfig(max_rows_per_file=100))
+        assert db.n_files == 1
+
+    def test_data_survives_normalize(self, db):
+        db.create([{"s": "abc", "v": [1.0, 2.0]}, {"s": "def", "v": [3.0, 4.0]}])
+        db.normalize()
+        rows = db.read().to_pylist()
+        assert rows[0]["s"] == "abc" and rows[1]["v"].tolist() == [3.0, 4.0]
+
+
+class TestNestedRebuild:
+    def test_rebuild_and_cache(self, db, tmp_path):
+        db.create([{"structure": {"sites": [{"xyz": [0.0, 0.0]}],
+                                  "lattice": {"a": 1.0}}, "e": -1.0}])
+        t = db.read(columns=["structure"], rebuild_nested_struct=True)
+        rec = t.to_pylist(rebuild_nested=True)[0]
+        assert rec["structure"]["lattice"]["a"] == 1.0
+        # cached second read
+        t2 = db.read(columns=["structure"], rebuild_nested_struct=True)
+        assert t2.num_rows == 1
+
+    def test_rebuild_from_scratch_after_update(self, db):
+        db.create([{"d": {"spg": 1}}])
+        db.read(rebuild_nested_struct=True)
+        db.update([{"id": 0, "d.spg": 204}])
+        t = db.read(rebuild_nested_struct=True, rebuild_nested_from_scratch=True)
+        assert t.to_pylist(rebuild_nested=True)[0]["d"]["spg"] == 204
+
+
+class TestMetadata:
+    def test_set_metadata(self, db):
+        db.create([{"a": 1}])
+        db.set_metadata({"owner": "test"})
+        assert db.metadata["owner"] == "test"
+
+    def test_field_metadata(self, db):
+        db.create([{"a": 1}])
+        db.set_field_metadata("a", {"unit": "eV"})
+        assert db.schema["a"].metadata["unit"] == "eV"

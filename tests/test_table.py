@@ -1,0 +1,115 @@
+"""Unit tests: in-memory Table, type inference, nested flattening."""
+import numpy as np
+import pytest
+
+from repro.core import Table, concat_tables
+from repro.core.nested import flatten_record, rebuild_record
+from repro.core.table import Column, infer_column
+
+
+def norm(v):
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, dict):
+        return {k: norm(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [norm(x) for x in v]
+    return v
+
+
+class TestInference:
+    def test_ints(self):
+        col, meta = infer_column([1, 2, None, 4])
+        assert col.dtype.code == "i8" and meta is None
+        assert col.to_pylist() == [1, 2, None, 4]
+
+    def test_mixed_int_float_promotes(self):
+        col, _ = infer_column([1, 2.5])
+        assert col.dtype.code == "f8"
+
+    def test_bool_not_int(self):
+        col, _ = infer_column([True, False])
+        assert col.dtype.code == "b1"
+
+    def test_strings_with_null(self):
+        col, _ = infer_column(["a", None, "ccc"])
+        assert col.to_pylist() == ["a", None, "ccc"]
+
+    def test_fixed_shape_lists_become_tensor(self):
+        col, _ = infer_column([[1.0, 2.0], [3.0, 4.0]])
+        assert col.dtype.kind == "tensor" and col.dtype.shape == (2,)
+
+    def test_ragged_lists(self):
+        col, _ = infer_column([[1, 2], [3]], )
+        assert col.dtype.kind == "list"
+        assert col.to_pylist() == [[1, 2], [3]]
+
+    def test_forced_ragged(self):
+        col, _ = infer_column([[1, 2], [3, 4]], ragged=True)
+        assert col.dtype.kind == "list"
+
+    def test_list_of_strings(self):
+        col, _ = infer_column([["a", "b"], ["c"], None])
+        assert col.to_pylist() == [["a", "b"], ["c"], None]
+
+    def test_dict_fallback_serializes(self):
+        col, meta = infer_column([{"a": 1}, {"b": [2, 3]}])
+        assert meta == {"serialized": "json"}
+
+    def test_nd_tensor(self):
+        col, _ = infer_column([np.eye(3), np.ones((3, 3))])
+        assert col.dtype.shape == (3, 3)
+
+
+class TestNested:
+    def test_flatten_rebuild_roundtrip(self):
+        rec = {"a": 1, "b": {"c": 2, "d": {"e": "x"}}, "f": [1, 2]}
+        flat = flatten_record(rec)
+        assert flat == {"a": 1, "b.c": 2, "b.d.e": "x", "f": [1, 2]}
+        assert rebuild_record(flat) == rec
+
+    def test_empty_struct_dummy(self):
+        flat = flatten_record({"a": {}})
+        assert flat == {"a.dummy_variable": True}
+        assert rebuild_record(flat) == {"a": {}}
+
+
+class TestTable:
+    def test_from_pylist_missing_fields_null(self):
+        t = Table.from_pylist([{"a": 1}, {"b": "x"}])
+        assert norm(t.to_pylist()) == [{"a": 1, "b": None}, {"a": None, "b": "x"}]
+
+    def test_columns_alphabetical(self):
+        t = Table.from_pylist([{"z": 1, "a": 2, "m": 3}])
+        assert t.column_names == ["a", "m", "z"]
+
+    def test_take_slice_filter(self):
+        t = Table.from_pydict({"x": np.arange(10), "s": [f"r{i}" for i in range(10)]})
+        assert t.take(np.array([3, 1]))["x"].to_pylist() == [3, 1]
+        assert t.slice(2, 4)["s"].to_pylist() == ["r2", "r3"]
+        assert t.filter_mask(np.arange(10) % 2 == 0).num_rows == 5
+
+    def test_concat_unifies_schema(self):
+        a = Table.from_pylist([{"x": 1}])
+        b = Table.from_pylist([{"x": 2.5, "y": "n"}])
+        c = concat_tables([a, b])
+        assert c.schema["x"].dtype.code == "f8"
+        assert norm(c.to_pylist()) == [{"x": 1.0, "y": None}, {"x": 2.5, "y": "n"}]
+
+    def test_list_take_roundtrip(self):
+        t = Table.from_pylist([{"l": [1, 2, 3]}, {"l": []}, {"l": [9]}])
+        out = t.take(np.array([2, 0]))["l"].to_pylist()
+        assert out == [[9], [1, 2, 3]]
+
+    def test_ragged_table_rejected(self):
+        from repro.core.schema import Field, Schema
+        from repro.core.dtypes import DType
+        with pytest.raises(ValueError):
+            Table(Schema([Field("a", DType.numeric("i8")),
+                          Field("b", DType.numeric("i8"))]),
+                  {"a": Column.numeric(np.arange(3)),
+                   "b": Column.numeric(np.arange(4))})
+
+    def test_rebuild_nested_in_pylist(self):
+        t = Table.from_pylist([{"a": {"b": 1, "c": {"d": 2}}}])
+        assert t.to_pylist(rebuild_nested=True) == [{"a": {"b": 1, "c": {"d": 2}}}]

@@ -1,0 +1,237 @@
+"""Training substrate: checkpoint store, trainer fault tolerance, data
+pipeline, serve engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ParquetDB
+from repro.launch.mesh import make_mesh
+from repro.models import AttnCfg, Model, ModelConfig
+from repro.serve.engine import ServeEngine
+from repro.train import trainer as trn
+from repro.train.checkpoint import CheckpointStore
+from repro.train.optimizer import OptConfig, init_opt_state, apply_updates
+from repro.data.tokenstore import TokenStore
+from repro.data.sharded_loader import ShardedLoader, WorkQueue, device_feed
+
+TINY = ModelConfig("tiny", "dense", 2, 64, 128, 256,
+                   attn=AttnCfg(4, 2, 16), remat=False)
+
+
+@pytest.fixture
+def model():
+    return Model(TINY)
+
+
+@pytest.fixture
+def params(model):
+    return model.init(jax.random.key(0))
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, params):
+        st = CheckpointStore(str(tmp_path))
+        st.save(5, {"params": params})
+        back = st.restore(like={"params": jax.tree.map(jnp.zeros_like, params)})
+        same = jax.tree.map(lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
+                            {"params": params}, back)
+        assert all(jax.tree.leaves(same))
+
+    def test_partial_restore_projection(self, tmp_path, params):
+        st = CheckpointStore(str(tmp_path))
+        st.save(1, {"params": params})
+        arrays = st.restore(1, paths=["params/final_norm"])
+        assert list(arrays) == ["params/final_norm"]
+
+    def test_latest_and_gc(self, tmp_path, params):
+        st = CheckpointStore(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            st.save(s, {"p": jnp.zeros(3)})
+        assert st.latest_step() == 4
+        assert st.steps() == [3, 4]
+
+    def test_schema_evolution_new_leaf_keeps_init(self, tmp_path):
+        st = CheckpointStore(str(tmp_path))
+        st.save(1, {"a": jnp.ones(4)})
+        like = {"a": jnp.zeros(4), "b": jnp.full(2, 7.0)}   # 'b' added later
+        back = st.restore(1, like=like)
+        assert np.asarray(back["a"]).sum() == 4
+        assert np.asarray(back["b"]).tolist() == [7.0, 7.0]
+
+    def test_async_save(self, tmp_path, params):
+        st = CheckpointStore(str(tmp_path))
+        th = st.async_save(9, {"params": params})
+        th.join()
+        assert st.latest_step() == 9
+
+    def test_elastic_restore_other_mesh(self, tmp_path, model, params):
+        st = CheckpointStore(str(tmp_path))
+        st.save(3, {"params": params})
+        mesh = make_mesh((1, 1), ("data", "model"))
+        from repro.train.trainer import restore_elastic
+        restored, _ = restore_elastic(st, model, mesh)
+        ok = jax.tree.map(lambda a, b: bool(np.allclose(np.asarray(a),
+                                                        np.asarray(b))),
+                          params, restored)
+        assert all(jax.tree.leaves(ok))
+
+
+class TestOptimizer:
+    def test_adamw_moves_params(self, params):
+        st = init_opt_state(params)
+        g = jax.tree.map(jnp.ones_like, params)
+        p2, st2, stats = apply_updates(params, g, st, OptConfig())
+        assert int(st2["step"]) == 1
+        assert float(stats["grad_norm"]) > 0
+        diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                             params, p2)
+        assert max(jax.tree.leaves(diffs)) > 0
+
+    def test_clipping(self, params):
+        st = init_opt_state(params)
+        g = jax.tree.map(lambda p: jnp.full_like(p, 1e6), params)
+        _, _, stats = apply_updates(params, g, st, OptConfig(clip_norm=1.0))
+        assert float(stats["grad_norm"]) > 1.0  # reported pre-clip
+
+
+class TestTrainerFaultTolerance:
+    def _mk(self, tmp_path, model):
+        mesh = make_mesh((1, 1), ("data", "model"))
+        return trn.Trainer(model, mesh,
+                           OptConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+                           ckpt_dir=str(tmp_path / "ckpt"),
+                           metrics_dir=str(tmp_path / "metrics"),
+                           ckpt_every=3)
+
+    def _batches(self):
+        rng = np.random.default_rng(0)
+        while True:
+            yield {"tokens": jnp.asarray(rng.integers(0, 256, (4, 32)),
+                                         jnp.int32)}
+
+    def test_recovers_from_injected_fault(self, tmp_path, model):
+        t = self._mk(tmp_path, model)
+        calls = {"n": 0}
+
+        def fault(step):
+            if step == 5 and calls["n"] == 0:
+                calls["n"] += 1
+                raise RuntimeError("simulated node failure")
+        trn.FAULT_HOOK = fault
+        try:
+            res = t.run(self._batches(), steps=8)
+        finally:
+            trn.FAULT_HOOK = None
+        assert res["steps"] == 8 and calls["n"] == 1
+
+    def test_gives_up_after_max_retries(self, tmp_path, model):
+        t = self._mk(tmp_path, model)
+        t.max_retries = 1
+        trn.FAULT_HOOK = lambda step: (_ for _ in ()).throw(
+            RuntimeError("always fails"))
+        try:
+            with pytest.raises(RuntimeError):
+                t.run(self._batches(), steps=3)
+        finally:
+            trn.FAULT_HOOK = None
+
+    def test_restart_resumes_from_checkpoint(self, tmp_path, model):
+        t = self._mk(tmp_path, model)
+        t.run(self._batches(), steps=6)
+        assert t.store.latest_step() == 6
+        t2 = self._mk(tmp_path, model)
+        res = t2.run(self._batches(), steps=9)   # resumes at 6
+        assert res["steps"] == 9
+        assert len(res["history"]) == 3
+
+    def test_metrics_logged_to_columnar_store(self, tmp_path, model):
+        t = self._mk(tmp_path, model)
+        t.run(self._batches(), steps=4, log_every=1)
+        db = ParquetDB(str(tmp_path / "metrics"), "metrics")
+        rows = db.read(columns=["step", "loss"]).to_pydict()
+        assert len(rows["step"]) == 4
+        assert all(np.isfinite(rows["loss"]))
+
+
+class TestDataPipeline:
+    def test_tokenstore_pack_and_count(self, tmp_path):
+        ts = TokenStore(str(tmp_path / "t"), seq_len=16, vocab=100)
+        n = ts.append_documents([np.arange(40), np.arange(50)])
+        assert n == (40 + 50) // 16
+        assert ts.n_sequences == n
+
+    def test_quality_filter_pushdown(self, tmp_path):
+        ts = TokenStore(str(tmp_path / "t"), seq_len=8, vocab=100)
+        rng = np.random.default_rng(0)
+        ts.append_documents([rng.integers(0, 100, 800)],
+                            quality=np.linspace(0, 1, 100))
+        got = sum(b.shape[0] for b in ts.read_batches(
+            4, min_quality=0.5, drop_remainder=False))
+        assert 0 < got < 100
+
+    def test_loader_ranks_partition_disjoint_complete(self, tmp_path):
+        ts = TokenStore(str(tmp_path / "t"), seq_len=4, vocab=1000)
+        rng = np.random.default_rng(1)
+        ts.append_documents([rng.integers(0, 1000, 4 * 64)])
+        seen = []
+        for rank in range(4):
+            ld = ShardedLoader(ts.db, batch_size=4, rank=rank, world=4,
+                               steal=False, prefetch=1)
+            for b in ld.epoch(0):
+                seen.extend(map(tuple, b.tolist()))
+        assert len(seen) == len(set(seen))  # disjoint
+
+    def test_work_stealing_covers_all(self):
+        wq = WorkQueue(list(range(20)), rank=0, world=4)
+        got = []
+        while True:
+            i = wq.next()
+            if i is None:
+                break
+            got.append(i)
+        # rank 0 owns 5 items but steals the 15 others from the tail
+        assert sorted(got) == list(range(20))
+
+    def test_device_feed_roundtrip(self):
+        tok = np.random.default_rng(0).integers(0, 50000, (2, 64)).astype(np.int32)
+        out = device_feed(tok, 50000)
+        np.testing.assert_array_equal(np.asarray(out), tok)
+
+
+class TestServeEngine:
+    def test_batched_requests_complete(self, model, params):
+        eng = ServeEngine(model, params, slots=2, max_seq=64)
+        rng = np.random.default_rng(0)
+        for _ in range(5):
+            eng.submit(rng.integers(0, 256, 4).astype(np.int32),
+                       max_new_tokens=6)
+        done = eng.run_to_completion()
+        assert len(done) == 5
+        assert all(len(r.out_tokens) == 6 for r in done)
+
+    def test_batching_matches_single_request(self, model, params):
+        prompt = np.array([5, 6, 7], np.int32)
+        eng1 = ServeEngine(model, params, slots=1, max_seq=32)
+        eng1.submit(prompt, max_new_tokens=5)
+        ref = eng1.run_to_completion()[0].out_tokens
+
+        eng2 = ServeEngine(model, params, slots=3, max_seq=32)
+        rng = np.random.default_rng(1)
+        eng2.submit(rng.integers(0, 256, 5).astype(np.int32), max_new_tokens=5)
+        rid = eng2.submit(prompt, max_new_tokens=5)
+        eng2.submit(rng.integers(0, 256, 2).astype(np.int32), max_new_tokens=5)
+        done = {r.rid: r.out_tokens for r in eng2.run_to_completion()}
+        assert done[rid] == ref
+
+    def test_eos_stops_early(self, model, params):
+        eng = ServeEngine(model, params, slots=1, max_seq=64)
+        # run once to find the greedy first token, then use it as "eos"
+        eng.submit(np.array([1, 2], np.int32), max_new_tokens=4)
+        first = eng.run_to_completion()[0].out_tokens[0]
+        eng2 = ServeEngine(model, params, slots=1, max_seq=64)
+        eng2.submit(np.array([1, 2], np.int32), max_new_tokens=8, eos_id=first)
+        out = eng2.run_to_completion()[0]
+        assert len(out.out_tokens) == 1
