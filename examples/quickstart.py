@@ -1,6 +1,10 @@
 """Quickstart: the paper's §4.7 walkthrough, verbatim against repro.core.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+Also demonstrates ``db.explain()`` — the scan planner's pruning report
+(files/row groups skipped via footer statistics, no index needed).  See
+README.md and docs/ARCHITECTURE.md for the full picture.
 """
 import os
 import shutil
@@ -39,6 +43,13 @@ print(db.read(columns=["name"]).to_pylist())
 # Filters: predicate pushdown via field expressions (AND-combined list)
 adults = db.read(columns=["name", "age"], filters=[field("age") >= 30])
 print("age>=30:", adults.to_pylist())
+
+# explain(): how would this read be pruned?  Footer stats only — no decode.
+print(db.explain(columns=["name", "age"], filters=[field("age") >= 30]))
+
+# An impossible predicate scans nothing at all
+report = db.explain(filters=[field("age") > 200])
+print("files scanned for age>200:", report.counters.files_scanned)
 
 # Normalize file/row-group layout
 db.normalize(NormalizeConfig(max_rows_per_file=500))

@@ -9,11 +9,13 @@ from .schema import Field, ID_COLUMN, Schema
 from .table import Column, Table, concat_tables
 from .expressions import Expr, field
 from .fileformat import TPQReader, TPQWriter, read_table, write_table
+from .scan import FragmentPlan, ScanCounters, ScanPlan, ScanReport
 from .store import Dataset, LoadConfig, NormalizeConfig, ParquetDB
 
 __all__ = [
     "DType", "Field", "ID_COLUMN", "Schema", "Column", "Table",
     "concat_tables", "Expr", "field", "TPQReader", "TPQWriter",
-    "read_table", "write_table", "Dataset", "LoadConfig",
+    "read_table", "write_table", "FragmentPlan", "ScanCounters",
+    "ScanPlan", "ScanReport", "Dataset", "LoadConfig",
     "NormalizeConfig", "ParquetDB",
 ]

@@ -43,6 +43,17 @@ class Expr:
     def columns(self) -> List[str]:
         raise NotImplementedError
 
+    def negate(self) -> Optional["Expr"]:
+        """Logical negation under this engine's null semantics, or None.
+
+        ``evaluate`` treats null as non-matching for comparisons, so the
+        negation of ``x == v`` is ``(x != v) | x.is_null()`` — rows where x
+        is null DO match ``~(x == v)``.  Used by ``Not.prune`` to push
+        negations down to stats-prunable leaves; None means "cannot be
+        expressed prunably", in which case pruning stays conservative.
+        """
+        return None
+
 
 def _column_values(table: Table, name: str):
     """Numeric -> ndarray; string -> object ndarray; else error."""
@@ -99,6 +110,9 @@ class Comparison(Expr):
             if self.op == "==":
                 return st.may_contain(v)
             if self.op == "!=":
+                # NaN rows match "!=" but are invisible to min/max
+                if st.nan_count:
+                    return True
                 return not (lo == hi == v)
             if self.op == "<":
                 return lo < v
@@ -117,6 +131,21 @@ class Comparison(Expr):
         if isinstance(self.value, FieldRef):
             cols.append(self.value.name)
         return cols
+
+    _NEG_OP = {"==": "!=", "!=": "==", "<": ">=", "<=": ">",
+               ">": "<=", ">=": "<"}
+
+    def negate(self) -> Optional[Expr]:
+        if isinstance(self.value, FieldRef):
+            return None  # col-vs-col has no pushdown either way
+        # null rows match the negation (evaluate masks them out of `self`)
+        neg = Or(Comparison(self.name, self._NEG_OP[self.op], self.value),
+                 IsNull(self.name))
+        if self.op in ("<", "<=", ">", ">="):
+            # NaN rows also match ~(x < v) etc. but the negated comparison's
+            # min/max prune cannot see them — add an explicit NaN term
+            neg = Or(neg, IsNaN(self.name))
+        return neg
 
     def __repr__(self):
         return f"({self.name} {self.op} {self.value!r})"
@@ -148,24 +177,60 @@ class IsIn(Expr):
 
 class IsNull(Expr):
     def __init__(self, name: str, *, negate: bool = False):
-        self.name, self.negate = name, negate
+        # stored as _negated so the attribute doesn't shadow Expr.negate()
+        self.name, self._negated = name, negate
 
     def evaluate(self, table: Table) -> np.ndarray:
         col = table.column(self.name)
         valid = (np.ones(len(col), bool) if col.validity is None
                  else col.validity.copy())
-        return valid if self.negate else ~valid
+        return valid if self._negated else ~valid
 
     def prune(self, stats: StatsMap) -> bool:
         st = stats.get(self.name)
         if st is None:
             return True
-        if self.negate:  # is_valid
+        if self._negated:  # is_valid
             return st.null_count < st.num_values
         return st.null_count > 0
 
     def columns(self):
         return [self.name]
+
+    def negate(self) -> Optional[Expr]:
+        return IsNull(self.name, negate=not self._negated)
+
+
+class IsNaN(Expr):
+    """Matches float NaN rows.
+
+    Produced by ``Comparison.negate`` for ordering ops: NaN rows match the
+    negation of any ordering comparison yet are excluded from min/max stats,
+    so the negated expression carries this term to keep pruning sound.
+    Prunes against ``ColumnStats.nan_count``.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def evaluate(self, table: Table) -> np.ndarray:
+        vals, validity = _column_values(table, self.name)
+        if getattr(vals.dtype, "kind", None) != "f":
+            return np.zeros(len(vals), bool)
+        mask = np.isnan(vals)
+        if validity is not None:
+            mask &= validity
+        return mask
+
+    def prune(self, stats: StatsMap) -> bool:
+        st = stats.get(self.name)
+        return True if st is None else st.nan_count > 0
+
+    def columns(self):
+        return [self.name]
+
+    def __repr__(self):
+        return f"isnan({self.name})"
 
 
 class And(Expr):
@@ -180,6 +245,10 @@ class And(Expr):
 
     def columns(self):
         return self.a.columns() + self.b.columns()
+
+    def negate(self) -> Optional[Expr]:
+        na, nb = self.a.negate(), self.b.negate()
+        return Or(na, nb) if na is not None and nb is not None else None
 
     def __repr__(self):
         return f"({self.a!r} & {self.b!r})"
@@ -198,6 +267,10 @@ class Or(Expr):
     def columns(self):
         return self.a.columns() + self.b.columns()
 
+    def negate(self) -> Optional[Expr]:
+        na, nb = self.a.negate(), self.b.negate()
+        return And(na, nb) if na is not None and nb is not None else None
+
     def __repr__(self):
         return f"({self.a!r} | {self.b!r})"
 
@@ -210,10 +283,16 @@ class Not(Expr):
         return ~self.a.evaluate(table)
 
     def prune(self, stats):
-        return True  # conservative: min/max can't disprove a negation cheaply
+        # push the negation down to prunable leaves (null-safe, see
+        # Expr.negate); unsupported shapes stay conservative
+        neg = self.a.negate()
+        return True if neg is None else neg.prune(stats)
 
     def columns(self):
         return self.a.columns()
+
+    def negate(self) -> Optional[Expr]:
+        return self.a
 
     def __repr__(self):
         return f"~{self.a!r}"

@@ -34,7 +34,8 @@ from .dtypes import (DType, KIND_BINARY, KIND_LIST, KIND_NULL, KIND_NUMERIC,
                      KIND_STRING, KIND_TENSOR)
 from .expressions import Expr
 from .schema import Schema
-from .statistics import ColumnStats, compute_stats, merge_stats
+from .statistics import (ColumnStats, compute_stats, merge_stat_maps,
+                         merge_stats)
 from .table import Column, Table, concat_columns, null_column_of
 
 MAGIC = b"TPQ1"
@@ -217,11 +218,36 @@ class TPQReader:
         self.schema = Schema.from_dict(footer["schema"])
         self.num_rows: int = footer["num_rows"]
         self.row_groups: List[dict] = footer["row_groups"]
+        self._file_stats: Optional[Dict[str, ColumnStats]] = None
+        self._rg_stats: List[Optional[Dict[str, ColumnStats]]] = \
+            [None] * len(self.row_groups)
 
     # -- stats access ------------------------------------------------------------
+    # Everything here is served from the (already-parsed) footer: the scan
+    # planner prunes fragments and row groups without touching a data page.
+    @property
+    def num_row_groups(self) -> int:
+        return len(self.row_groups)
+
+    def row_group_num_rows(self, i: int) -> int:
+        return self.row_groups[i]["num_rows"]
+
     def row_group_stats(self, i: int) -> Dict[str, ColumnStats]:
-        return {name: ColumnStats.from_dict(c["stats"])
-                for name, c in self.row_groups[i]["columns"].items()}
+        # memoized: the planner, the reader, and write-path pruning all
+        # consult the same stats — rebuild the ColumnStats objects once
+        st = self._rg_stats[i]
+        if st is None:
+            st = {name: ColumnStats.from_dict(c["stats"])
+                  for name, c in self.row_groups[i]["columns"].items()}
+            self._rg_stats[i] = st
+        return st
+
+    def file_stats(self) -> Dict[str, ColumnStats]:
+        """Whole-file per-column stats (row-group stats merged), cached."""
+        if self._file_stats is None:
+            self._file_stats = merge_stat_maps(
+                [self.row_group_stats(i) for i in range(len(self.row_groups))])
+        return self._file_stats
 
     def page_stats(self, rg: int, name: str) -> List[ColumnStats]:
         return [ColumnStats.from_dict(p["stats"])
@@ -282,9 +308,10 @@ class TPQReader:
     def read(self, columns: Optional[Sequence[str]] = None,
              filter_expr: Optional[Expr] = None,
              row_groups: Optional[Sequence[int]] = None,
-             prune_pages: bool = True) -> Table:
+             prune_pages: bool = True, counters=None) -> Table:
         parts = list(self.iter_row_group_tables(
-            columns, filter_expr, row_groups, prune_pages=prune_pages))
+            columns, filter_expr, row_groups, prune_pages=prune_pages,
+            counters=counters))
         names = self._project(columns, filter_expr)
         keep = list(columns) if columns is not None else names
         if not parts:
@@ -294,31 +321,60 @@ class TPQReader:
         return out.select(keep)
 
     def iter_row_group_tables(self, columns=None, filter_expr=None,
-                              row_groups=None, prune_pages: bool = True
-                              ) -> Iterator[Table]:
+                              row_groups=None, prune_pages: bool = True,
+                              counters=None) -> Iterator[Table]:
+        """Yield one (filtered, projected) Table per surviving row group.
+
+        ``counters``, when given, is a duck-typed observer (in practice a
+        :class:`repro.core.scan.ScanCounters`) whose ``row_groups_scanned``,
+        ``row_groups_skipped``, ``pages_scanned``, ``pages_skipped``,
+        ``rows_scanned`` and ``bytes_decoded`` attributes are incremented as
+        the reader prunes and decodes.
+
+        An explicit ``row_groups`` selection is treated as authoritative at
+        row-group granularity (the caller — normally the scan planner — has
+        already consulted the stats); page-level pruning still applies.
+        """
         names = self._project(columns, filter_expr)
         sub_schema = self.schema.select(names)
         filter_cols = ([c for c in dict.fromkeys(filter_expr.columns())
                         if c in self.schema]
                        if filter_expr is not None else [])
         two_phase = bool(filter_cols) and len(filter_cols) < len(names)
+        rg_sel = set(row_groups) if row_groups is not None else None
         with open(self.path, "rb") as fh:
             for i, rg in enumerate(self.row_groups):
-                if row_groups is not None and i not in set(row_groups):
+                if rg_sel is not None and i not in rg_sel:
                     continue
-                if filter_expr is not None and not filter_expr.prune(
-                        self.row_group_stats(i)):
+                if (rg_sel is None and filter_expr is not None
+                        and not filter_expr.prune(self.row_group_stats(i))):
+                    if counters is not None:
+                        counters.row_groups_skipped += 1
                     continue  # row-group pushdown: skip entirely
-                npages = len(next(iter(rg["columns"].values()))["pages"]) \
-                    if rg["columns"] else 0
+                first_chunk = (next(iter(rg["columns"].values()))
+                               if rg["columns"] else None)
+                npages = len(first_chunk["pages"]) if first_chunk else 0
                 page_sel = list(range(npages))
                 if prune_pages and filter_expr is not None and npages > 1:
                     page_sel = self._select_pages(i, filter_expr, npages)
                     if not page_sel:
+                        if counters is not None:
+                            counters.row_groups_skipped += 1
+                            counters.pages_skipped += npages
                         continue
+                if counters is not None:
+                    counters.row_groups_scanned += 1
+                    counters.pages_scanned += len(page_sel)
+                    counters.pages_skipped += npages - len(page_sel)
+                    counters.rows_scanned += sum(
+                        first_chunk["pages"][j]["rows"] for j in page_sel) \
+                        if first_chunk else 0
 
                 def read_pages(name: str, idxs) -> Column:
                     pages = rg["columns"][name]["pages"]
+                    if counters is not None:
+                        counters.bytes_decoded += sum(
+                            _page_stored_bytes(pages[j]) for j in idxs)
                     pieces = [self._read_column_page(
                         fh, pages[j], self.schema[name].dtype) for j in idxs]
                     return (concat_columns(pieces) if len(pieces) != 1
@@ -371,25 +427,30 @@ class TPQReader:
         return [j for j in range(npages) if expr.prune(per_page_stats[j])]
 
     def read_row_group_bytes(self, i: int, columns: Optional[Sequence[str]] = None) -> int:
-        """Total stored bytes for a row group's (projected) chunks — for benches."""
+        """Total stored bytes for a row group's (projected) chunks.
+
+        Footer-only (no data pages touched) — used by the scan planner's
+        ``bytes_total`` / ``bytes_selected`` accounting and by benchmarks.
+        """
         total = 0
-
-        def _walk(page):
-            t = 0
-            for k in ("validity", "values", "lengths", "blob"):
-                if k in page:
-                    t += page[k]["len"]
-            if "child" in page:
-                t += _walk(page["child"])
-            return t
-
         rg = self.row_groups[i]
         for name, chunk in rg["columns"].items():
             if columns is not None and name not in columns:
                 continue
             for p in chunk["pages"]:
-                total += _walk(p)
+                total += _page_stored_bytes(p)
         return total
+
+
+def _page_stored_bytes(page: dict) -> int:
+    """Stored (compressed) bytes backing one column page, from footer metadata."""
+    t = 0
+    for k in ("validity", "values", "lengths", "blob"):
+        if k in page:
+            t += page[k]["len"]
+    if "child" in page:
+        t += _page_stored_bytes(page["child"])
+    return t
 
 
 def _concat_same_schema(parts: List[Table]) -> Table:

@@ -1,0 +1,353 @@
+"""Scan planner: fragment/row-group pruning, projection pushdown, explain().
+
+This is the read-path query planner behind :meth:`ParquetDB.read` (see
+docs/ARCHITECTURE.md for the full data-flow diagram).  The paper's central
+performance claim is that footer statistics *replace* indexes ("reduced
+dependency on indexing through predicate pushdown filtering", ParquetDB
+§4.5); this module is where that claim is implemented end to end:
+
+    plan   — for each manifest file (a *fragment*), consult whole-file
+             ``ColumnStats`` (min/max + bloom, merged from row-group stats)
+             via ``Expr.prune``; a fragment that provably cannot contain a
+             matching row is never opened for data.  Surviving fragments are
+             narrowed to the row groups whose stats may match.
+    prune  — inside a scanned row group the reader additionally prunes at
+             page granularity (aligned page stats) before touching bytes.
+    decode — only the projected-plus-filter columns of surviving pieces are
+             decoded; the two-phase reader decodes filter columns first so a
+             non-matching page never decodes the payload columns.
+    filter — the residual ``Expr`` mask is applied to decoded rows.
+    project— filter-only columns are dropped; output schema == projection.
+
+All pruning is *sound*: ``Expr.prune`` returns False only when statistics
+prove no row can match, so a planned scan is row-identical to a full scan.
+Every stage records counters (:class:`ScanCounters`); ``ScanPlan.explain``
+returns them as a :class:`ScanReport` so pruning decisions are observable
+and testable — ``db.explain(filters=...)`` from user code.
+
+Execution reuses the threaded readahead of the original read path
+(:func:`prefetch`): fragments decode on a background thread while the
+consumer drains already-decoded tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import (Callable, Dict, Generator, Iterable, List, Optional,
+                    Sequence)
+
+from .expressions import Expr
+from .fileformat import TPQReader
+from .schema import Schema
+from .table import Table, concat_tables
+
+__all__ = ["ScanCounters", "FragmentPlan", "ScanReport", "ScanPlan",
+           "file_may_match", "prefetch"]
+
+
+@dataclasses.dataclass
+class ScanCounters:
+    """Per-stage pruning/decoding counters for one scan.
+
+    Planning fills the file/row-group fields; ``explain()`` fills the byte
+    totals (a footer walk plain reads skip); execution (the reader) fills
+    pages/rows/bytes-decoded.  ``rows_matched`` counts rows surviving the
+    residual filter — i.e. the rows the caller actually receives.
+    """
+    files_total: int = 0
+    files_scanned: int = 0
+    files_skipped: int = 0
+    row_groups_total: int = 0
+    row_groups_scanned: int = 0
+    row_groups_skipped: int = 0
+    pages_scanned: int = 0
+    pages_skipped: int = 0
+    rows_scanned: int = 0
+    rows_matched: int = 0
+    bytes_total: int = 0        # stored bytes of every chunk in every file
+    bytes_selected: int = 0     # projected columns of surviving row groups
+    bytes_decoded: int = 0      # actually decoded (after page pruning)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class FragmentPlan:
+    """Planning outcome for one manifest file."""
+    file: str
+    num_row_groups: int
+    row_groups: List[int]       # surviving row-group indices
+    pushdown: bool              # filter evaluated inside the reader
+    pruned: bool                # whole file eliminated by stats
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class ScanReport:
+    """What ``explain()`` returns: counters + per-fragment decisions.
+
+    When ``executed`` is False the counters describe the *plan* (row groups
+    selected for scanning); page/row/bytes-decoded fields are zero because
+    nothing was decoded.  When True, the scan ran and all counters reflect
+    observed work.
+    """
+    counters: ScanCounters
+    fragments: List[FragmentPlan]
+    columns: List[str]
+    filter: Optional[str]
+    executed: bool
+
+    def to_dict(self) -> dict:
+        return {"counters": self.counters.to_dict(),
+                "fragments": [f.to_dict() for f in self.fragments],
+                "columns": list(self.columns),
+                "filter": self.filter,
+                "executed": self.executed}
+
+    def __str__(self) -> str:
+        c = self.counters
+        lines = [
+            f"ScanPlan  filter={self.filter or '<none>'}  "
+            f"columns={len(self.columns)}",
+            f"  files:      {c.files_scanned} scanned, "
+            f"{c.files_skipped} pruned (of {c.files_total})",
+            f"  row groups: {c.row_groups_scanned} scanned, "
+            f"{c.row_groups_skipped} pruned (of {c.row_groups_total})",
+            f"  bytes:      {c.bytes_selected} selected "
+            f"of {c.bytes_total} stored",
+        ]
+        if self.executed:
+            lines.append(
+                f"  executed:   {c.pages_scanned} pages decoded "
+                f"({c.pages_skipped} pruned), {c.rows_scanned} rows scanned, "
+                f"{c.rows_matched} matched, {c.bytes_decoded} bytes decoded")
+        else:
+            lines.append("  (planned only — pass execute=True for decode "
+                         "counters)")
+        return "\n".join(lines)
+
+
+class ScanPlan:
+    """Plan + execute a pruned, projected scan over a set of TPQ files.
+
+    Parameters
+    ----------
+    files:       manifest file names, in scan order.
+    reader_of:   ``name -> TPQReader`` (the store injects its footer cache).
+    schema:      unified dataset schema; files may each hold a subset.
+    columns:     output column names (already resolved), None = all.
+    filter_expr: AND-combined predicate, or None.
+    cfg:         duck-typed config — ``use_threads`` / ``fragment_readahead``
+                 (both ``LoadConfig`` and ``NormalizeConfig`` qualify).
+    prune:       set False to disable all stats pruning (oracle/testing).
+    """
+
+    def __init__(self, files: Sequence[str],
+                 reader_of: Callable[[str], TPQReader],
+                 schema: Schema,
+                 columns: Optional[Sequence[str]] = None,
+                 filter_expr: Optional[Expr] = None,
+                 cfg=None, prune: bool = True):
+        self._files = list(files)
+        self._reader_of = reader_of
+        self._schema = schema
+        self._expr = filter_expr
+        self._prune = prune
+        self._use_threads = bool(getattr(cfg, "use_threads", True))
+        self._readahead = int(getattr(cfg, "fragment_readahead", 4))
+        out_names = list(columns) if columns is not None else schema.names
+        self._out_schema = schema.select(out_names)
+        self._filter_cols = [c for c in dict.fromkeys(
+            filter_expr.columns() if filter_expr is not None else [])]
+        read_names = out_names + [c for c in self._filter_cols
+                                  if c in schema and c not in out_names]
+        self._read_schema = schema.select(read_names)
+        self._fragments: Optional[List[FragmentPlan]] = None
+        self._plan_counters: Optional[ScanCounters] = None
+        self._byte_totals: Optional[tuple] = None
+        self.last_counters: Optional[ScanCounters] = None
+
+    # ------------------------------------------------------------------ plan
+    def fragments(self) -> List[FragmentPlan]:
+        self._build()
+        return list(self._fragments)
+
+    def _build(self) -> None:
+        """Footer-only planning: no data page is read here."""
+        if self._fragments is not None:
+            return
+        c = ScanCounters()
+        frags: List[FragmentPlan] = []
+        for fn in self._files:
+            rd = self._reader_of(fn)
+            n = rd.num_row_groups
+            have = set(rd.schema.names)
+            c.files_total += 1
+            c.row_groups_total += n
+            # pushdown is only sound when the file has every filter column;
+            # otherwise missing columns align to null *after* decode and the
+            # residual filter runs there (null semantics differ per Expr).
+            # prune=False forces the residual path: full decode, no stats.
+            pushdown = self._prune and self._expr is not None and all(
+                col in have for col in self._filter_cols)
+            selected = list(range(n))
+            if pushdown:
+                if not self._expr.prune(rd.file_stats()):
+                    selected = []          # fragment pruned outright
+                else:
+                    selected = [i for i in range(n)
+                                if self._expr.prune(rd.row_group_stats(i))]
+            c.row_groups_skipped += n - len(selected)
+            if selected:
+                c.files_scanned += 1
+            else:
+                c.files_skipped += 1
+            frags.append(FragmentPlan(fn, n, selected, pushdown,
+                                      pruned=not selected))
+        self._fragments, self._plan_counters = frags, c
+
+    # --------------------------------------------------------------- execute
+    def execute(self, batch_size: Optional[int] = None,
+                counters: Optional[ScanCounters] = None
+                ) -> Generator[Table, None, None]:
+        """Yield result tables; decoding runs on a readahead thread.
+
+        Counters accumulate into ``counters`` (or a fresh copy of the plan
+        counters, exposed as ``self.last_counters``).
+        """
+        self._build()
+        if counters is None:
+            counters = dataclasses.replace(self._plan_counters)
+        self.last_counters = counters
+
+        def pieces() -> Generator[Table, None, None]:
+            for frag in self._fragments:
+                if frag.row_groups:
+                    yield from self._fragment_tables(frag, counters)
+
+        stream = (prefetch(pieces(), self._readahead)
+                  if self._use_threads else pieces())
+        if batch_size is None:
+            yield from stream
+        else:
+            yield from rechunk(stream, batch_size)
+
+    def _fragment_tables(self, frag: FragmentPlan, counters: ScanCounters
+                         ) -> Generator[Table, None, None]:
+        rd = self._reader_of(frag.file)
+        have = set(rd.schema.names)
+        cols_here = [n for n in self._read_schema.names if n in have]
+        pushdown = self._expr if frag.pushdown else None
+        for t in rd.iter_row_group_tables(cols_here, pushdown,
+                                          row_groups=frag.row_groups,
+                                          counters=counters):
+            t = t.align_to_schema(self._read_schema)
+            if self._expr is not None and pushdown is None:
+                mask = self._expr.evaluate(t)
+                if not mask.all():
+                    t = t.filter_mask(mask)
+            if t.num_rows:
+                counters.rows_matched += t.num_rows
+                yield t.select(self._out_schema.names)
+
+    def _bytes_accounting(self) -> tuple:
+        """(bytes_total, bytes_selected) — footer walk, lazy: explain() only.
+
+        Plain reads skip this; it touches every page dict of every file.
+        """
+        if self._byte_totals is None:
+            self._build()
+            total = selected = 0
+            for frag in self._fragments:
+                rd = self._reader_of(frag.file)
+                have = set(rd.schema.names)
+                cols_here = [x for x in self._read_schema.names if x in have]
+                total += sum(rd.read_row_group_bytes(i)
+                             for i in range(frag.num_row_groups))
+                selected += sum(rd.read_row_group_bytes(i, cols_here)
+                                for i in frag.row_groups)
+            self._byte_totals = (total, selected)
+        return self._byte_totals
+
+    # --------------------------------------------------------------- explain
+    def explain(self, execute: bool = False) -> ScanReport:
+        """Report pruning decisions; optionally run the scan for decode stats."""
+        self._build()
+        c = dataclasses.replace(self._plan_counters)
+        c.bytes_total, c.bytes_selected = self._bytes_accounting()
+        if execute:
+            for _ in self.execute(counters=c):
+                pass
+        else:
+            c.row_groups_scanned = c.row_groups_total - c.row_groups_skipped
+        return ScanReport(counters=c, fragments=list(self._fragments),
+                          columns=self._out_schema.names,
+                          filter=repr(self._expr) if self._expr is not None
+                          else None,
+                          executed=execute)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers (also used by the write paths in store.py)
+# ---------------------------------------------------------------------------
+def file_may_match(rd: TPQReader, expr: Expr) -> bool:
+    """Fragment-level pruning check: can this file contain a matching row?
+
+    Conservative (True = must read).  Used by ``update``/``delete`` to skip
+    rewriting files that provably hold no affected rows.  Checks merged
+    whole-file stats first (cheap reject), then per-row-group stats, which
+    are strictly stronger: merging widens min/max ranges and drops blooms of
+    mismatched sizes.
+    """
+    if not all(c in rd.schema for c in expr.columns()):
+        return True
+    if not expr.prune(rd.file_stats()):
+        return False
+    return any(expr.prune(rd.row_group_stats(i))
+               for i in range(rd.num_row_groups))
+
+
+def rechunk(stream: Iterable[Table], batch_size: int
+            ) -> Generator[Table, None, None]:
+    """Re-slice a table stream into exact ``batch_size``-row batches."""
+    buf: List[Table] = []
+    count = 0
+    for t in stream:
+        while t.num_rows:
+            take = min(batch_size - count, t.num_rows)
+            buf.append(t.slice(0, take))
+            t = t.slice(take, t.num_rows)
+            count += take
+            if count == batch_size:
+                yield concat_tables(buf)
+                buf, count = [], 0
+    if buf:
+        yield concat_tables(buf)
+
+
+def prefetch(gen: Iterable[Table], depth: int) -> Generator[Table, None, None]:
+    """Background-thread readahead (LoadConfig.fragment_readahead)."""
+    q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
+    DONE = object()
+
+    def worker():
+        try:
+            for item in gen:
+                q.put(item)
+            q.put(DONE)
+        except BaseException as e:  # propagate
+            q.put(e)
+
+    th = threading.Thread(target=worker, daemon=True)
+    th.start()
+    while True:
+        item = q.get()
+        if item is DONE:
+            return
+        if isinstance(item, BaseException):
+            raise item
+        yield item

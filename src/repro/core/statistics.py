@@ -75,7 +75,8 @@ def _value_bytes(v: Any) -> bytes:
 class ColumnStats:
     num_values: int = 0
     null_count: int = 0
-    min: Any = None
+    nan_count: int = 0             # float chunks only; NaN is invisible to
+    min: Any = None                # min/max but matches "!=" and negations
     max: Any = None
     bloom: Optional[bytes] = None  # _BLOOM_BITS//8 bytes, or None
 
@@ -107,6 +108,8 @@ class ColumnStats:
     # -- serialization --------------------------------------------------------
     def to_dict(self) -> dict:
         d = {"n": self.num_values, "nulls": self.null_count}
+        if self.nan_count:
+            d["nan"] = self.nan_count
         if self.min is not None:
             d["min"] = _json_safe(self.min)
             d["max"] = _json_safe(self.max)
@@ -118,6 +121,7 @@ class ColumnStats:
     def from_dict(d: dict) -> "ColumnStats":
         return ColumnStats(
             num_values=d.get("n", 0), null_count=d.get("nulls", 0),
+            nan_count=d.get("nan", 0),
             min=d.get("min"), max=d.get("max"),
             bloom=bytes.fromhex(d["bloom"]) if "bloom" in d else None)
 
@@ -165,9 +169,13 @@ def compute_stats(col: Column, with_bloom: bool = True) -> ColumnStats:
     if k == KIND_NUMERIC:
         vals = col.values if col.validity is None else col.values[col.validity]
         if col.dtype.is_float:
-            finite = vals[np.isfinite(vals)]
-            if len(finite):
-                st.min, st.max = float(finite.min()), float(finite.max())
+            # ±inf is orderable and must stay in min/max (excluding it would
+            # let range pruning drop inf rows); NaN is unorderable, so it is
+            # counted instead — "!=" and negation pruning consult nan_count
+            nn = vals[~np.isnan(vals)]
+            st.nan_count = int(len(vals) - len(nn))
+            if len(nn):
+                st.min, st.max = float(nn.min()), float(nn.max())
         else:
             st.min = _json_safe(vals.min())
             st.max = _json_safe(vals.max())
@@ -178,8 +186,14 @@ def compute_stats(col: Column, with_bloom: bool = True) -> ColumnStats:
     elif k == KIND_STRING:
         vals = [v for v in col.to_pylist() if v is not None]
         if vals:
+            # truncation must keep the bounds sound: a min prefix only sorts
+            # lower, but a bare max prefix can sort BELOW longer values that
+            # share it — pad it to an upper bound (Parquet bumps the last
+            # byte; the max code point is the simplest sound equivalent)
             st.min = min(vals)[:_STR_STAT_MAX]
-            st.max = max(vals)[:_STR_STAT_MAX]
+            mx = max(vals)
+            st.max = (mx if len(mx) <= _STR_STAT_MAX
+                      else mx[:_STR_STAT_MAX] + "\U0010ffff")
             if with_bloom:
                 uniq = set(vals)
                 if len(uniq) <= _BLOOM_MAX_DISTINCT:
@@ -189,6 +203,21 @@ def compute_stats(col: Column, with_bloom: bool = True) -> ColumnStats:
     return st
 
 
+def merge_stat_maps(maps: List[Dict[str, ColumnStats]]) -> Dict[str, ColumnStats]:
+    """File-level stats from per-row-group stats maps.
+
+    Used by the scan planner (:mod:`repro.core.scan`) for fragment-level
+    pruning: one merged ``{column: ColumnStats}`` summarising a whole file.
+    All maps must describe the same column set (true within one TPQ file,
+    whose row groups share a schema) — a column absent from some maps would
+    make the merged stats unsound for pruning.
+    """
+    out: Dict[str, ColumnStats] = {}
+    for name in {n for m in maps for n in m}:
+        out[name] = merge_stats([m[name] for m in maps if name in m])
+    return out
+
+
 def merge_stats(parts: List[ColumnStats]) -> ColumnStats:
     """Row-group stats from page stats (Parquet: footer aggregates pages)."""
     out = ColumnStats()
@@ -196,6 +225,7 @@ def merge_stats(parts: List[ColumnStats]) -> ColumnStats:
     for p in parts:
         out.num_values += p.num_values
         out.null_count += p.null_count
+        out.nan_count += p.nan_count
         if p.min is not None:
             out.min = p.min if out.min is None else min(out.min, p.min)
             out.max = p.max if out.max is None else max(out.max, p.max)

@@ -6,24 +6,35 @@ dotted-field access to nested data, AND-combined filter lists, id generation,
 schema evolution, and ``rebuild_nested_struct``.  Durability is by the
 manifest-commit protocol in :mod:`repro.core.transactions` (beyond-paper: a
 crash never requires manual recovery).
+
+Every read routes through the scan planner (:mod:`repro.core.scan`), which
+prunes whole files and row groups from footer statistics before decoding a
+byte; ``db.explain(filters=...)`` returns the planner's
+:class:`~repro.core.scan.ScanReport` so pruning is observable::
+
+    >>> print(db.explain(filters=[field("age") > 100]))
+    ScanPlan  filter=(age > 100)  columns=4
+      files:      0 scanned, 3 pruned (of 3)
+      ...
+
+See docs/ARCHITECTURE.md for the full read/write data flow.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
-import queue
-import threading
 from typing import Any, Dict, Generator, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
 
 from . import nested
-from .dtypes import DType
+from .dtypes import DType, KIND_STRING
 from .encodings import AUTO, CODEC_ZLIB
 from .expressions import Expr, IsIn, combine_filters, field
 from .fileformat import (DEFAULT_PAGE_ROWS, DEFAULT_ROW_GROUP_ROWS, TPQReader,
                          TPQWriter)
+from .scan import ScanPlan, ScanReport, file_may_match
 from .schema import Field, ID_COLUMN, Schema
 from .table import Column, Table, concat_tables, null_column_of
 from .transactions import DatasetDir, Manifest
@@ -93,6 +104,14 @@ class Dataset:
 
     def to_table(self) -> Table:
         return concat_tables(list(self.iter_batches()))
+
+    def scan_plan(self) -> ScanPlan:
+        names = self._db._resolve_columns(self._columns, True)
+        return self._db._scan_plan(names, self._filter, self._cfg)
+
+    def explain(self, execute: bool = False) -> ScanReport:
+        """Pruning report for this dataset's scan (see ParquetDB.explain)."""
+        return self.scan_plan().explain(execute=execute)
 
 
 class ParquetDB:
@@ -304,52 +323,39 @@ class ParquetDB:
             return Dataset(self, names, expr, cfg)
         raise ValueError(f"unknown load_format {load_format!r}")
 
+    def _scan_plan(self, names: Optional[List[str]], expr: Optional[Expr],
+                   cfg, prune: bool = True) -> ScanPlan:
+        """Build the read-path planner over the committed manifest."""
+        man = self._dir.load()
+        return ScanPlan(man.files,
+                        lambda fn: _get_reader(self._dir.file_path(fn)),
+                        self._manifest_schema(man), columns=names,
+                        filter_expr=expr, cfg=cfg, prune=prune)
+
+    def explain(self, ids: Optional[Sequence[int]] = None,
+                columns: Optional[Sequence[str]] = None,
+                include_cols: bool = True,
+                filters: Optional[Sequence[Expr]] = None,
+                execute: bool = False,
+                load_config: Optional[LoadConfig] = None) -> ScanReport:
+        """Report how a ``read`` with these arguments would be pruned.
+
+        Planning is footer-only (no data pages decoded).  With
+        ``execute=True`` the scan actually runs and the report additionally
+        carries page/row/bytes-decoded counters.  ``print(report)`` gives a
+        human-readable summary; ``report.to_dict()`` a JSON-able one.
+        """
+        expr = self._build_filter(ids, filters)
+        names = self._resolve_columns(columns, include_cols)
+        cfg = load_config or LoadConfig()
+        return self._scan_plan(names, expr, cfg).explain(execute=execute)
+
     def _iter_batches(self, columns, expr: Optional[Expr],
                       batch_size: Optional[int], cfg: LoadConfig
                       ) -> Generator[Table, None, None]:
         names = self._resolve_columns(columns, True)
-        man = self._dir.load()
-        schema = self._manifest_schema(man)
-        read_schema = schema.select(
-            _dedup(names + [c for c in (expr.columns() if expr else [])
-                            if c in schema]))
-        out_schema = schema.select(names)
-
-        def pieces() -> Generator[Table, None, None]:
-            for fn in man.files:
-                rd = _get_reader(self._dir.file_path(fn))
-                have = set(rd.schema.names)
-                cols_here = [n for n in read_schema.names if n in have]
-                pushdown = expr if expr is not None and all(
-                    c in have for c in expr.columns()) else None
-                for t in rd.iter_row_group_tables(cols_here, pushdown):
-                    t = t.align_to_schema(read_schema)
-                    if expr is not None and pushdown is None:
-                        mask = expr.evaluate(t)
-                        if not mask.all():
-                            t = t.filter_mask(mask)
-                    if t.num_rows:
-                        yield t.select(out_schema.names)
-
-        stream = (_prefetch(pieces(), cfg.fragment_readahead)
-                  if cfg.use_threads else pieces())
-        if batch_size is None:
-            yield from stream
-            return
-        # re-chunk to batch_size
-        buf: List[Table] = []
-        count = 0
-        for t in stream:
-            while t.num_rows:
-                take = min(batch_size - count, t.num_rows)
-                buf.append(t.slice(0, take))
-                t = t.slice(take, t.num_rows)
-                count += take
-                if count == batch_size:
-                    yield concat_tables(buf)
-                    buf, count = [], 0
-        if buf:
-            yield concat_tables(buf)
+        yield from self._scan_plan(names, expr, cfg).execute(
+            batch_size=batch_size)
 
     # -- nested rebuild (paper §4.6.1) -------------------------------------------
     def _nested_path(self) -> str:
@@ -418,11 +424,13 @@ class ParquetDB:
                 unified.select([f.name for f in unified
                                 if f.name in incoming.columns]))
             key_of = _key_index(incoming, keys)
+            keys_expr = _keys_expr(incoming, keys)
             new_files = []
             for fn in man.files:
                 rd = _get_reader(self._dir.file_path(fn))
-                # pushdown: can this file contain any incoming key?
-                if not schema_changed and not _file_may_match(rd, incoming, keys):
+                # fragment pruning: can this file contain any incoming key?
+                if (not schema_changed and keys_expr is not None
+                        and not file_may_match(rd, keys_expr)):
                     new_files.append(fn)
                     continue
                 t = rd.read().align_to_schema(unified)
@@ -482,11 +490,7 @@ class ParquetDB:
                 new_files = []
                 for fn in man.files:
                     rd = _get_reader(self._dir.file_path(fn))
-                    stats_may = any(
-                        expr.prune(rd.row_group_stats(i))
-                        for i in range(len(rd.row_groups))
-                    ) if all(c in rd.schema for c in expr.columns()) else True
-                    if not stats_may:
+                    if not file_may_match(rd, expr):
                         new_files.append(fn)
                         continue
                     t = rd.read().align_to_schema(current)
@@ -521,11 +525,11 @@ class ParquetDB:
 
     def _normalize_locked(self, man: Manifest, cfg: NormalizeConfig) -> None:
         schema = self._manifest_schema(man)
-        batches: List[Table] = []
-        for fn in man.files:
-            rd = _get_reader(self._dir.file_path(fn))
-            for t in rd.iter_row_group_tables():
-                batches.append(t.align_to_schema(schema))
+        # full unfiltered scan via the planner (threaded readahead per cfg)
+        plan = ScanPlan(man.files,
+                        lambda fn: _get_reader(self._dir.file_path(fn)),
+                        schema, cfg=cfg)
+        batches = list(plan.execute())
         if not batches:
             return
         full = concat_tables(batches)
@@ -544,15 +548,6 @@ class ParquetDB:
 # ---------------------------------------------------------------------------
 # update helpers
 # ---------------------------------------------------------------------------
-def _dedup(names: List[str]) -> List[str]:
-    seen, out = set(), []
-    for n in names:
-        if n not in seen:
-            seen.add(n)
-            out.append(n)
-    return out
-
-
 def _key_index(incoming: Table, keys: List[str]) -> Dict[Any, int]:
     cols = [incoming.column(k).to_pylist() for k in keys]
     out: Dict[Any, int] = {}
@@ -562,18 +557,43 @@ def _key_index(incoming: Table, keys: List[str]) -> Dict[Any, int]:
     return out
 
 
-def _file_may_match(rd: TPQReader, incoming: Table, keys: List[str]) -> bool:
-    if len(keys) != 1 or keys[0] not in rd.schema:
-        return True
-    vals = incoming.column(keys[0])
-    if not vals.dtype.is_numeric:
-        return True
-    lo, hi = vals.values.min(), vals.values.max()
-    for i in range(len(rd.row_groups)):
-        st = rd.row_group_stats(i).get(keys[0])
-        if st is None or st.min is None or not (hi < st.min or lo > st.max):
-            return True
-    return False
+_KEYS_EXPR_MAX_ISIN = 256  # above this, fall back to a [lo, hi] range check
+
+
+def _keys_expr(incoming: Table, keys: List[str]) -> Optional[Expr]:
+    """Prunable Expr matching the incoming update keys, or None.
+
+    Feeds :func:`repro.core.scan.file_may_match` so ``update`` skips files
+    whose stats prove no key is present.  Small key sets become ``IsIn``
+    (bloom-prunable even inside [min, max]); large ones a min/max range.
+    Conservative None for multi-key updates or keys containing nulls.
+    """
+    if len(keys) != 1:
+        return None
+    k = keys[0]
+    col = incoming.column(k)
+    if col.null_count:
+        return None
+    if col.dtype.is_numeric:
+        vals = col.values
+        if vals.dtype.kind == "f":
+            # NaN keys never match any row (== is False for NaN) and a NaN
+            # endpoint would poison the range fallback into pruning all files
+            vals = vals[~np.isnan(vals)]
+        uniq = np.unique(vals)
+        if len(uniq) == 0:
+            return None
+        if len(uniq) <= _KEYS_EXPR_MAX_ISIN:
+            return IsIn(k, [v.item() for v in uniq])
+        return (field(k) >= uniq[0].item()) & (field(k) <= uniq[-1].item())
+    if col.dtype.kind == KIND_STRING:
+        uniq = sorted(set(col.to_pylist()))
+        if not uniq:
+            return None
+        if len(uniq) <= _KEYS_EXPR_MAX_ISIN:
+            return IsIn(k, uniq)
+        return (field(k) >= uniq[0]) & (field(k) <= uniq[-1])
+    return None
 
 
 def _match_rows(t: Table, key_of: Dict[Any, int], keys: List[str]):
@@ -636,25 +656,3 @@ def _apply_fields_metadata(schema: Schema, fm: Dict[str, dict]) -> Schema:
     return Schema(fields, schema.metadata)
 
 
-def _prefetch(gen: Iterable[Table], depth: int) -> Generator[Table, None, None]:
-    """Background-thread readahead (LoadConfig.fragment_readahead)."""
-    q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
-    DONE = object()
-
-    def worker():
-        try:
-            for item in gen:
-                q.put(item)
-            q.put(DONE)
-        except BaseException as e:  # propagate
-            q.put(e)
-
-    th = threading.Thread(target=worker, daemon=True)
-    th.start()
-    while True:
-        item = q.get()
-        if item is DONE:
-            return
-        if isinstance(item, BaseException):
-            raise item
-        yield item

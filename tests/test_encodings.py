@@ -1,6 +1,8 @@
 """Encoding/codec roundtrips — including hypothesis property tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import encodings as enc

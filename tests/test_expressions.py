@@ -2,6 +2,8 @@
 pruning must NEVER discard a chunk that contains a matching row."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Table, field

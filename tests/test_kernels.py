@@ -4,6 +4,8 @@ oracles and vs the numpy codecs (interpret=True executes kernel bodies on CPU).
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import encodings as enc

@@ -1,0 +1,276 @@
+"""Scan planner: pruning counters, explain(), and the pruned==unpruned oracle.
+
+These tests construct datasets with *known* min/max ranges per file and per
+row group, so exact skip counts can be asserted — and check end to end that
+pruning never changes results (soundness: a planned scan is row-identical
+to a full scan).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (LoadConfig, ParquetDB, ScanPlan, Table, field)
+from repro.core.scan import file_may_match, rechunk
+from repro.core.store import _get_reader
+
+
+@pytest.fixture()
+def ranged_db(tmp_path):
+    """4 files, 100 rows each, x in [0,100), [100,200), [200,300), [300,400)."""
+    db = ParquetDB(os.path.join(str(tmp_path), "ranged"))
+    for lo in (0, 100, 200, 300):
+        db.create([{"x": lo + i, "y": f"s{lo + i}"} for i in range(100)])
+    return db
+
+
+@pytest.fixture()
+def grouped_db(tmp_path):
+    """1 file, 4 row groups of 100 sorted rows (row_group_rows=100)."""
+    db = ParquetDB(os.path.join(str(tmp_path), "grouped"),
+                   row_group_rows=100, page_rows=50)
+    db.create([{"x": i} for i in range(400)])
+    return db
+
+
+class TestExplainCounters:
+    def test_impossible_predicate_scans_nothing(self, ranged_db):
+        rep = ranged_db.explain(filters=[field("x") > 10**9])
+        assert rep.counters.files_scanned == 0
+        assert rep.counters.files_skipped == 4
+        assert rep.counters.row_groups_scanned == 0
+        assert rep.counters.bytes_selected == 0
+        # executing it decodes nothing and returns nothing
+        rep = ranged_db.explain(filters=[field("x") > 10**9], execute=True)
+        assert rep.counters.pages_scanned == 0
+        assert rep.counters.bytes_decoded == 0
+        assert rep.counters.rows_matched == 0
+        assert ranged_db.read(filters=[field("x") > 10**9]).num_rows == 0
+
+    def test_exact_file_skip_counts(self, ranged_db):
+        rep = ranged_db.explain(filters=[field("x") == 150])
+        assert rep.counters.files_total == 4
+        assert rep.counters.files_scanned == 1
+        assert rep.counters.files_skipped == 3
+        assert [f.pruned for f in rep.fragments] == [True, False, True, True]
+
+    def test_range_predicate_spans_two_files(self, ranged_db):
+        rep = ranged_db.explain(filters=[(field("x") >= 150) &
+                                         (field("x") < 250)])
+        assert rep.counters.files_scanned == 2
+        assert rep.counters.files_skipped == 2
+
+    def test_row_group_skip_counts(self, grouped_db):
+        rep = grouped_db.explain(filters=[field("x") == 250])
+        assert rep.counters.files_total == 1
+        assert rep.counters.row_groups_total == 4
+        assert rep.counters.row_groups_scanned == 1
+        assert rep.counters.row_groups_skipped == 3
+        assert rep.fragments[0].row_groups == [2]
+
+    def test_executed_counters_match_result(self, grouped_db):
+        expr = field("x") >= 390
+        rep = grouped_db.explain(filters=[expr], execute=True)
+        assert rep.executed
+        assert rep.counters.rows_matched == 10
+        assert rep.counters.row_groups_scanned == 1
+        # page pruning inside the surviving row group (page_rows=50)
+        assert rep.counters.pages_scanned == 1
+        assert rep.counters.pages_skipped >= 1
+        assert 0 < rep.counters.bytes_decoded <= rep.counters.bytes_selected
+
+    def test_bloom_prunes_value_inside_minmax(self, tmp_path):
+        # even values only: an odd probe lies inside [min, max] but the
+        # bloom fingerprint proves absence
+        db = ParquetDB(os.path.join(str(tmp_path), "bloom"))
+        db.create([{"x": 2 * i} for i in range(100)])  # 0..198 even
+        rep = db.explain(filters=[field("x").isin([51])])
+        assert rep.counters.files_scanned == 0
+        assert db.read(filters=[field("x").isin([51])]).num_rows == 0
+        # present value is found
+        rep = db.explain(filters=[field("x").isin([50])])
+        assert rep.counters.files_scanned == 1
+        assert db.read(filters=[field("x").isin([50])]).num_rows == 1
+
+    def test_no_filter_scans_everything(self, ranged_db):
+        rep = ranged_db.explain()
+        assert rep.counters.files_scanned == 4
+        assert rep.counters.files_skipped == 0
+        assert rep.filter is None
+
+    def test_projection_shrinks_selected_bytes(self, ranged_db):
+        full = ranged_db.explain()
+        proj = ranged_db.explain(columns=["x"])
+        assert proj.counters.bytes_selected < full.counters.bytes_selected
+        assert proj.columns == ["x"]
+
+    def test_report_str_and_dict(self, ranged_db):
+        rep = ranged_db.explain(filters=[field("x") == 150])
+        s = str(rep)
+        assert "1 scanned, 3 pruned (of 4)" in s
+        d = rep.to_dict()
+        assert d["counters"]["files_skipped"] == 3
+        assert len(d["fragments"]) == 4
+
+    def test_dataset_explain(self, ranged_db):
+        ds = ranged_db.read(load_format="dataset",
+                            filters=[field("x") == 150])
+        rep = ds.explain()
+        assert rep.counters.files_skipped == 3
+        assert ds.to_table().num_rows == 1
+
+
+class TestOracle:
+    """Pruned reads must be row-identical to unpruned reads."""
+
+    EXPRS = [
+        field("x") == 150,
+        field("x") != 150,
+        (field("x") >= 37) & (field("x") < 251),
+        (field("x") < 10) | (field("x") > 390),
+        ~(field("x") == 150),
+        ~((field("x") >= 100) & (field("x") < 300)),
+        field("x").isin([0, 150, 399, 12345]),
+        field("y") == "s150",
+    ]
+
+    @pytest.mark.parametrize("expr", EXPRS, ids=[repr(e) for e in EXPRS])
+    def test_pruned_equals_unpruned(self, ranged_db, expr):
+        pruned = ranged_db.read(filters=[expr])
+        # oracle 1: in-memory filter of a full scan
+        full = ranged_db.read()
+        oracle = full.filter_mask(expr.evaluate(full))
+        assert pruned.to_pylist() == oracle.to_pylist()
+        # oracle 2: the planner itself with pruning disabled
+        names = ranged_db._resolve_columns(None, True)
+        plan = ranged_db._scan_plan(names, expr, LoadConfig(), prune=False)
+        unpruned = [t for t in plan.execute()]
+        rows = [r for t in unpruned for r in t.to_pylist()]
+        assert pruned.to_pylist() == rows
+        assert plan.last_counters.row_groups_skipped == 0
+
+    def test_oracle_across_row_groups_and_pages(self, grouped_db):
+        expr = (field("x") >= 123) & (field("x") <= 301)
+        pruned = grouped_db.read(filters=[expr])
+        full = grouped_db.read()
+        oracle = full.filter_mask(expr.evaluate(full))
+        assert pruned.to_pylist() == oracle.to_pylist()
+
+
+class TestPlanMechanics:
+    def test_schema_evolution_file_missing_filter_column(self, tmp_path):
+        # first file lacks column z (schema evolved later, no eager
+        # rewrite): no pushdown there, residual filter must still produce
+        # correct rows (z null => no match)
+        db = ParquetDB(os.path.join(str(tmp_path), "evo"),
+                       eager_schema_align=False)
+        db.create([{"x": 100 + i} for i in range(10)])
+        db.create([{"x": i, "z": i} for i in range(10)])
+        got = db.read(filters=[field("z") == 3])
+        assert [r["x"] for r in got.to_pylist()] == [3]
+        rep = db.explain(filters=[field("z") == 3])
+        pushdowns = {f.file: f.pushdown for f in rep.fragments}
+        assert sorted(pushdowns.values()) == [False, True]
+
+    def test_rechunk_exact_batches(self, ranged_db):
+        batches = list(ranged_db.read(load_format="batches", batch_size=64))
+        assert [b.num_rows for b in batches] == [64] * 6 + [16]
+
+    def test_file_may_match(self, ranged_db):
+        man = ranged_db._dir.load()
+        rd = _get_reader(ranged_db._dir.file_path(man.files[0]))  # x in [0,100)
+        assert file_may_match(rd, field("x") == 50)
+        assert not file_may_match(rd, field("x") == 500)
+        # missing column => conservative True
+        assert file_may_match(rd, field("nope") == 1)
+
+    def test_update_prunes_untouched_files(self, ranged_db):
+        before = set(ranged_db._dir.load().files)
+        n = ranged_db.update([{"id": 150, "y": "updated"}])
+        assert n == 1
+        after = set(ranged_db._dir.load().files)
+        # only the one file containing id=150 was rewritten
+        assert len(before & after) == 3
+        got = ranged_db.read(ids=[150], columns=["y"])
+        assert got.to_pylist() == [{"y": "updated"}]
+
+    def test_delete_prunes_untouched_files(self, ranged_db):
+        before = set(ranged_db._dir.load().files)
+        n = ranged_db.delete(filters=[field("x") == 150])
+        assert n == 1
+        after = set(ranged_db._dir.load().files)
+        assert len(before & after) == 3
+        assert ranged_db.n_rows == 399
+
+    def test_normalize_roundtrip_via_planner(self, ranged_db):
+        before = ranged_db.read().to_pylist()
+        ranged_db.normalize(max_rows_per_file=64, max_rows_per_group=32)
+        assert ranged_db.n_files == (400 + 63) // 64
+        assert ranged_db.read().to_pylist() == before
+
+    def test_not_over_is_null_prunes_without_crashing(self, tmp_path):
+        # regression: IsNull's negate flag must not shadow Expr.negate()
+        db = ParquetDB(os.path.join(str(tmp_path), "notnull"))
+        db.create([{"x": None if i % 2 else i} for i in range(10)])
+        got = db.read(filters=[~field("x").is_null()])
+        assert sorted(r["x"] for r in got.to_pylist()) == [0, 2, 4, 6, 8]
+        got = db.read(filters=[~((field("x") == 0) & field("x").is_null())])
+        assert got.num_rows == 10
+
+    def test_not_equal_prune_keeps_nan_rows(self, tmp_path):
+        # regression: float stats exclude NaN, but NaN rows match "!=" —
+        # ~(f == v) over a min==max==v chunk must not prune the NaN row
+        db = ParquetDB(os.path.join(str(tmp_path), "nan"))
+        db.create({"f": np.array([1.0, np.nan])})
+        got = db.read(filters=[~(field("f") == 1.0)])
+        assert got.num_rows == 1 and np.isnan(got["f"].values[0])
+        got = db.read(filters=[field("f") != 1.0])
+        assert got.num_rows == 1 and np.isnan(got["f"].values[0])
+
+    def test_not_ordering_prune_keeps_nan_rows(self, tmp_path):
+        # regression: ~(x < v) matches NaN rows; the negation pushdown must
+        # carry an IsNaN term because min/max stats cannot see NaN
+        db = ParquetDB(os.path.join(str(tmp_path), "nanord"))
+        db.create({"x": np.array([1.0, np.nan])})
+        got = db.read(filters=[~(field("x") < 5.0)])
+        assert got.num_rows == 1 and np.isnan(got["x"].values[0])
+
+    def test_inf_rows_survive_range_pruning(self, tmp_path):
+        # regression: float min/max must include ±inf or range predicates
+        # prune chunks that contain matching inf rows
+        db = ParquetDB(os.path.join(str(tmp_path), "inf"))
+        db.create({"x": np.array([1.0, np.inf])})
+        got = db.read(filters=[field("x") > 100.0])
+        assert got.num_rows == 1 and np.isinf(got["x"].values[0])
+        db2 = ParquetDB(os.path.join(str(tmp_path), "ninf"))
+        db2.create({"x": np.array([-np.inf, 1.0])})
+        assert db2.read(filters=[field("x") < -100.0]).num_rows == 1
+
+    def test_long_string_keys_prune_soundly(self, tmp_path):
+        # regression: string max stats are truncated to 64 chars — the
+        # stored bound must still sort >= longer values sharing the prefix
+        db = ParquetDB(os.path.join(str(tmp_path), "longstr"))
+        long_key = "z" * 100
+        db.create([{"k": "aaa", "v": 1}, {"k": long_key, "v": 2}])
+        n = db.update([{"k": long_key, "v": 99}], update_keys="k")
+        assert n == 1
+        got = db.read(filters=[field("k") == long_key], columns=["v"])
+        assert got.to_pylist() == [{"v": 99}]
+
+    def test_update_with_many_float_keys_and_nan(self, tmp_path):
+        # regression: a NaN key must not poison the >256-key range fallback
+        db = ParquetDB(os.path.join(str(tmp_path), "nankeys"))
+        db.create({"k": np.arange(300, dtype=np.float64),
+                   "v": np.zeros(300)})
+        keys = np.concatenate([np.arange(300, dtype=np.float64), [np.nan]])
+        n = db.update({"k": keys, "v": np.ones(301)}, update_keys="k")
+        assert n == 300
+        assert db.read(columns=["v"])["v"].values.sum() == 300
+
+    def test_not_prune_is_null_safe(self, tmp_path):
+        # ~(z == 1) matches rows where z is null — negation pushdown must
+        # not prune a file of all-null z
+        db = ParquetDB(os.path.join(str(tmp_path), "nulls"))
+        db.create([{"x": i, "z": None if i < 5 else 1} for i in range(10)])
+        got = db.read(filters=[~(field("z") == 1)])
+        assert sorted(r["x"] for r in got.to_pylist()) == [0, 1, 2, 3, 4]
