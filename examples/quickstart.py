@@ -14,8 +14,10 @@ from repro.core import NormalizeConfig, ParquetDB, field
 
 workdir = tempfile.mkdtemp(prefix="parquetdb_quickstart_")
 
-# Initialize the database
-db = ParquetDB(os.path.join(workdir, "parquetdb"))
+# Initialize the database.  auto_compact=False so this walkthrough can
+# drive the maintenance lifecycle by hand — by default a cost-based
+# background trigger runs compact() for you after update/delete.
+db = ParquetDB(os.path.join(workdir, "parquetdb"), auto_compact=False)
 
 # Create data
 data = [
@@ -47,9 +49,28 @@ print("age>=30:", adults.to_pylist())
 # explain(): how would this read be pruned?  Footer stats only — no decode.
 print(db.explain(columns=["name", "age"], filters=[field("age") >= 30]))
 
-# An impossible predicate scans nothing at all
+# An impossible predicate scans almost nothing — but note the file count
+# is not 0: the update above staged an upsert delta, and a fragment that
+# may hold upserted rows cannot be pruned from its (stale) stored stats.
 report = db.explain(filters=[field("age") > 200])
 print("files scanned for age>200:", report.counters.files_scanned)
+
+# Updates/deletes above were merge-on-read: they staged small delta files
+# instead of rewriting data files.  maintenance_stats() reports the delta
+# chain and whether the cost-based trigger recommends compacting it.
+stats = db.maintenance_stats()
+print(stats)
+
+# compact() folds the delta chain back into sorted base files...
+result = db.compact()
+print("compacted:", result.compacted,
+      "| deltas folded:", result.deltas_merged,
+      "| delta files now:", db.n_delta_files)
+
+# ...which restores full stats pruning: now nothing is scanned
+report = db.explain(filters=[field("age") > 200])
+print("files scanned for age>200 after compact:",
+      report.counters.files_scanned)
 
 # Normalize file/row-group layout
 db.normalize(NormalizeConfig(max_rows_per_file=500))

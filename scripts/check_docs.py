@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Docs checker: validate markdown links and execute python code blocks.
+
+Usage:  PYTHONPATH=src python scripts/check_docs.py [files...]
+
+Defaults to README.md and docs/*.md. Two checks keep the examples honest:
+
+1. **Links** — every relative markdown link target must exist on disk
+   (anchors are stripped; http(s)/mailto links are skipped).
+2. **Code blocks** — every ```python fence is executed, blocks of the same
+   file sharing one namespace (so a later block can use ``db`` from an
+   earlier one), with the working directory set to a throwaway tempdir.
+   Blocks containing ``>>>`` prompts are console transcripts and are only
+   syntax-checked via doctest parsing; a block preceded by an
+   ``<!-- docs-check: skip -->`` comment is skipped entirely.
+
+CI runs this in the docs job so examples cannot rot.
+"""
+from __future__ import annotations
+
+import doctest
+import os
+import re
+import sys
+import tempfile
+import traceback
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+SKIP_MARK = "<!-- docs-check: skip -->"
+
+
+def iter_code_blocks(text: str):
+    """Yield (start_line, lang, code, skipped) for each fenced block."""
+    lines = text.splitlines()
+    i, pending_skip = 0, False
+    while i < len(lines):
+        stripped = lines[i].strip()
+        m = FENCE_RE.match(stripped)
+        if m:
+            lang, start = m.group(1).lower(), i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].strip().startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield start, lang, "\n".join(body), pending_skip
+            pending_skip = False
+        elif stripped:
+            pending_skip = stripped == SKIP_MARK
+        i += 1
+
+
+def check_links(path: str, text: str) -> list:
+    errors = []
+    base = os.path.dirname(path)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            line = text[:m.start()].count("\n") + 1
+            errors.append(f"{path}:{line}: broken link -> {target}")
+    return errors
+
+
+def run_code_blocks(path: str, text: str) -> list:
+    errors = []
+    ns = {"__name__": "__docs__"}
+    cwd = os.getcwd()
+    with tempfile.TemporaryDirectory(prefix="docs_check_") as tmp:
+        os.chdir(tmp)
+        try:
+            for line, lang, code, skipped in iter_code_blocks(text):
+                if lang != "python" or skipped or not code.strip():
+                    continue
+                if ">>>" in code:
+                    # console transcript: parse-only (outputs are prose)
+                    try:
+                        doctest.DocTestParser().get_examples(code)
+                    except ValueError as e:
+                        errors.append(f"{path}:{line}: bad doctest block: {e}")
+                    continue
+                try:
+                    exec(compile(code, f"{path}:{line}", "exec"), ns)
+                except Exception:
+                    tb = traceback.format_exc(limit=2)
+                    errors.append(f"{path}:{line}: code block raised:\n{tb}")
+        finally:
+            os.chdir(cwd)
+    return errors
+
+
+def main(argv) -> int:
+    files = argv or [os.path.join(REPO, "README.md")] + sorted(
+        os.path.join(REPO, "docs", f)
+        for f in os.listdir(os.path.join(REPO, "docs"))
+        if f.endswith(".md"))
+    errors = []
+    n_blocks = 0
+    for path in files:
+        with open(path) as fh:
+            text = fh.read()
+        errors += check_links(path, text)
+        before = len(errors)
+        errors += run_code_blocks(path, text)
+        n_blocks += sum(1 for _, lang, code, skip in iter_code_blocks(text)
+                        if lang == "python" and not skip and code.strip())
+        status = "ok" if len(errors) == before else "FAIL"
+        print(f"{os.path.relpath(path, REPO)}: {status}")
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        return 1
+    print(f"checked {len(files)} files, {n_blocks} python blocks: all good")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

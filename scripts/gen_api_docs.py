@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Generate docs/API.md from the public docstrings of repro.core.
+
+Usage:
+    PYTHONPATH=src python scripts/gen_api_docs.py          # rewrite docs/API.md
+    PYTHONPATH=src python scripts/gen_api_docs.py --check  # fail if stale
+
+The reference is generated, not hand-written, so it cannot drift from the
+code: CI runs ``--check`` (see .github/workflows/ci.yml, docs job).
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import os
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.core import compaction, scan, store, transactions  # noqa: E402
+
+OUT = os.path.join(REPO, "docs", "API.md")
+
+HEADER = """\
+# API reference
+
+<!-- GENERATED FILE — do not edit by hand.
+     Regenerate with: PYTHONPATH=src python scripts/gen_api_docs.py -->
+
+Generated from the docstrings of `repro.core`. The classes below are the
+public surface of the database layer; see
+[ARCHITECTURE.md](ARCHITECTURE.md) for how they fit together and
+[TRANSACTIONS.md](TRANSACTIONS.md) for the transaction/maintenance
+lifecycle.
+"""
+
+# (class, members); None = every public method, () = class docstring only
+SECTIONS = [
+    (store.ParquetDB,
+     ["create", "read", "update", "delete", "normalize", "compact",
+      "maintenance_stats", "explain", "wait_for_maintenance",
+      "set_metadata", "set_field_metadata"]),
+    (store.Dataset, ["schema", "iter_batches", "to_table", "scan_plan",
+                     "explain"]),
+    (store.NormalizeConfig, ()),
+    (store.LoadConfig, ()),
+    (compaction.CompactionPolicy, ()),
+    (compaction.MaintenanceStats, ()),
+    (compaction.CompactionResult, ()),
+    (scan.ScanPlan, ["fragments", "execute", "explain"]),
+    (scan.ScanCounters, ()),
+    (scan.ScanReport, ()),
+    (scan.DeltaOverlay, ()),
+    (transactions.Manifest, ()),
+    (transactions.DeltaEntry, ()),
+]
+
+
+def _clean_doc(obj) -> str:
+    doc = inspect.getdoc(obj) or "*(undocumented)*"
+    return doc.strip()
+
+
+def _signature(obj) -> str:
+    try:
+        return str(inspect.signature(obj))
+    except (TypeError, ValueError):
+        return "(...)"
+
+
+def _dataclass_fields(cls) -> str:
+    lines = ["| field | default |", "|---|---|"]
+    for f in dataclasses.fields(cls):
+        if f.default is not dataclasses.MISSING:
+            default = repr(f.default)
+        elif f.default_factory is not dataclasses.MISSING:  # type: ignore
+            default = f.default_factory.__name__ + "()"
+        else:
+            default = "—"
+        lines.append(f"| `{f.name}` | `{default}` |")
+    return "\n".join(lines)
+
+
+def render() -> str:
+    parts = [HEADER]
+    for cls, members in SECTIONS:
+        parts.append(f"## `{cls.__module__}.{cls.__qualname__}`\n")
+        parts.append(_clean_doc(cls) + "\n")
+        if dataclasses.is_dataclass(cls) and not members:
+            parts.append(_dataclass_fields(cls) + "\n")
+        for name in (members or []):
+            member = inspect.getattr_static(cls, name)
+            if isinstance(member, property):
+                parts.append(f"### `{name}` *(property)*\n")
+                parts.append(_clean_doc(member.fget) + "\n")
+                continue
+            fn = member.__func__ if isinstance(member, (classmethod,
+                                                        staticmethod)) \
+                else member
+            parts.append(f"### `{name}{_signature(fn)}`\n")
+            parts.append(_clean_doc(fn) + "\n")
+    return "\n".join(parts).rstrip() + "\n"
+
+
+def main(argv) -> int:
+    text = render()
+    if "--check" in argv:
+        try:
+            with open(OUT) as fh:
+                current = fh.read()
+        except FileNotFoundError:
+            current = ""
+        if current != text:
+            sys.stderr.write(
+                "docs/API.md is stale — regenerate with:\n"
+                "  PYTHONPATH=src python scripts/gen_api_docs.py\n")
+            return 1
+        print("docs/API.md up to date")
+        return 0
+    with open(OUT, "w") as fh:
+        fh.write(text)
+    print(f"wrote {os.path.relpath(OUT, REPO)} "
+          f"({len(text.splitlines())} lines)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -9,13 +9,17 @@ from .schema import Field, ID_COLUMN, Schema
 from .table import Column, Table, concat_tables
 from .expressions import Expr, field
 from .fileformat import TPQReader, TPQWriter, read_table, write_table
-from .scan import FragmentPlan, ScanCounters, ScanPlan, ScanReport
+from .scan import (DeltaOverlay, FragmentPlan, ScanCounters, ScanPlan,
+                   ScanReport)
+from .compaction import CompactionPolicy, CompactionResult, MaintenanceStats
+from .transactions import DeltaEntry, Manifest
 from .store import Dataset, LoadConfig, NormalizeConfig, ParquetDB
 
 __all__ = [
     "DType", "Field", "ID_COLUMN", "Schema", "Column", "Table",
     "concat_tables", "Expr", "field", "TPQReader", "TPQWriter",
-    "read_table", "write_table", "FragmentPlan", "ScanCounters",
-    "ScanPlan", "ScanReport", "Dataset", "LoadConfig",
-    "NormalizeConfig", "ParquetDB",
+    "read_table", "write_table", "DeltaOverlay", "FragmentPlan",
+    "ScanCounters", "ScanPlan", "ScanReport", "CompactionPolicy",
+    "CompactionResult", "MaintenanceStats", "DeltaEntry", "Manifest",
+    "Dataset", "LoadConfig", "NormalizeConfig", "ParquetDB",
 ]

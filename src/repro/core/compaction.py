@@ -1,0 +1,283 @@
+"""Compaction: fold the merge-on-read delta chain back into sorted base files.
+
+``update``/``delete`` are O(delta): they stage small upsert/tombstone files
+instead of rewriting base files (see :mod:`repro.core.scan` for the read-time
+overlay).  The price is read-side decay — delta-overlapped fragments lose
+stats pruning, tombstoned rows are filtered on every scan, and small files
+accumulate.  This module is the maintenance half of that bargain:
+
+  - :func:`gather_stats` summarizes the decay from footers alone
+    (``db.maintenance_stats()``): base/delta file counts, staged delta rows,
+    delta ratio, small-file count, row-group fill.
+  - :class:`CompactionPolicy` turns the summary into a **cost-based
+    trigger** (``should_compact``): delta file count, delta-to-base row
+    ratio, small-file count, and row-group fill each have a threshold.
+  - :func:`compact_locked` performs the merge under the caller's writer
+    lock: it selects the *affected* base files (those whose id range a
+    delta can touch, plus under-filled files), streams them through a
+    ``ScanPlan`` with the delta overlay applied, sorts the merged rows by
+    id, and rewrites them as full base files.  Untouched base files keep
+    their names — compaction cost scales with the affected region, not the
+    dataset.
+
+Durability/isolation: compaction is just another manifest commit.  The new
+base files are staged first; a crash before the commit leaves the previous
+generation (base files + delta chain) fully readable and the staged files
+are garbage-collected on the next open.  Old-generation files are *not*
+deleted inline after the commit — readers holding the pre-compaction
+manifest snapshot keep a consistent view until the next open GCs the
+orphans (docs/TRANSACTIONS.md covers the full lifecycle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from .fileformat import DEFAULT_ROW_GROUP_ROWS, TPQReader
+from .scan import DeltaOverlay, ScanPlan
+from .schema import ID_COLUMN, Schema
+from .table import Table, concat_tables
+from .transactions import DELTA_TOMBSTONE, DatasetDir, Manifest
+
+__all__ = ["CompactionPolicy", "MaintenanceStats", "CompactionResult",
+           "gather_stats", "compact_locked"]
+
+
+@dataclasses.dataclass
+class CompactionPolicy:
+    """Thresholds for the cost-based compaction trigger.
+
+    A dataset "needs" compaction when any of these is exceeded; the check
+    itself is footer-only (cheap enough to run after every write).
+    """
+    max_delta_files: int = 4        # delta chain length before folding
+    max_delta_ratio: float = 0.10   # staged delta rows / base rows
+    max_small_files: int = 4        # under-filled base files to tolerate
+    min_file_fill: float = 0.5      # a base file with fewer rows than
+    #                                 min_file_fill * target_rows_per_file
+    #                                 counts as "small"
+    target_rows_per_file: Optional[int] = None
+    # rows per rewritten base file, and the reference for small-file
+    # detection.  None (default) disables small-file coalescing entirely —
+    # only an explicit target declares a layout intent worth rewriting for
+    # (otherwise compaction would fight normalize()'s layout) — and chunks
+    # rewrites at the TPQ row-group default.
+    min_row_group_fill: float = 0.0  # mean rows-per-row-group / target
+    #                                  below this triggers; 0 disables
+    target_rows_per_group: int = 131_072
+
+
+@dataclasses.dataclass
+class MaintenanceStats:
+    """Footer-only health summary returned by ``db.maintenance_stats()``."""
+    generation: int = 0
+    base_files: int = 0
+    base_rows: int = 0
+    delta_files: int = 0
+    upsert_rows: int = 0         # rows staged in upsert deltas
+    tombstone_rows: int = 0      # ids staged in tombstone deltas
+    delta_ratio: float = 0.0     # (upsert + tombstone rows) / base rows
+    small_files: int = 0         # base files below the fill threshold
+    row_group_fill: float = 0.0  # mean rows per row group / target
+    should_compact: bool = False
+    reasons: List[str] = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        lines = [
+            f"MaintenanceStats  generation={self.generation}",
+            f"  base:   {self.base_files} files, {self.base_rows} rows "
+            f"(fill {self.row_group_fill:.2f}, {self.small_files} small)",
+            f"  deltas: {self.delta_files} files, {self.upsert_rows} upsert "
+            f"rows, {self.tombstone_rows} tombstoned ids "
+            f"(ratio {self.delta_ratio:.3f})",
+            f"  compact recommended: {self.should_compact}"
+            + (f" ({'; '.join(self.reasons)})" if self.reasons else ""),
+        ]
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class CompactionResult:
+    """Outcome of one ``db.compact()`` call."""
+    compacted: bool
+    reasons: List[str] = dataclasses.field(default_factory=list)
+    files_merged: int = 0        # base files rewritten
+    deltas_merged: int = 0       # delta files folded in
+    files_written: int = 0       # new base files produced
+    rows_written: int = 0
+    dropped_files: List[str] = dataclasses.field(default_factory=list)
+    generation: int = 0          # manifest generation after the commit
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def gather_stats(man: Manifest, reader_of: Callable[[str], TPQReader],
+                 policy: CompactionPolicy) -> MaintenanceStats:
+    """Summarize dataset health from footers; never touches a data page."""
+    s = MaintenanceStats(generation=man.generation,
+                         base_files=len(man.files),
+                         delta_files=len(man.deltas))
+    n_groups = 0
+    for fn in man.files:
+        rd = reader_of(fn)
+        s.base_rows += rd.num_rows
+        n_groups += max(rd.num_row_groups, 1)
+        if (policy.target_rows_per_file
+                and rd.num_rows < policy.min_file_fill
+                * policy.target_rows_per_file):
+            s.small_files += 1
+    for d in man.deltas:
+        rd = reader_of(d.name)
+        if d.kind == DELTA_TOMBSTONE:
+            s.tombstone_rows += rd.num_rows
+        else:
+            s.upsert_rows += rd.num_rows
+    s.delta_ratio = (s.upsert_rows + s.tombstone_rows) / max(s.base_rows, 1)
+    s.row_group_fill = (s.base_rows / n_groups
+                        / policy.target_rows_per_group) if n_groups else 0.0
+    if s.delta_files > policy.max_delta_files:
+        s.reasons.append(f"delta chain length {s.delta_files} "
+                         f"> {policy.max_delta_files}")
+    if s.delta_files and s.delta_ratio > policy.max_delta_ratio:
+        s.reasons.append(f"delta ratio {s.delta_ratio:.3f} "
+                         f"> {policy.max_delta_ratio}")
+    if s.small_files > policy.max_small_files:
+        s.reasons.append(f"{s.small_files} small files "
+                         f"> {policy.max_small_files}")
+    if (policy.min_row_group_fill and s.base_files
+            and s.row_group_fill < policy.min_row_group_fill):
+        s.reasons.append(f"row-group fill {s.row_group_fill:.3f} "
+                         f"< {policy.min_row_group_fill}")
+    s.should_compact = bool(s.reasons)
+    return s
+
+
+def _affected_files(man: Manifest, reader_of, policy: CompactionPolicy,
+                    shadow_ids: np.ndarray, force: bool) -> List[str]:
+    """Base files that must be rewritten, in manifest order.
+
+    A file is affected when a delta can touch it (any shadowed id inside
+    its id range — conservative range check via the footer stats, then
+    exact against the sorted shadow set) or when it is under-filled and a
+    small-file coalesce is due.  ``force`` selects everything.
+    """
+    if force:
+        return list(man.files)
+    small: List[str] = []
+    touched: List[str] = []
+    lo_hi = (int(shadow_ids[0]), int(shadow_ids[-1])) if len(shadow_ids) \
+        else None
+    for fn in man.files:
+        rd = reader_of(fn)
+        hit = False
+        if lo_hi is not None:
+            st = rd.file_stats().get(ID_COLUMN)
+            if st is None or st.min is None:
+                hit = True
+            elif st.overlaps_range(*lo_hi):
+                a = np.searchsorted(shadow_ids, st.min, "left")
+                b = np.searchsorted(shadow_ids, st.max, "right")
+                hit = b > a
+        if hit:
+            touched.append(fn)
+        elif (policy.target_rows_per_file
+                and rd.num_rows < policy.min_file_fill
+                * policy.target_rows_per_file):
+            small.append(fn)
+    # coalescing a single small file is churn, not progress — only merge
+    # small files when there are at least two (or they ride along a delta
+    # merge anyway)
+    if touched or len(small) >= 2:
+        order = {fn: i for i, fn in enumerate(man.files)}
+        return sorted(set(touched) | set(small), key=order.__getitem__)
+    return touched
+
+
+def compact_locked(dirobj: DatasetDir, man: Manifest, schema: Schema,
+                   reader_of: Callable[[str], TPQReader],
+                   write_file: Callable[[str, Table], None],
+                   policy: Optional[CompactionPolicy] = None,
+                   force: bool = False) -> CompactionResult:
+    """Merge deltas + small files into sorted base files; mutate ``man``.
+
+    Caller must hold the writer lock and commit ``man`` afterwards iff
+    ``result.compacted``.  Staged files become garbage (collected on next
+    open) if the caller's commit never happens — crash-safe by construction.
+    """
+    policy = policy or CompactionPolicy()
+    result = CompactionResult(compacted=False, generation=man.generation)
+    if not man.files and not man.deltas:
+        return result
+    # Resolve the chain once: the same overlay drives affected-file
+    # selection here and the merge scan below.  The manifest schema always
+    # leads with the id column, so it is a valid overlay read schema.
+    overlay = DeltaOverlay(man.deltas, reader_of, schema) if man.deltas \
+        else None
+    shadow = overlay.shadow_ids if overlay is not None \
+        else np.empty(0, np.int64)
+    merge = _affected_files(man, reader_of, policy, shadow, force)
+    if overlay is not None and len(overlay.upsert_ids) and not merge:
+        merge = list(man.files)  # never drop an upsert: merge everything
+    if not merge and not man.deltas:
+        return result
+    if man.deltas:
+        result.reasons.append(f"fold {len(man.deltas)} delta files")
+    if merge:
+        result.reasons.append(f"rewrite {len(merge)} base files")
+    # Merged view of the affected region only: the overlay substitutes
+    # upserts / drops tombstones while streaming; every shadowed base row
+    # lives in an affected file (range check is conservative-inclusive),
+    # so the subset scan observes the complete delta effect.
+    plan = ScanPlan(merge, reader_of, schema, deltas=man.deltas,
+                    overlay=overlay)
+    parts = list(plan.execute())
+    keep = [fn for fn in man.files if fn not in set(merge)]
+    new_files: List[str] = []
+    rows_written = 0
+    if parts:
+        merged = concat_tables(parts)
+        ids = merged.column(ID_COLUMN).values
+        order = np.argsort(ids, kind="stable")
+        merged = merged.take(order)
+        step = max(int(policy.target_rows_per_file
+                       or DEFAULT_ROW_GROUP_ROWS), 1)
+        # A kept file may sit *between* merged files in id space; an output
+        # file spanning its range would break global id order (and future
+        # id-range overlap checks).  Cut the sorted merge at every kept
+        # file's min id so output ranges interleave cleanly with kept ones.
+        cut_ids = sorted(_min_id(reader_of(fn)) for fn in keep)
+        cuts = np.unique(np.searchsorted(ids[order], cut_ids))
+        bounds = [0] + [int(c) for c in cuts if 0 < c < merged.num_rows] \
+            + [merged.num_rows]
+        for seg_lo, seg_hi in zip(bounds, bounds[1:]):
+            for s in range(seg_lo, seg_hi, step):
+                piece = merged.slice(s, min(s + step, seg_hi))
+                nf = dirobj.new_file_name(man)
+                write_file(dirobj.file_path(nf), piece)
+                new_files.append(nf)
+                rows_written += piece.num_rows
+    result.dropped_files = merge + [d.name for d in man.deltas]
+    man.files = _sorted_by_min_id(keep + new_files, reader_of)
+    man.deltas = []
+    result.compacted = True
+    result.files_merged = len(merge)
+    result.deltas_merged = len(result.dropped_files) - len(merge)
+    result.files_written = len(new_files)
+    result.rows_written = rows_written
+    return result
+
+
+def _min_id(rd: TPQReader):
+    st = rd.file_stats().get(ID_COLUMN)
+    return st.min if st is not None and st.min is not None else 0
+
+
+def _sorted_by_min_id(files: List[str], reader_of) -> List[str]:
+    """Order base files by their minimum id so scans stay id-ordered."""
+    return sorted(files, key=lambda fn: _min_id(reader_of(fn)))

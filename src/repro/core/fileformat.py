@@ -55,7 +55,12 @@ class TPQWriter:
                  row_group_rows: int = DEFAULT_ROW_GROUP_ROWS,
                  with_bloom: bool = True,
                  field_encodings: Optional[Dict[str, str]] = None,
-                 field_codecs: Optional[Dict[str, str]] = None):
+                 field_codecs: Optional[Dict[str, str]] = None,
+                 file_kind: str = "base"):
+        # file_kind: "base" | "upsert" | "tombstone" — a footer flag marking
+        # merge-on-read delta files, so an orphaned .tpq is self-describing
+        # even without the manifest (crash forensics, external tools).
+        self.file_kind = file_kind
         self._fh = open(path, "wb")
         self._fh.write(MAGIC)
         self._off = len(MAGIC)
@@ -177,6 +182,8 @@ class TPQWriter:
             "schema": (self._schema or Schema([])).to_dict(),
             "row_groups": self._row_groups,
         }
+        if self.file_kind != "base":
+            footer["kind"] = self.file_kind
         blob = zlib.compress(json.dumps(footer).encode("utf-8"), 6)
         self._fh.write(blob)
         self._fh.write(struct.pack("<Q", len(blob)))
@@ -216,6 +223,7 @@ class TPQReader:
             footer = json.loads(zlib.decompress(fh.read(flen)))
         self.footer = footer
         self.schema = Schema.from_dict(footer["schema"])
+        self.file_kind: str = footer.get("kind", "base")
         self.num_rows: int = footer["num_rows"]
         self.row_groups: List[dict] = footer["row_groups"]
         self._file_stats: Optional[Dict[str, ColumnStats]] = None

@@ -28,6 +28,25 @@ and testable — ``db.explain(filters=...)`` from user code.
 Execution reuses the threaded readahead of the original read path
 (:func:`prefetch`): fragments decode on a background thread while the
 consumer drains already-decoded tables.
+
+**Merge-on-read deltas.**  A manifest may carry a chain of delta files
+(:class:`repro.core.transactions.DeltaEntry`) — *upsert* files holding
+full-width replacement rows and *tombstone* files holding deleted ids.
+:class:`DeltaOverlay` resolves the chain once per scan (last commit wins
+per id) and the planner overlays it on the base fragments **in place**:
+
+  - a base row whose id has a live upsert is substituted with the upsert
+    row at its original position (row order is preserved, and the residual
+    filter sees the *merged* values);
+  - a base row whose final state is a tombstone is dropped;
+  - fragments whose id range can contain an upserted row lose stats
+    pruning and reader pushdown (their stored statistics describe stale
+    values), are decoded fully, and are filtered after substitution —
+    soundness over speed.  Compaction folds the chain back into base files
+    and restores full pruning; ``maintenance_stats()`` reports the decay.
+
+Tombstones never disable pruning: dropping rows commutes with filtering,
+so a fragment shadowed only by deletes keeps its pushdown.
 """
 from __future__ import annotations
 
@@ -37,13 +56,16 @@ import threading
 from typing import (Callable, Dict, Generator, Iterable, List, Optional,
                     Sequence)
 
+import numpy as np
+
 from .expressions import Expr
 from .fileformat import TPQReader
-from .schema import Schema
+from .schema import ID_COLUMN, Schema
 from .table import Table, concat_tables
+from .transactions import DELTA_TOMBSTONE, DeltaEntry
 
 __all__ = ["ScanCounters", "FragmentPlan", "ScanReport", "ScanPlan",
-           "file_may_match", "prefetch"]
+           "DeltaOverlay", "file_may_match", "prefetch"]
 
 
 @dataclasses.dataclass
@@ -68,6 +90,13 @@ class ScanCounters:
     bytes_total: int = 0        # stored bytes of every chunk in every file
     bytes_selected: int = 0     # projected columns of surviving row groups
     bytes_decoded: int = 0      # actually decoded (after page pruning)
+    # merge-on-read delta work (planning fills the first three from the
+    # delta chain; execution fills applied/shadowed as rows are merged)
+    delta_files: int = 0            # delta files in the overlaid chain
+    delta_upsert_rows: int = 0      # rows staged in upsert files
+    delta_tombstone_rows: int = 0   # ids staged in tombstone files
+    delta_rows_applied: int = 0     # base rows substituted with upsert rows
+    rows_shadowed: int = 0          # base rows dropped by tombstones
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -81,6 +110,7 @@ class FragmentPlan:
     row_groups: List[int]       # surviving row-group indices
     pushdown: bool              # filter evaluated inside the reader
     pruned: bool                # whole file eliminated by stats
+    delta_overlap: bool = False  # may hold upserted rows: full decode
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -120,6 +150,14 @@ class ScanReport:
             f"  bytes:      {c.bytes_selected} selected "
             f"of {c.bytes_total} stored",
         ]
+        if c.delta_files:
+            d = (f"  deltas:     {c.delta_files} files "
+                 f"({c.delta_upsert_rows} upsert rows, "
+                 f"{c.delta_tombstone_rows} tombstoned ids)")
+            if self.executed:
+                d += (f"; {c.delta_rows_applied} applied, "
+                      f"{c.rows_shadowed} rows dropped")
+            lines.append(d)
         if self.executed:
             lines.append(
                 f"  executed:   {c.pages_scanned} pages decoded "
@@ -129,6 +167,135 @@ class ScanReport:
             lines.append("  (planned only — pass execute=True for decode "
                          "counters)")
         return "\n".join(lines)
+
+
+class DeltaOverlay:
+    """Resolved merge-on-read state of a delta chain, for one scan snapshot.
+
+    Built once per scan from the manifest's delta entries, **in commit
+    order**: for every id touched by the chain, the last delta wins —
+
+      - final state *upsert*  → the id is in ``upsert_ids`` and its
+        replacement row (aligned to the scan's read schema) is in
+        ``upserts``;
+      - final state *tombstone* → the id is in ``dead_ids``.
+
+    ``apply`` overlays a decoded base-fragment table: upserted rows are
+    substituted in place (row order preserved), tombstoned rows dropped.
+    Upserts only take effect where their base row is scanned, which is what
+    makes overlaying a *subset* of base files (compaction's merge set)
+    correct: rows of untouched files stay untouched.
+    """
+
+    def __init__(self, entries: Sequence[DeltaEntry],
+                 reader_of: Callable[[str], TPQReader],
+                 read_schema: Schema):
+        self.entries = list(entries)
+        self.upsert_rows_total = 0     # rows staged across all upsert files
+        self.tombstone_rows_total = 0  # ids staged across all tombstone files
+        ids_parts: List[np.ndarray] = []
+        pos_parts: List[np.ndarray] = []
+        row_parts: List[np.ndarray] = []
+        up_tables: List[Table] = []
+        up_offset = 0
+        for pos, e in enumerate(self.entries):
+            rd = reader_of(e.name)
+            if rd.file_kind != e.kind:
+                raise IOError(f"{e.name}: footer kind {rd.file_kind!r} "
+                              f"does not match manifest kind {e.kind!r}")
+            if e.kind == DELTA_TOMBSTONE:
+                ids = rd.read(columns=[ID_COLUMN]).column(ID_COLUMN) \
+                        .values.astype(np.int64, copy=False)
+                self.tombstone_rows_total += len(ids)
+                rows = np.full(len(ids), -1, np.int64)
+            else:
+                cols = [n for n in read_schema.names if n in rd.schema]
+                t = rd.read(columns=cols).align_to_schema(read_schema)
+                ids = t.column(ID_COLUMN).values.astype(np.int64, copy=False)
+                self.upsert_rows_total += len(ids)
+                rows = up_offset + np.arange(len(ids), dtype=np.int64)
+                up_tables.append(t)
+                up_offset += len(ids)
+            ids_parts.append(ids)
+            pos_parts.append(np.full(len(ids), pos, np.int64))
+            row_parts.append(rows)
+        if ids_parts:
+            ids = np.concatenate(ids_parts)
+            pos = np.concatenate(pos_parts)
+            rows = np.concatenate(row_parts)
+            order = np.lexsort((pos, ids))   # by id, then commit position
+            ids, rows = ids[order], rows[order]
+            last = np.ones(len(ids), bool)   # last occurrence per id wins
+            last[:-1] = ids[1:] != ids[:-1]
+            self.shadow_ids = ids[last]      # sorted, unique
+            win_rows = rows[last]
+        else:
+            self.shadow_ids = np.empty(0, np.int64)
+            win_rows = np.empty(0, np.int64)
+        live = win_rows >= 0
+        self.upsert_ids = self.shadow_ids[live]   # sorted
+        self.dead_ids = self.shadow_ids[~live]    # sorted
+        if len(self.upsert_ids):
+            all_up = (up_tables[0] if len(up_tables) == 1
+                      else concat_tables(up_tables).align_to_schema(read_schema))
+            self.upserts: Optional[Table] = all_up.take(win_rows[live])
+        else:
+            self.upserts = None
+
+    @property
+    def has_work(self) -> bool:
+        return len(self.shadow_ids) > 0
+
+    @staticmethod
+    def _member_mask(sorted_arr: np.ndarray, ids: np.ndarray) -> np.ndarray:
+        if not len(sorted_arr) or not len(ids):
+            return np.zeros(len(ids), bool)
+        p = np.clip(np.searchsorted(sorted_arr, ids), 0, len(sorted_arr) - 1)
+        return sorted_arr[p] == ids
+
+    def upsert_pos(self, ids: np.ndarray) -> np.ndarray:
+        """Per id: row index into ``upserts``, or -1 if not upserted."""
+        out = np.full(len(ids), -1, np.int64)
+        if len(self.upsert_ids) and len(ids):
+            p = np.clip(np.searchsorted(self.upsert_ids, ids), 0,
+                        len(self.upsert_ids) - 1)
+            hit = self.upsert_ids[p] == ids
+            out[hit] = p[hit]
+        return out
+
+    def file_overlaps_upserts(self, rd: TPQReader) -> bool:
+        """Can this base file contain a row replaced by a live upsert?
+
+        Exact against the file's id [min, max] (ids are unique across base
+        files, so range containment of any upsert id is the right test);
+        conservative True when the stats are missing.
+        """
+        if not len(self.upsert_ids):
+            return False
+        st = rd.file_stats().get(ID_COLUMN)
+        if st is None or st.min is None:
+            return True
+        lo = np.searchsorted(self.upsert_ids, st.min, "left")
+        hi = np.searchsorted(self.upsert_ids, st.max, "right")
+        return bool(hi > lo)
+
+    def apply(self, t: Table, counters: ScanCounters) -> Table:
+        """Overlay one decoded base table: substitute upserts, drop dead."""
+        ids = t.column(ID_COLUMN).values
+        up = self.upsert_pos(ids)
+        upd = up >= 0
+        if upd.any():
+            n = t.num_rows
+            need = up[upd]  # only the upsert rows this batch references
+            sel = np.arange(n, dtype=np.int64)
+            sel[upd] = n + np.arange(len(need), dtype=np.int64)
+            t = concat_tables([t, self.upserts.take(need)]).take(sel)
+            counters.delta_rows_applied += int(len(need))
+        dead = self._member_mask(self.dead_ids, ids)
+        if dead.any():
+            counters.rows_shadowed += int(dead.sum())
+            t = t.filter_mask(~dead)
+        return t
 
 
 class ScanPlan:
@@ -144,6 +311,12 @@ class ScanPlan:
     cfg:         duck-typed config — ``use_threads`` / ``fragment_readahead``
                  (both ``LoadConfig`` and ``NormalizeConfig`` qualify).
     prune:       set False to disable all stats pruning (oracle/testing).
+    deltas:      merge-on-read chain (manifest ``DeltaEntry`` list, commit
+                 order) to overlay on the base files; empty = plain scan.
+    overlay:     an already-resolved :class:`DeltaOverlay` for ``deltas``
+                 to reuse (compaction resolves the chain once for
+                 affected-file selection and passes it through); its read
+                 schema must cover this plan's read set.
     """
 
     def __init__(self, files: Sequence[str],
@@ -151,12 +324,15 @@ class ScanPlan:
                  schema: Schema,
                  columns: Optional[Sequence[str]] = None,
                  filter_expr: Optional[Expr] = None,
-                 cfg=None, prune: bool = True):
+                 cfg=None, prune: bool = True,
+                 deltas: Sequence[DeltaEntry] = (),
+                 overlay: Optional[DeltaOverlay] = None):
         self._files = list(files)
         self._reader_of = reader_of
         self._schema = schema
         self._expr = filter_expr
         self._prune = prune
+        self._deltas = list(deltas)
         self._use_threads = bool(getattr(cfg, "use_threads", True))
         self._readahead = int(getattr(cfg, "fragment_readahead", 4))
         out_names = list(columns) if columns is not None else schema.names
@@ -165,11 +341,22 @@ class ScanPlan:
             filter_expr.columns() if filter_expr is not None else [])]
         read_names = out_names + [c for c in self._filter_cols
                                   if c in schema and c not in out_names]
+        if self._deltas and ID_COLUMN not in read_names:
+            read_names.append(ID_COLUMN)  # overlay needs row identity
         self._read_schema = schema.select(read_names)
         self._fragments: Optional[List[FragmentPlan]] = None
         self._plan_counters: Optional[ScanCounters] = None
         self._byte_totals: Optional[tuple] = None
+        self._overlay_obj: Optional[DeltaOverlay] = overlay
         self.last_counters: Optional[ScanCounters] = None
+
+    def _overlay(self) -> Optional[DeltaOverlay]:
+        if not self._deltas:
+            return None
+        if self._overlay_obj is None:
+            self._overlay_obj = DeltaOverlay(self._deltas, self._reader_of,
+                                             self._read_schema)
+        return self._overlay_obj
 
     # ------------------------------------------------------------------ plan
     def fragments(self) -> List[FragmentPlan]:
@@ -177,10 +364,20 @@ class ScanPlan:
         return list(self._fragments)
 
     def _build(self) -> None:
-        """Footer-only planning: no data page is read here."""
+        """Planning: footer-only over the base files.
+
+        When a delta chain is overlaid, the (small, by construction) delta
+        files themselves are read here to resolve the chain — base-file data
+        pages are still never touched during planning.
+        """
         if self._fragments is not None:
             return
+        ov = self._overlay()
         c = ScanCounters()
+        c.delta_files = len(self._deltas)
+        if ov is not None:
+            c.delta_upsert_rows = ov.upsert_rows_total
+            c.delta_tombstone_rows = ov.tombstone_rows_total
         frags: List[FragmentPlan] = []
         for fn in self._files:
             rd = self._reader_of(fn)
@@ -188,12 +385,17 @@ class ScanPlan:
             have = set(rd.schema.names)
             c.files_total += 1
             c.row_groups_total += n
+            # A fragment that may hold upserted rows cannot be pruned or
+            # pushed down from its stored statistics (they describe stale
+            # values): decode it fully and filter after the overlay.
+            overlap = ov is not None and ov.file_overlaps_upserts(rd)
             # pushdown is only sound when the file has every filter column;
             # otherwise missing columns align to null *after* decode and the
             # residual filter runs there (null semantics differ per Expr).
             # prune=False forces the residual path: full decode, no stats.
-            pushdown = self._prune and self._expr is not None and all(
-                col in have for col in self._filter_cols)
+            pushdown = (not overlap and self._prune
+                        and self._expr is not None
+                        and all(col in have for col in self._filter_cols))
             selected = list(range(n))
             if pushdown:
                 if not self._expr.prune(rd.file_stats()):
@@ -207,7 +409,8 @@ class ScanPlan:
             else:
                 c.files_skipped += 1
             frags.append(FragmentPlan(fn, n, selected, pushdown,
-                                      pruned=not selected))
+                                      pruned=not selected,
+                                      delta_overlap=overlap))
         self._fragments, self._plan_counters = frags, c
 
     # --------------------------------------------------------------- execute
@@ -242,10 +445,15 @@ class ScanPlan:
         have = set(rd.schema.names)
         cols_here = [n for n in self._read_schema.names if n in have]
         pushdown = self._expr if frag.pushdown else None
+        ov = self._overlay()
         for t in rd.iter_row_group_tables(cols_here, pushdown,
                                           row_groups=frag.row_groups,
                                           counters=counters):
             t = t.align_to_schema(self._read_schema)
+            if ov is not None and ov.has_work:
+                # merge-on-read: substitute upserts in place, drop dead rows
+                # *before* the residual filter so it sees merged values
+                t = ov.apply(t, counters)
             if self._expr is not None and pushdown is None:
                 mask = self._expr.evaluate(t)
                 if not mask.all():

@@ -105,6 +105,20 @@ class ColumnStats:
     def all_null(self) -> bool:
         return self.num_values > 0 and self.null_count == self.num_values
 
+    def overlaps_range(self, lo: Any, hi: Any) -> bool:
+        """False only when the chunk's [min, max] provably misses [lo, hi].
+
+        Conservative like :meth:`may_contain` (missing stats → True).  The
+        delta overlay and compaction use this on the ``id`` column to decide
+        which base fragments a delta chain can touch.
+        """
+        if self.min is None or lo is None or hi is None:
+            return True
+        try:
+            return not (hi < self.min or lo > self.max)
+        except TypeError:
+            return True
+
     # -- serialization --------------------------------------------------------
     def to_dict(self) -> dict:
         d = {"n": self.num_values, "nulls": self.null_count}

@@ -17,48 +17,79 @@ byte; ``db.explain(filters=...)`` returns the planner's
       files:      0 scanned, 3 pruned (of 3)
       ...
 
-See docs/ARCHITECTURE.md for the full read/write data flow.
+``update``/``delete`` are **merge-on-read**: instead of rewriting every
+affected base file (the paper's O(files) hot spot, §4.5 / Fig. 8) they stage
+one small delta file — full-width upsert rows or tombstoned ids — and commit
+it as a new manifest generation.  The scan planner overlays the delta chain
+at read time; :meth:`ParquetDB.compact` (and the cost-based background
+trigger) folds it back into sorted base files.  ``db.maintenance_stats()``
+reports the read-side decay that makes compaction worthwhile.
+
+See docs/ARCHITECTURE.md for the read/write data flow and
+docs/TRANSACTIONS.md for the transaction + maintenance lifecycle.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import os
+import threading
 from typing import Any, Dict, Generator, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
 
 from . import nested
+from .compaction import (CompactionPolicy, CompactionResult, MaintenanceStats,
+                         compact_locked, gather_stats)
 from .dtypes import DType, KIND_STRING
 from .encodings import AUTO, CODEC_ZLIB
 from .expressions import Expr, IsIn, combine_filters, field
 from .fileformat import (DEFAULT_PAGE_ROWS, DEFAULT_ROW_GROUP_ROWS, TPQReader,
                          TPQWriter)
-from .scan import ScanPlan, ScanReport, file_may_match
+from .scan import DeltaOverlay, ScanPlan, ScanReport
 from .schema import Field, ID_COLUMN, Schema
 from .table import Column, Table, concat_tables, null_column_of
-from .transactions import DatasetDir, Manifest
+from .transactions import (DELTA_TOMBSTONE, DELTA_UPSERT, DatasetDir,
+                           DeltaEntry, Manifest)
 
 TableLike = Union[Table, List[dict], Dict[str, Any]]
 
 # Footer-parse cache: data files are immutable (every rewrite gets a fresh
-# name), so (path, size, mtime) fully identifies a footer.
-_READER_CACHE: "collections.OrderedDict" = __import__("collections").OrderedDict()
+# name), so (path, size, mtime) fully identifies a footer.  Guarded by a
+# lock: background compaction evicts while reader threads look up.
+_READER_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _READER_CACHE_MAX = 128
+_READER_CACHE_LOCK = threading.Lock()
 
 
 def _get_reader(path: str) -> TPQReader:
     st = os.stat(path)
     key = (path, st.st_size, st.st_mtime_ns)
-    rd = _READER_CACHE.get(key)
-    if rd is None:
-        rd = TPQReader(path)
+    with _READER_CACHE_LOCK:
+        rd = _READER_CACHE.get(key)
+        if rd is not None:
+            _READER_CACHE.move_to_end(key)
+            return rd
+    rd = TPQReader(path)  # parse outside the lock (I/O + zlib)
+    with _READER_CACHE_LOCK:
         _READER_CACHE[key] = rd
         if len(_READER_CACHE) > _READER_CACHE_MAX:
             _READER_CACHE.popitem(last=False)
-    else:
-        _READER_CACHE.move_to_end(key)
     return rd
+
+
+def _evict_readers(paths: Iterable[str]) -> None:
+    """Drop cached footers for files removed by compaction/GC.
+
+    Stale keys can never serve a wrong read (lookup re-stats the path), but
+    they pin dead footers in memory until LRU pressure; compaction can drop
+    a whole generation at once, so evict eagerly.
+    """
+    drop = set(paths)
+    with _READER_CACHE_LOCK:
+        for key in [k for k in _READER_CACHE if k[0] in drop]:
+            del _READER_CACHE[key]
 
 
 @dataclasses.dataclass
@@ -94,18 +125,22 @@ class Dataset:
 
     @property
     def schema(self) -> Schema:
+        """Schema of the projected output (resolved against the dataset)."""
         names = self._db._resolve_columns(self._columns, True)
         return self._db.schema.select(names)
 
     def iter_batches(self, batch_size: Optional[int] = None) -> Iterable[Table]:
+        """Stream the scan as Tables of ``batch_size`` rows (lazy)."""
         yield from self._db._iter_batches(
             self._columns, self._filter,
             batch_size or self._cfg.batch_size, self._cfg)
 
     def to_table(self) -> Table:
+        """Materialize the whole scan into one Table."""
         return concat_tables(list(self.iter_batches()))
 
     def scan_plan(self) -> ScanPlan:
+        """The underlying planner (fresh, over the committed manifest)."""
         names = self._db._resolve_columns(self._columns, True)
         return self._db._scan_plan(names, self._filter, self._cfg)
 
@@ -115,6 +150,23 @@ class Dataset:
 
 
 class ParquetDB:
+    """The paper's user-facing database: create/read/update/delete/normalize
+    over immutable TPQ files, plus merge-on-read deltas and compaction.
+
+    Durability is the manifest-commit protocol (docs/TRANSACTIONS.md); reads
+    are planned by :mod:`repro.core.scan` and observable via :meth:`explain`.
+
+    Parameters beyond the paper's:
+
+    auto_compact:      when True (default) a successful ``update``/``delete``
+                       checks the cost-based trigger (``compaction_policy``)
+                       and, if exceeded, runs :meth:`compact` on a background
+                       thread (single-flight; join with
+                       :meth:`wait_for_maintenance`).
+    compaction_policy: thresholds for that trigger and for the rewrite chunk
+                       size — see :class:`repro.core.compaction.CompactionPolicy`.
+    """
+
     def __init__(self, db_path: str, dataset_name: Optional[str] = None,
                  initial_fields: Optional[List[Field]] = None,
                  serialize_python_objects: bool = True,
@@ -125,7 +177,9 @@ class ParquetDB:
                  eager_schema_align: bool = True,
                  with_bloom: bool = True,
                  page_rows: int = DEFAULT_PAGE_ROWS,
-                 row_group_rows: int = DEFAULT_ROW_GROUP_ROWS):
+                 row_group_rows: int = DEFAULT_ROW_GROUP_ROWS,
+                 auto_compact: bool = True,
+                 compaction_policy: Optional[CompactionPolicy] = None):
         self.db_path = db_path
         self.dataset_name = dataset_name or os.path.basename(os.path.normpath(db_path))
         self._dir = DatasetDir(db_path, self.dataset_name)
@@ -137,9 +191,21 @@ class ParquetDB:
         self.with_bloom = with_bloom
         self.page_rows = page_rows
         self.row_group_rows = row_group_rows
-        # startup recovery: GC files not in the committed manifest
-        man = self._dir.load()
-        self._dir.gc(man)
+        self.auto_compact = auto_compact
+        self.compaction_policy = compaction_policy or CompactionPolicy()
+        self._maintenance_thread: Optional[threading.Thread] = None
+        self._maintenance_mutex = threading.Lock()  # single-flight guard
+        # startup recovery: GC files not in the committed manifest (also
+        # collects old generations left behind by a prior compaction).
+        # Best-effort under the writer lock: another process may be mid-
+        # transaction with staged-but-uncommitted files that a lockless
+        # sweep would delete; if a writer is active, skip — a later open
+        # will collect.
+        try:
+            with self._dir.acquire_lock(timeout=0):
+                self._gc(self._dir.load())
+        except TimeoutError:
+            pass
         if initial_fields:
             with self._dir.acquire_lock():
                 man = self._dir.load()
@@ -148,6 +214,12 @@ class ParquetDB:
                 self._dir.commit(man)
 
     # ------------------------------------------------------------------ helpers
+    def _gc(self, man: Manifest) -> None:
+        """Collect unreferenced data files and evict their cached footers."""
+        removed = self._dir.gc(man)
+        if removed:
+            _evict_readers(self._dir.file_path(f) for f in removed)
+
     def _manifest_schema(self, man: Manifest) -> Schema:
         d = man.metadata.get("schema")
         if d is not None:
@@ -162,28 +234,49 @@ class ParquetDB:
 
     @property
     def schema(self) -> Schema:
+        """Unified dataset schema from the committed manifest."""
         return self._manifest_schema(self._dir.load())
 
     @property
     def n_files(self) -> int:
+        """Number of committed *base* files (deltas not included)."""
         return len(self._dir.load().files)
 
     @property
+    def n_delta_files(self) -> int:
+        """Length of the committed merge-on-read delta chain."""
+        return len(self._dir.load().deltas)
+
+    @property
     def n_rows(self) -> int:
+        """Visible (merged) row count, from footers alone.
+
+        Exact without scanning: upserts replace rows 1:1, and tombstone
+        files are pairwise disjoint sets of then-live base ids (``delete``
+        matches against the merged view, so an already-dead id can never be
+        staged twice) — the merged count is base rows minus tombstoned ids.
+        """
         man = self._dir.load()
-        return sum(_get_reader(self._dir.file_path(f)).num_rows for f in man.files)
+        base = sum(_get_reader(self._dir.file_path(f)).num_rows
+                   for f in man.files)
+        dead = sum(self._reader_of(d.name).num_rows for d in man.deltas
+                   if d.kind == DELTA_TOMBSTONE)
+        return base - dead
 
     @property
     def metadata(self) -> dict:
+        """User metadata dict stored in the manifest."""
         return dict(self._dir.load().metadata.get("user", {}))
 
     def set_metadata(self, metadata: dict) -> None:
+        """Merge ``metadata`` into the dataset's user metadata (committed)."""
         with self._dir.acquire_lock():
             man = self._dir.load()
             man.metadata.setdefault("user", {}).update(metadata)
             self._dir.commit(man)
 
     def set_field_metadata(self, name: str, metadata: dict) -> None:
+        """Merge ``metadata`` into one field's metadata (committed)."""
         with self._dir.acquire_lock():
             man = self._dir.load()
             schema = self._manifest_schema(man)
@@ -213,15 +306,23 @@ class ParquetDB:
 
     def _write_file(self, path: str, table: Table,
                     row_group_rows: Optional[int] = None,
-                    page_rows: Optional[int] = None) -> None:
+                    page_rows: Optional[int] = None,
+                    file_kind: str = "base") -> None:
         row_group_rows = row_group_rows or self.row_group_rows
         page_rows = page_rows or self.page_rows
         with TPQWriter(path, codec=self.codec, level=self.level,
                        encoding=self.encoding, page_rows=page_rows,
                        row_group_rows=row_group_rows, with_bloom=self.with_bloom,
                        field_encodings=self.field_encodings,
-                       field_codecs=self.field_codecs) as w:
+                       field_codecs=self.field_codecs,
+                       file_kind=file_kind) as w:
             w.write_table(table)
+
+    def _stage_delta(self, man: Manifest, kind: str, table: Table) -> None:
+        """Write one delta file and append its manifest entry (pre-commit)."""
+        name = self._dir.new_file_name(man, kind=kind)
+        self._write_file(self._dir.file_path(name), table, file_kind=kind)
+        man.deltas.append(DeltaEntry(name, kind))
 
     # ------------------------------------------------------------------ create
     def create(self, data: TableLike, schema: Optional[Schema] = None,
@@ -231,7 +332,17 @@ class ParquetDB:
                normalize_config: Optional[NormalizeConfig] = None,
                treat_fields_as_ragged: Sequence[str] = (),
                convert_to_fixed_shape: bool = True) -> np.ndarray:
-        """Insert records; returns the assigned ids."""
+        """Insert records and return the assigned ids (paper §4.3).
+
+        ``data`` may be a list of dicts, a dict of columns, or a
+        :class:`~repro.core.table.Table`.  Each row gets a monotonically
+        increasing ``id``.  A new field evolves the schema: by default
+        (``eager_schema_align=True``) existing base files are rewritten to
+        the unified schema, per the paper; otherwise old rows align to null
+        at read time.  The new rows are staged as one base file and committed
+        atomically; ``normalize_dataset=True`` re-partitions in the same
+        transaction.
+        """
         incoming = self._to_table(data, schema, treat_fields_as_ragged,
                                   convert_to_fixed_shape)
         with self._dir.acquire_lock():
@@ -266,7 +377,11 @@ class ParquetDB:
             if normalize_dataset:
                 self._normalize_locked(man, normalize_config or NormalizeConfig())
             self._dir.commit(man)
-            self._dir.gc(man)
+            # GC only when this create orphaned files (realign/normalize
+            # rewrite) — a plain append must not sweep old generations a
+            # concurrent reader may still hold (see docs/TRANSACTIONS.md)
+            if (schema_changed and self.eager_schema_align) or normalize_dataset:
+                self._gc(man)
         return ids
 
     # ------------------------------------------------------------------ read
@@ -303,6 +418,26 @@ class ParquetDB:
              rebuild_nested_struct: bool = False,
              rebuild_nested_from_scratch: bool = False,
              load_config: Optional[LoadConfig] = None):
+        """Read records (paper §4.4), optionally filtered and projected.
+
+        ids:            restrict to these row ids (AND-combined with
+                        ``filters``).
+        columns:        projection; dotted names select nested children.
+        include_cols:   when False, ``columns`` lists the columns to *drop*.
+        filters:        list of :class:`~repro.core.expressions.Expr`,
+                        AND-combined, pushed down to footer statistics.
+        load_format:    ``"table"`` (default, materialized),
+                        ``"batches"`` (generator of Tables), or
+                        ``"dataset"`` (lazy :class:`Dataset` handle).
+        batch_size:     row count per batch for ``"batches"``.
+        rebuild_nested_struct: serve from the nested companion dataset
+                        (paper §4.6.1), rebuilt on demand.
+        load_config:    threading/readahead knobs (paper Table 8).
+
+        Reads see the committed manifest snapshot: base files with the
+        delta chain (upserts/tombstones) overlaid at read time, so they are
+        unaffected by concurrent writers or compaction.
+        """
         cfg = load_config or LoadConfig()
         if batch_size:
             cfg = dataclasses.replace(cfg, batch_size=batch_size)
@@ -323,14 +458,24 @@ class ParquetDB:
             return Dataset(self, names, expr, cfg)
         raise ValueError(f"unknown load_format {load_format!r}")
 
+    def _reader_of(self, fn: str) -> TPQReader:
+        return _get_reader(self._dir.file_path(fn))
+
     def _scan_plan(self, names: Optional[List[str]], expr: Optional[Expr],
-                   cfg, prune: bool = True) -> ScanPlan:
-        """Build the read-path planner over the committed manifest."""
-        man = self._dir.load()
-        return ScanPlan(man.files,
-                        lambda fn: _get_reader(self._dir.file_path(fn)),
+                   cfg, prune: bool = True,
+                   man: Optional[Manifest] = None) -> ScanPlan:
+        """Build the read-path planner over a manifest snapshot.
+
+        ``man`` lets write paths (already holding the lock) plan against
+        the manifest they are about to mutate; readers pass None and get
+        the committed snapshot.
+        """
+        if man is None:
+            man = self._dir.load()
+        return ScanPlan(man.files, self._reader_of,
                         self._manifest_schema(man), columns=names,
-                        filter_expr=expr, cfg=cfg, prune=prune)
+                        filter_expr=expr, cfg=cfg, prune=prune,
+                        deltas=man.deltas)
 
     def explain(self, ids: Optional[Sequence[int]] = None,
                 columns: Optional[Sequence[str]] = None,
@@ -340,9 +485,12 @@ class ParquetDB:
                 load_config: Optional[LoadConfig] = None) -> ScanReport:
         """Report how a ``read`` with these arguments would be pruned.
 
-        Planning is footer-only (no data pages decoded).  With
-        ``execute=True`` the scan actually runs and the report additionally
-        carries page/row/bytes-decoded counters.  ``print(report)`` gives a
+        Planning is footer-only over the base files (when a delta chain
+        exists, the small delta files are read to resolve the overlay).
+        With ``execute=True`` the scan actually runs and the report
+        additionally carries page/row/bytes-decoded counters plus the
+        delta-merge work (``delta_rows_applied`` upsert substitutions,
+        ``rows_shadowed`` tombstone drops).  ``print(report)`` gives a
         human-readable summary; ``report.to_dict()`` a JSON-able one.
         """
         expr = self._build_filter(ids, filters)
@@ -403,14 +551,28 @@ class ParquetDB:
                treat_fields_as_ragged: Sequence[str] = (),
                convert_to_fixed_shape: bool = True,
                normalize_config: Optional[NormalizeConfig] = None) -> int:
-        """Update matching records; returns number of rows updated."""
+        """Update matching records; returns the number of rows updated.
+
+        Merge-on-read (paper §4.5, without its write amplification): the
+        current values of rows matching ``update_keys`` are fetched through
+        the scan planner (key-pruned — untouched files are not decoded),
+        the incoming columns are applied, and the resulting full-width rows
+        are staged as **one upsert delta file** and committed.  Cost is
+        O(matched rows + pruned probe), not O(dataset): no base file is
+        rewritten.  Readers substitute the upsert rows by id at scan time;
+        compaction folds them back into base files.
+
+        ``update_keys`` defaults to ``id``; a list of columns forms a
+        composite key.  New columns evolve the schema (old rows read as
+        null).  Within one call, the last incoming row wins per key; across
+        calls, the latest committed delta wins.
+        """
         keys = [update_keys] if isinstance(update_keys, str) else list(update_keys)
         incoming = self._to_table(data, schema, treat_fields_as_ragged,
                                   convert_to_fixed_shape)
         for k in keys:
             if k not in incoming:
                 raise ValueError(f"update data must contain key column {k!r}")
-        updated = 0
         with self._dir.acquire_lock():
             man = self._dir.load()
             current = self._manifest_schema(man)
@@ -425,31 +587,32 @@ class ParquetDB:
                                 if f.name in incoming.columns]))
             key_of = _key_index(incoming, keys)
             keys_expr = _keys_expr(incoming, keys)
-            new_files = []
-            for fn in man.files:
-                rd = _get_reader(self._dir.file_path(fn))
-                # fragment pruning: can this file contain any incoming key?
-                if (not schema_changed and keys_expr is not None
-                        and not file_may_match(rd, keys_expr)):
-                    new_files.append(fn)
-                    continue
-                t = rd.read().align_to_schema(unified)
-                hit_dst, hit_src = _match_rows(t, key_of, keys)
-                if len(hit_dst) == 0 and not schema_changed:
-                    new_files.append(fn)
-                    continue
-                if len(hit_dst):
-                    t = _apply_updates(t, inc_aligned, hit_dst, hit_src, keys)
-                    updated += len(hit_dst)
-                nf = self._dir.new_file_name(man)
-                self._write_file(self._dir.file_path(nf), t)
-                new_files.append(nf)
-            man.files = new_files
+            # fetch the merged current rows that may match (key-pruned scan,
+            # full width: upsert rows must carry every column).  The schema
+            # is set on the manifest first so the plan sees `unified`.
             self._set_manifest_schema(man, unified)
+            plan = self._scan_plan(None, keys_expr, LoadConfig(), man=man)
+            parts = list(plan.execute())
+            snap = concat_tables(parts) if parts else Table.empty(unified)
+            if parts:
+                snap = snap.align_to_schema(unified)
+            hit_dst, hit_src = _match_rows(snap, key_of, keys)
+            updated = len(hit_dst)
+            if updated:
+                sub = snap.take(hit_dst)
+                upsert = _apply_updates(sub, inc_aligned,
+                                        np.arange(updated, dtype=np.int64),
+                                        hit_src, keys)
+                self._stage_delta(man, DELTA_UPSERT, upsert)
+            elif not schema_changed and metadata is None \
+                    and fields_metadata is None:
+                return 0  # nothing to commit
             if normalize_config is not None:
                 self._normalize_locked(man, normalize_config)
             self._dir.commit(man)
-            self._dir.gc(man)
+            if normalize_config is not None:  # append-only otherwise: no GC
+                self._gc(man)
+        self._maybe_autocompact()
         return updated
 
     # ------------------------------------------------------------------ delete
@@ -457,7 +620,18 @@ class ParquetDB:
                columns: Optional[Sequence[str]] = None,
                filters: Optional[Sequence[Expr]] = None,
                normalize_config: Optional[NormalizeConfig] = None) -> int:
-        """Delete rows (by ids/filters) or columns.  Returns rows/cols removed."""
+        """Delete rows (by ids/filters) or whole columns.
+
+        Row deletion is merge-on-read: the ids of matching rows (evaluated
+        against the merged view, so updated values count) are staged as one
+        **tombstone delta file** and committed — O(matched rows), no base
+        file rewritten.  Readers drop tombstoned rows at scan time;
+        compaction removes them physically.
+
+        Column deletion is a schema change and rewrites base files from the
+        merged view, folding any pending delta chain into the same single
+        pass.  Returns the number of rows (or columns) removed.
+        """
         if columns is not None and (ids is not None or filters is not None):
             raise ValueError("row and column deletion are mutually exclusive")
         removed = 0
@@ -473,64 +647,84 @@ class ParquetDB:
                 missing = [c for c in cols if c not in current]
                 if missing:
                     raise KeyError(f"unknown columns {missing}")
+                # one pass: each base file is rewritten from the *merged*
+                # view projected to the surviving columns, folding any
+                # pending delta chain into the same rewrite
+                keep_schema = current.drop(cols)
+                ov = (DeltaOverlay(man.deltas, self._reader_of, keep_schema)
+                      if man.deltas else None)
                 new_files = []
                 for fn in man.files:
-                    t = _get_reader(self._dir.file_path(fn)).read()
-                    t = t.drop([c for c in cols if c in t])
+                    plan = ScanPlan([fn], self._reader_of, keep_schema,
+                                    cfg=LoadConfig(), deltas=man.deltas,
+                                    overlay=ov)
+                    parts = list(plan.execute())
+                    if not parts:
+                        continue  # every row tombstoned: drop the file
                     nf = self._dir.new_file_name(man)
-                    self._write_file(self._dir.file_path(nf), t)
+                    self._write_file(self._dir.file_path(nf),
+                                     concat_tables(parts))
                     new_files.append(nf)
                 man.files = new_files
-                self._set_manifest_schema(man, current.drop(cols))
+                man.deltas = []
+                self._set_manifest_schema(man, keep_schema)
                 removed = len(cols)
             else:
                 expr = self._build_filter(ids, filters)
                 if expr is None:
                     raise ValueError("delete needs ids, filters, or columns")
-                new_files = []
-                for fn in man.files:
-                    rd = _get_reader(self._dir.file_path(fn))
-                    if not file_may_match(rd, expr):
-                        new_files.append(fn)
-                        continue
-                    t = rd.read().align_to_schema(current)
-                    mask = expr.evaluate(t)
-                    k = int(mask.sum())
-                    if k == 0:
-                        new_files.append(fn)
-                        continue
-                    removed += k
-                    t = t.filter_mask(~mask)
-                    if t.num_rows == 0:
-                        continue  # drop empty file
-                    nf = self._dir.new_file_name(man)
-                    self._write_file(self._dir.file_path(nf), t)
-                    new_files.append(nf)
-                man.files = new_files
+                # merged-view match: collect the ids to tombstone
+                plan = self._scan_plan([ID_COLUMN], expr, LoadConfig(),
+                                       man=man)
+                parts = list(plan.execute())
+                dead = concat_tables(parts) if parts \
+                    else Table.empty(current.select([ID_COLUMN]))
+                removed = dead.num_rows
+                if removed == 0 and normalize_config is None:
+                    return 0  # nothing to commit
+                if removed:
+                    dead_ids = np.sort(dead.column(ID_COLUMN).values)
+                    tomb = Table(current.select([ID_COLUMN]),
+                                 {ID_COLUMN: Column.numeric(dead_ids)})
+                    self._stage_delta(man, DELTA_TOMBSTONE, tomb)
             if normalize_config is not None:
                 self._normalize_locked(man, normalize_config)
             self._dir.commit(man)
-            self._dir.gc(man)
+            # row deletion is append-only (a staged tombstone): no GC, so
+            # old generations survive for in-flight readers; the rewriting
+            # paths (columns / normalize) collect their own orphans
+            if columns is not None or normalize_config is not None:
+                self._gc(man)
+        self._maybe_autocompact()
         return removed
 
     # ------------------------------------------------------------------ normalize
     def normalize(self, normalize_config: Optional[NormalizeConfig] = None,
                   **kwargs) -> None:
+        """Re-partition the dataset to the requested layout (paper Table 10).
+
+        Rewrites every base file to ``max_rows_per_file`` /
+        ``max_rows_per_group`` and folds any pending delta chain into the
+        result (the rewrite reads the merged view), all in one committed
+        transaction.  Keyword arguments are shorthand for
+        :class:`NormalizeConfig` fields.
+        """
         cfg = normalize_config or NormalizeConfig(**kwargs)
         with self._dir.acquire_lock():
             man = self._dir.load()
             self._normalize_locked(man, cfg)
             self._dir.commit(man)
-            self._dir.gc(man)
+            self._gc(man)
 
     def _normalize_locked(self, man: Manifest, cfg: NormalizeConfig) -> None:
         schema = self._manifest_schema(man)
-        # full unfiltered scan via the planner (threaded readahead per cfg)
-        plan = ScanPlan(man.files,
-                        lambda fn: _get_reader(self._dir.file_path(fn)),
-                        schema, cfg=cfg)
+        # full unfiltered *merged* scan via the planner (threaded readahead
+        # per cfg); the delta chain is folded into the rewritten files
+        plan = ScanPlan(man.files, self._reader_of, schema, cfg=cfg,
+                        deltas=man.deltas)
         batches = list(plan.execute())
         if not batches:
+            man.files, man.deltas = [], []
             return
         full = concat_tables(batches)
         new_files = []
@@ -543,6 +737,85 @@ class ParquetDB:
                              row_group_rows=rg, page_rows=page)
             new_files.append(nf)
         man.files = new_files
+        man.deltas = []
+
+    # ------------------------------------------------------------------ compaction
+    def compact(self, policy: Optional[CompactionPolicy] = None,
+                force: bool = False) -> CompactionResult:
+        """Fold the delta chain and coalesce small files into sorted bases.
+
+        Runs under the writer lock and commits one new manifest generation.
+        Only the *affected* region is rewritten — base files no delta can
+        touch (by id range) and well-filled files keep their names — so the
+        cost scales with delta size, not dataset size.  ``force=True``
+        rewrites everything (full re-sort).
+
+        Old-generation files are left on disk for in-flight readers and
+        garbage-collected on the next open; their cached footers are
+        evicted immediately.  Returns a
+        :class:`~repro.core.compaction.CompactionResult` (``compacted`` is
+        False when there was nothing to do).
+        """
+        policy = policy or self.compaction_policy
+        with self._dir.acquire_lock():
+            man = self._dir.load()
+            schema = self._manifest_schema(man)
+            result = compact_locked(self._dir, man, schema, self._reader_of,
+                                    self._write_file, policy, force=force)
+            if result.compacted:
+                self._dir.commit(man)
+                result.generation = man.generation
+                _evict_readers(self._dir.file_path(f)
+                               for f in result.dropped_files)
+        return result
+
+    def maintenance_stats(self, policy: Optional[CompactionPolicy] = None
+                          ) -> MaintenanceStats:
+        """Footer-only dataset health report + compaction recommendation.
+
+        Reports base/delta file counts, staged upsert/tombstone rows, the
+        delta-to-base ratio, small-file count and row-group fill, and
+        whether the cost-based trigger in ``policy`` (default: this
+        database's ``compaction_policy``) recommends :meth:`compact`.
+        """
+        return gather_stats(self._dir.load(), self._reader_of,
+                            policy or self.compaction_policy)
+
+    def _maybe_autocompact(self) -> None:
+        """Kick off background compaction when the cost trigger fires.
+
+        Single-flight: at most one maintenance thread per ParquetDB handle.
+        The thread takes the writer lock itself; failures are swallowed
+        (maintenance must never break the write that scheduled it).
+        """
+        if not self.auto_compact:
+            return
+        try:
+            if not self.maintenance_stats().should_compact:
+                return
+        except OSError:
+            return
+        with self._maintenance_mutex:
+            t = self._maintenance_thread
+            if t is not None and t.is_alive():
+                return
+            t = threading.Thread(target=self._run_maintenance,
+                                 name=f"compact-{self.dataset_name}",
+                                 daemon=True)
+            self._maintenance_thread = t
+            t.start()
+
+    def _run_maintenance(self) -> None:
+        try:
+            self.compact()
+        except Exception:
+            pass  # best-effort; the next trigger will retry
+
+    def wait_for_maintenance(self) -> None:
+        """Block until any in-flight background compaction finishes."""
+        t = self._maintenance_thread
+        if t is not None:
+            t.join()
 
 
 # ---------------------------------------------------------------------------

@@ -3,10 +3,25 @@
 The paper's ParquetDB copies files to a temp dir before modifying and restores
 on error — Atomicity/Consistency/Isolation with "quasi-durability" (manual
 recovery after a crash).  We strengthen this (beyond-paper improvement #1,
-DESIGN.md §7): the committed state of a dataset is *exactly* the file list in
+DESIGN.md §7): the committed state of a dataset is *exactly* the file lists in
 ``_manifest.json``, which is replaced atomically (tmp + fsync + rename).  A
 crash at any point leaves the previous manifest intact; uncommitted data files
 are garbage-collected on next open.  Recovery is automatic, not manual.
+
+A manifest references two kinds of data files (see docs/TRANSACTIONS.md):
+
+  - **base files** (``Manifest.files``): immutable row storage, ordered;
+  - **delta files** (``Manifest.deltas``): the merge-on-read layer.  Each
+    entry is a :class:`DeltaEntry` — an *upsert* file (full-width replacement
+    rows keyed by id) or a *tombstone* file (ids of deleted rows) — applied
+    over the base files in commit order at read time.  ``update``/``delete``
+    append one delta instead of rewriting base files; compaction
+    (:mod:`repro.core.compaction`) folds the chain back into base files.
+
+Every commit bumps ``generation``; readers that loaded generation *g* keep a
+consistent snapshot as long as *g*'s files exist on disk (compaction defers
+file deletion to the next open precisely to give in-flight readers that
+grace — see ``DatasetDir.gc``).
 
 Writers take an exclusive lock file (single writer, many readers — same
 concurrency model the paper reports in Table 11).
@@ -23,9 +38,23 @@ from typing import Callable, List, Optional
 MANIFEST = "_manifest.json"
 LOCKFILE = "_lock"
 
+# delta kinds recorded in Manifest.deltas (and in each file's footer flag)
+DELTA_UPSERT = "upsert"
+DELTA_TOMBSTONE = "tombstone"
+
 # test hook: called between staging new files and committing the manifest —
 # crash-injection tests set this to simulate power loss.
 PRE_COMMIT_HOOK: Optional[Callable[[], None]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaEntry:
+    """One link of the merge-on-read chain: a staged delta file + its kind."""
+    name: str
+    kind: str  # DELTA_UPSERT | DELTA_TOMBSTONE
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -35,6 +64,7 @@ class Manifest:
     next_file_id: int = 0
     next_row_id: int = 0
     files: List[str] = dataclasses.field(default_factory=list)
+    deltas: List[DeltaEntry] = dataclasses.field(default_factory=list)
     metadata: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
@@ -42,6 +72,8 @@ class Manifest:
 
     @staticmethod
     def from_dict(d: dict) -> "Manifest":
+        d = dict(d)
+        d["deltas"] = [DeltaEntry(**e) for e in d.get("deltas", [])]
         return Manifest(**d)
 
 
@@ -92,14 +124,30 @@ class DatasetDir:
     def file_path(self, name: str) -> str:
         return os.path.join(self.path, name)
 
-    def new_file_name(self, manifest: Manifest) -> str:
-        name = f"{self.dataset}_{manifest.next_file_id:06d}.tpq"
+    _KIND_SUFFIX = {"base": ".tpq",
+                    DELTA_UPSERT: ".upsert.tpq",
+                    DELTA_TOMBSTONE: ".tombstone.tpq"}
+
+    def new_file_name(self, manifest: Manifest, kind: str = "base") -> str:
+        """Allocate a fresh, never-reused data-file name.
+
+        Delta files get a kind-specific suffix so a directory listing shows
+        the merge-on-read chain at a glance; all three end in ``.tpq`` and
+        share the garbage-collection rule.
+        """
+        name = f"{self.dataset}_{manifest.next_file_id:06d}{self._KIND_SUFFIX[kind]}"
         manifest.next_file_id += 1
         return name
 
     def gc(self, manifest: Manifest) -> List[str]:
-        """Remove data files not referenced by the committed manifest."""
-        live = set(manifest.files)
+        """Remove data files (base + delta) not referenced by the manifest.
+
+        Called on open (startup recovery) and after commits that orphan
+        files.  Compaction deliberately does **not** call this inline: old
+        generations stay on disk until the next open so that readers holding
+        a pre-compaction manifest snapshot can finish (snapshot isolation).
+        """
+        live = set(manifest.files) | {d.name for d in manifest.deltas}
         removed = []
         for fn in os.listdir(self.path):
             if not fn.endswith(".tpq"):

@@ -1,0 +1,303 @@
+"""Merge-on-read deltas + compaction: overlay semantics, triggers, lifecycle."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (CompactionPolicy, ParquetDB, field)
+from repro.core.store import _READER_CACHE
+
+
+@pytest.fixture
+def db(tmp_path):
+    # auto_compact off: these tests assert exact delta-chain states
+    return ParquetDB(str(tmp_path / "db"), "db", auto_compact=False)
+
+
+def make_ranged(tmp_path, name="ranged", files=4, rows=100):
+    db = ParquetDB(os.path.join(str(tmp_path), name), auto_compact=False)
+    for lo in range(0, files * rows, rows):
+        db.create([{"x": lo + i, "y": f"s{lo + i}"} for i in range(rows)])
+    return db
+
+
+class TestDeltaSemantics:
+    def test_update_stages_upsert_not_rewrite(self, db):
+        db.create([{"a": i} for i in range(10)])
+        files = list(db._dir.load().files)
+        assert db.update([{"id": 3, "a": -3}]) == 1
+        man = db._dir.load()
+        assert man.files == files
+        assert len(man.deltas) == 1 and man.deltas[0].kind == "upsert"
+        assert man.deltas[0].name.endswith(".upsert.tpq")
+
+    def test_read_order_preserved_after_update(self, db):
+        db.create([{"a": i} for i in range(5)])
+        db.update([{"id": 2, "a": 200}])
+        assert db.read(columns=["a"]).to_pydict()["a"] == [0, 1, 200, 3, 4]
+
+    def test_last_committed_delta_wins(self, db):
+        db.create([{"a": 0}])
+        db.update([{"id": 0, "a": 1}])
+        db.update([{"id": 0, "a": 2}])
+        assert db.read(columns=["a"]).to_pydict()["a"] == [2]
+        assert db.n_delta_files == 2
+
+    def test_filter_sees_merged_values(self, tmp_path):
+        db = make_ranged(tmp_path)
+        # x=5 lives in a file whose stats say x in [0,100); update it to 999
+        db.update([{"id": 5, "x": 999}])
+        got = db.read(filters=[field("x") == 999], columns=["x"])
+        assert got.to_pydict()["x"] == [999]
+        # the stored value no longer matches
+        assert db.read(filters=[field("x") == 5]).num_rows == 0
+
+    def test_delete_then_update_is_noop(self, db):
+        db.create([{"a": i} for i in range(4)])
+        assert db.delete(ids=[1]) == 1
+        assert db.update([{"id": 1, "a": 100}]) == 0
+        assert db.read(columns=["a"]).to_pydict()["a"] == [0, 2, 3]
+
+    def test_update_then_delete_row_gone(self, db):
+        db.create([{"a": i} for i in range(4)])
+        db.update([{"id": 1, "a": 100}])
+        assert db.delete(filters=[field("a") == 100]) == 1
+        assert db.read(columns=["a"]).to_pydict()["a"] == [0, 2, 3]
+        assert db.n_rows == 3
+
+    def test_projection_without_id_still_merges(self, db):
+        db.create([{"a": 1, "b": "x"}, {"a": 2, "b": "y"}])
+        db.update([{"id": 0, "b": "z"}])
+        t = db.read(columns=["b"])
+        assert t.column_names == ["b"]
+        assert t.to_pydict()["b"] == ["z", "y"]
+
+    def test_update_by_custom_key_over_delta(self, db):
+        db.create([{"k": "u1", "v": 1}, {"k": "u2", "v": 2}])
+        db.update([{"k": "u2", "v": 20}], update_keys="k")
+        # second update must match against the merged view
+        assert db.update([{"k": "u2", "v": 30}], update_keys="k") == 1
+        assert db.read(filters=[field("k") == "u2"]).to_pydict()["v"] == [30]
+
+    def test_schema_evolution_via_update_delta(self, db):
+        db.create([{"a": 1}, {"a": 2}])
+        db.update([{"id": 1, "z": 9.5}])
+        assert db.read(columns=["z"]).to_pydict()["z"] == [None, 9.5]
+
+    def test_n_rows_subtracts_tombstones(self, db):
+        db.create([{"a": i} for i in range(10)])
+        db.delete(ids=[0, 9])
+        assert db.n_rows == 8
+
+    def test_explain_reports_delta_counters(self, tmp_path):
+        db = make_ranged(tmp_path)
+        db.update([{"id": 5, "x": 999}])
+        db.delete(ids=[7, 8])
+        rep = db.explain()
+        c = rep.counters
+        assert c.delta_files == 2
+        assert c.delta_upsert_rows == 1
+        assert c.delta_tombstone_rows == 2
+        assert "deltas:" in str(rep)
+        rep = db.explain(execute=True)
+        assert rep.counters.delta_rows_applied == 1
+        assert rep.counters.rows_shadowed == 2
+        # only the overlapped fragment loses pushdown
+        overlapped = [f for f in rep.fragments if f.delta_overlap]
+        assert len(overlapped) == 1 and not overlapped[0].pushdown
+
+    def test_pruning_still_sound_with_deltas(self, tmp_path):
+        db = make_ranged(tmp_path)
+        db.update([{"id": 150, "x": -1}])
+        db.delete(ids=[201])
+        # pruned scan == unpruned scan over the merged view
+        expr = field("x") < 100
+        pruned = db.read(filters=[expr]).to_pylist()
+        plan = db._scan_plan(None, expr, None, prune=False)
+        unpruned = []
+        for t in plan.execute():
+            unpruned.extend(t.to_pylist())
+        assert pruned == unpruned
+        assert any(r["x"] == -1 for r in pruned)
+
+    def test_delete_all_rows(self, db):
+        db.create([{"a": i} for i in range(5)])
+        assert db.delete(filters=[field("a") >= 0]) == 5
+        assert db.n_rows == 0
+        assert db.read().num_rows == 0
+
+    def test_normalize_folds_deltas(self, db):
+        db.create([{"a": i} for i in range(10)])
+        db.update([{"id": 2, "a": -2}])
+        db.delete(ids=[5])
+        db.normalize(max_rows_per_file=4)
+        man = db._dir.load()
+        assert man.deltas == []
+        assert db.read(columns=["a"]).to_pydict()["a"] == \
+            [0, 1, -2, 3, 4, 6, 7, 8, 9]
+
+    def test_delete_columns_folds_deltas_first(self, db):
+        db.create([{"a": 1, "b": 2}, {"a": 3, "b": 4}])
+        db.update([{"id": 0, "a": 10}])
+        db.delete(columns=["b"])
+        man = db._dir.load()
+        assert man.deltas == []
+        assert "b" not in db.schema
+        assert db.read(columns=["a"]).to_pydict()["a"] == [10, 3]
+
+    def test_delta_file_kind_flag(self, db):
+        db.create([{"a": 1}])
+        db.update([{"id": 0, "a": 2}])
+        db.delete(ids=[0])
+        man = db._dir.load()
+        kinds = {d.kind: db._reader_of(d.name).file_kind for d in man.deltas}
+        assert kinds == {"upsert": "upsert", "tombstone": "tombstone"}
+        assert db._reader_of(man.files[0]).file_kind == "base"
+
+
+class TestCompaction:
+    def test_compact_folds_chain(self, tmp_path):
+        db = make_ranged(tmp_path)
+        before = db.read().to_pylist()
+        db.update([{"id": 5, "x": 999}])
+        db.delete(ids=[7])
+        merged = db.read().to_pylist()
+        res = db.compact()
+        assert res.compacted and res.deltas_merged == 2
+        man = db._dir.load()
+        assert man.deltas == []
+        assert db.read().to_pylist() == merged
+        assert merged != before
+
+    def test_compact_untouched_files_keep_names(self, tmp_path):
+        # target small enough that the 100-row base files are "well filled"
+        pol = CompactionPolicy(target_rows_per_file=100, min_file_fill=0.5)
+        db = make_ranged(tmp_path)
+        db.compaction_policy = pol
+        files = list(db._dir.load().files)
+        db.update([{"id": 5, "x": 999}])  # touches only the first file
+        res = db.compact()
+        assert res.compacted and res.files_merged == 1
+        man = db._dir.load()
+        assert set(files[1:]) <= set(man.files)  # untouched keep names
+        assert files[0] not in man.files
+
+    def test_compact_noncontiguous_merge_keeps_global_id_order(self, tmp_path):
+        # deltas touch the first and last of three files; the kept middle
+        # file's id range must not be spanned by any compaction output
+        pol = CompactionPolicy(target_rows_per_file=100)
+        db = make_ranged(tmp_path, files=3)
+        db.compaction_policy = pol
+        db.update([{"id": 5, "x": -5}, {"id": 250, "x": -250}])
+        res = db.compact()
+        assert res.compacted and res.files_merged == 2
+        ids = db.read(columns=["id"]).to_pydict()["id"]
+        assert ids == list(range(300))  # global order preserved
+        # and no base file's id range overlaps another's
+        man = db._dir.load()
+        ranges = []
+        for fn in man.files:
+            st = db._reader_of(fn).file_stats()["id"]
+            ranges.append((st.min, st.max))
+        ranges.sort()
+        assert all(a[1] < b[0] for a, b in zip(ranges, ranges[1:]))
+
+    def test_compact_output_sorted_by_id(self, tmp_path):
+        db = make_ranged(tmp_path, files=3)
+        db.update([{"id": i, "x": -i} for i in range(0, 300, 7)])
+        db.compact(force=True)
+        ids = db.read(columns=["id"]).to_pydict()["id"]
+        assert ids == sorted(ids)
+
+    def test_compact_nothing_to_do(self, tmp_path):
+        pol = CompactionPolicy(target_rows_per_file=100)
+        db = make_ranged(tmp_path)
+        db.compaction_policy = pol
+        res = db.compact()
+        assert not res.compacted
+
+    def test_compact_defers_gc_until_next_open(self, tmp_path):
+        db = make_ranged(tmp_path, files=2)
+        db.update([{"id": 1, "x": -1}])
+        res = db.compact()
+        # old generation still on disk (snapshot grace)...
+        for fn in res.dropped_files:
+            assert os.path.exists(db._dir.file_path(fn))
+        # ...collected on next open
+        db2 = ParquetDB(db.db_path, db.dataset_name, auto_compact=False)
+        for fn in res.dropped_files:
+            assert not os.path.exists(db2._dir.file_path(fn))
+        assert db2.read(ids=[1], columns=["x"]).to_pydict()["x"] == [-1]
+
+    def test_compact_evicts_reader_cache(self, tmp_path):
+        db = make_ranged(tmp_path, files=2)
+        db.update([{"id": 1, "x": -1}])
+        db.read()  # populate the cache with delta + base footers
+        res = db.compact()
+        dropped = {db._dir.file_path(f) for f in res.dropped_files}
+        assert not any(k[0] in dropped for k in _READER_CACHE)
+
+    def test_maintenance_stats_and_trigger(self, db):
+        db.create([{"a": i} for i in range(100)])
+        st = db.maintenance_stats()
+        assert st.base_files == 1 and st.delta_files == 0
+        assert not st.should_compact
+        for i in range(5):
+            db.update([{"id": i, "a": -i}])
+        st = db.maintenance_stats()
+        assert st.delta_files == 5 and st.upsert_rows == 5
+        assert st.should_compact  # chain length 5 > max_delta_files=4
+        assert any("chain" in r for r in st.reasons)
+        db.compact()
+        assert not db.maintenance_stats().should_compact
+
+    def test_delta_ratio_trigger(self, db):
+        db.create([{"a": i} for i in range(10)])
+        db.update([{"id": i, "a": -i} for i in range(5)])  # ratio 0.5
+        st = db.maintenance_stats()
+        assert st.delta_ratio == pytest.approx(0.5)
+        assert st.should_compact
+
+    def test_row_group_fill_metric(self, db):
+        db.create([{"a": i} for i in range(100)])
+        pol = CompactionPolicy(target_rows_per_group=200,
+                               min_row_group_fill=0.9)
+        st = db.maintenance_stats(policy=pol)
+        assert st.row_group_fill == pytest.approx(0.5)
+        assert st.should_compact
+
+    def test_auto_compact_background(self, tmp_path):
+        db = ParquetDB(str(tmp_path / "auto"), "auto", auto_compact=True)
+        db.create([{"a": i} for i in range(100)])
+        for i in range(6):  # exceed max_delta_files=4
+            db.update([{"id": i, "a": -i}])
+        db.wait_for_maintenance()
+        # updates racing the background thread may stage a fresh delta after
+        # the fold — but the chain must have been compacted below threshold
+        assert db.n_delta_files < 6
+        assert not db.maintenance_stats().should_compact
+        got = db.read(columns=["a"]).to_pydict()["a"]
+        assert got[:6] == [0, -1, -2, -3, -4, -5]
+
+    def test_restored_pruning_after_compact(self, tmp_path):
+        db = make_ranged(tmp_path)
+        db.update([{"id": 5, "x": 999}])
+        rep = db.explain(filters=[field("x") == 250])
+        assert rep.counters.files_scanned == 2  # overlapped file can't prune
+        db.compact()
+        rep = db.explain(filters=[field("x") == 250])
+        assert rep.counters.files_scanned == 1  # pruning restored
+
+
+class TestSnapshotIsolation:
+    def test_reader_snapshot_survives_compaction(self, tmp_path):
+        db = make_ranged(tmp_path, files=2)
+        db.update([{"id": 1, "x": -1}])
+        ds = db.read(load_format="dataset")
+        plan = ds.scan_plan()  # binds the pre-compaction manifest snapshot
+        db.compact()
+        rows = []
+        for t in plan.execute():  # old files still on disk (deferred GC)
+            rows.extend(t.to_pylist())
+        assert len(rows) == 200
+        assert [r["x"] for r in rows if r["id"] == 1] == [-1]

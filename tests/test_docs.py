@@ -1,0 +1,41 @@
+"""Docs stay true: links resolve, code blocks run, API.md is fresh.
+
+Mirrors the CI docs job (scripts/check_docs.py + gen_api_docs.py --check)
+so a doc-rotting change fails locally too, not just on the runner.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script, *args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", script), *args],
+        capture_output=True, text=True, env=env, cwd=REPO)
+
+
+def test_markdown_links_and_code_blocks():
+    res = _run("check_docs.py")
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_api_reference_is_fresh():
+    res = _run("gen_api_docs.py", "--check")
+    assert res.returncode == 0, res.stdout + res.stderr
+
+
+def test_quickstart_runs():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    res = subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", "quickstart.py")],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert res.stdout.strip().endswith("OK")

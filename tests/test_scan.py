@@ -184,22 +184,24 @@ class TestPlanMechanics:
         # missing column => conservative True
         assert file_may_match(rd, field("nope") == 1)
 
-    def test_update_prunes_untouched_files(self, ranged_db):
+    def test_update_rewrites_no_base_file(self, ranged_db):
         before = set(ranged_db._dir.load().files)
         n = ranged_db.update([{"id": 150, "y": "updated"}])
         assert n == 1
-        after = set(ranged_db._dir.load().files)
-        # only the one file containing id=150 was rewritten
-        assert len(before & after) == 3
+        man = ranged_db._dir.load()
+        # merge-on-read: every base file survives; one upsert delta staged
+        assert set(man.files) == before
+        assert [d.kind for d in man.deltas] == ["upsert"]
         got = ranged_db.read(ids=[150], columns=["y"])
         assert got.to_pylist() == [{"y": "updated"}]
 
-    def test_delete_prunes_untouched_files(self, ranged_db):
+    def test_delete_rewrites_no_base_file(self, ranged_db):
         before = set(ranged_db._dir.load().files)
         n = ranged_db.delete(filters=[field("x") == 150])
         assert n == 1
-        after = set(ranged_db._dir.load().files)
-        assert len(before & after) == 3
+        man = ranged_db._dir.load()
+        assert set(man.files) == before
+        assert [d.kind for d in man.deltas] == ["tombstone"]
         assert ranged_db.n_rows == 399
 
     def test_normalize_roundtrip_via_planner(self, ranged_db):
