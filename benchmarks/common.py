@@ -22,6 +22,19 @@ def timeit(fn: Callable, *, repeat: int = 1) -> float:
     return best
 
 
+def timeit_median(fn: Callable, *, k: int = 5) -> float:
+    """Seconds for one call (median of ``k`` — the --json artifact protocol;
+    medians absorb one-off GC/page-cache outliers that min/mean don't)."""
+    times = []
+    for _ in range(k):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    mid = len(times) // 2
+    return times[mid] if len(times) % 2 else (times[mid - 1] + times[mid]) / 2
+
+
 def gen_rows_pylist(n_rows: int, seed: int = 0) -> List[dict]:
     rng = np.random.default_rng(seed)
     data = rng.integers(0, 1_000_000, (n_rows, N_COLS))
@@ -60,5 +73,7 @@ class TmpDir:
 
 def row(name: str, seconds: float, **derived) -> dict:
     d = {"name": name, "us_per_call": seconds * 1e6}
+    if derived.get("rows") and seconds > 0:
+        d["rows_per_sec"] = derived["rows"] / seconds
     d.update(derived)
     return d

@@ -17,7 +17,8 @@ import numpy as np
 
 from repro.core import NormalizeConfig, ParquetDB, field
 
-from .common import TmpDir, gen_rows_pylist, row, sqlite_create, timeit
+from .common import (TmpDir, gen_rows_pylist, row, sqlite_create, timeit,
+                     timeit_median)
 from .docdb import DocDB
 
 NEEDLE = 77_777_777
@@ -41,7 +42,7 @@ def run(scale: str = "small") -> List[dict]:
                 max_rows_per_file=max(n // 8, 1_000),
                 max_rows_per_group=2_048))
             expr = field("col0") == NEEDLE
-            t = timeit(lambda: db.read(filters=[expr]).num_rows, repeat=3)
+            t = timeit_median(lambda: db.read(filters=[expr]).num_rows, k=5)
             rep = db.explain(filters=[expr], execute=True)
             c = rep.counters
             # oracle: pruned read is row-identical to an unpruned full scan
@@ -56,7 +57,9 @@ def run(scale: str = "small") -> List[dict]:
                 f"fig7/parquetdb/n={n}", t, rows=n,
                 files_scanned=c.files_scanned, files_total=c.files_total,
                 rg_scanned=c.row_groups_scanned, rg_total=c.row_groups_total,
-                bytes_decoded=c.bytes_decoded, bytes_total=c.bytes_total))
+                bytes_decoded=c.bytes_decoded, bytes_total=c.bytes_total,
+                rows_skipped_late=c.rows_skipped_late,
+                bytes_saved_late=c.bytes_saved_late))
 
             conn = sqlite_create(os.path.join(tmp, "s.db"), rows)
             q = f"SELECT * FROM test_table WHERE col0 = {NEEDLE}"

@@ -3,18 +3,48 @@
 ``python -m benchmarks.run [--scale small|medium|paper] [--only fig5,...]``
 prints ``name,us_per_call,derived`` CSV (paper protocol) and writes the rows
 into a ParquetDB results store so they are queryable like everything else.
+
+``--json [DIR]`` additionally writes one ``BENCH_<fig>.json`` artifact per
+suite (median-of-k timings in the rows, plus rows/sec where applicable) —
+the machine-readable trajectory that ``scripts/check_perf.py`` gates CI on.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import json
+import os
+import platform
 import sys
 import time
 
 SUITES = ["fig5_create_read", "fig6_formats", "fig7_needle", "fig8_update",
           "fig9_alexandria", "fig10_ops", "pipeline_bench", "kernels_bench",
           "ckpt_bench"]
+
+
+def _suite_tag(suite: str) -> str:
+    """``fig5_create_read`` -> ``fig5``; non-figure suites keep their name."""
+    head = suite.split("_", 1)[0]
+    return head if head.startswith("fig") else suite
+
+
+def write_json_artifact(directory: str, suite: str, scale: str,
+                        rows: list) -> str:
+    path = os.path.join(directory, f"BENCH_{_suite_tag(suite)}.json")
+    doc = {
+        "suite": suite,
+        "scale": scale,
+        "unit": "us_per_call (median-of-k for read/needle paths)",
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "generated_unix": int(time.time()),
+        "rows": rows,
+    }
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return path
 
 
 def main(argv=None) -> int:
@@ -25,6 +55,9 @@ def main(argv=None) -> int:
                     help="comma-separated suite prefixes")
     ap.add_argument("--store", default=None,
                     help="optional ParquetDB dir for results")
+    ap.add_argument("--json", nargs="?", const=".", default=None,
+                    metavar="DIR",
+                    help="write BENCH_<fig>.json artifacts into DIR")
     args = ap.parse_args(argv)
 
     only = args.only.split(",") if args.only else None
@@ -45,6 +78,10 @@ def main(argv=None) -> int:
             print(f"{r['name']},{r['us_per_call']:.1f},"
                   f"\"{json.dumps(derived)}\"")
         sys.stdout.flush()
+        if args.json is not None:
+            os.makedirs(args.json, exist_ok=True)
+            path = write_json_artifact(args.json, suite, args.scale, rows)
+            print(f"# wrote {path}", file=sys.stderr)
         all_rows.extend(rows)
     if args.store and all_rows:
         from repro.core import ParquetDB

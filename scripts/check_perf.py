@@ -1,0 +1,116 @@
+"""CI perf-smoke gate: fail when the hot paths regress vs the committed baseline.
+
+Compares a fresh ``benchmarks.run --json`` artifact directory against the
+committed ``BENCH_baseline.json`` (recorded from the pre-engine seed code) on
+the two headline paths:
+
+- fig5 create  (bulk ingest)
+- fig7 needle  (index-free selective read)
+
+Raw wall-clock is not portable across CI machines, so each ParquetDB timing
+is normalized by the SQLite timing *from the same run* (same machine, same
+load); the gate trips when the normalized ratio regresses more than
+``--factor`` (default 2x) over the baseline's ratio.
+
+``--baseline`` may be a single JSON file or a directory of
+``BENCH_*.json`` artifacts.  CI gates against ``bench/`` (artifacts
+recorded from the execution engine itself, so a trip means the engine's
+own win regressed >2x); the root ``BENCH_baseline.json`` keeps the
+pre-engine seed numbers as the trajectory record.
+
+Usage:
+    python scripts/check_perf.py --current DIR [--baseline bench]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+# (label, parquetdb row prefix, reference row prefix)
+GATES = [
+    ("fig5 create", "fig5/create/parquetdb/", "fig5/create/sqlite/"),
+    ("fig7 needle", "fig7/parquetdb/", "fig7/sqlite-noindex/"),
+]
+
+
+def _rows(doc: dict) -> dict:
+    return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
+
+
+def _load_rows(path: str) -> dict:
+    with open(path) as fh:
+        return _rows(json.load(fh))
+
+
+def _load_dir(directory: str) -> dict:
+    rows: dict = {}
+    for fn in sorted(os.listdir(directory)):
+        if fn.startswith("BENCH_") and fn.endswith(".json"):
+            rows.update(_load_rows(os.path.join(directory, fn)))
+    return rows
+
+
+def _n_of(name: str) -> int:
+    m = re.search(r"n=(\d+)$", name)
+    return int(m.group(1)) if m else -1
+
+
+def _ns_of(rows: dict, prefix: str) -> set:
+    return {_n_of(k) for k in rows if k.startswith(prefix) and _n_of(k) > 0}
+
+
+def _ratio_at(rows: dict, pdb_prefix: str, ref_prefix: str, n: int):
+    pdb = rows.get(f"{pdb_prefix}n={n}")
+    ref = rows.get(f"{ref_prefix}n={n}")
+    return pdb / ref if pdb and ref else None
+
+
+def _common_largest_n(base: dict, cur: dict, pdb_p: str, ref_p: str):
+    """Largest n with pdb+reference rows in BOTH baseline and current run."""
+    ns = (_ns_of(base, pdb_p) & _ns_of(base, ref_p)
+          & _ns_of(cur, pdb_p) & _ns_of(cur, ref_p))
+    return max(ns) if ns else None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="bench",
+                    help="baseline BENCH json file or artifact directory")
+    ap.add_argument("--current", required=True,
+                    help="directory of fresh BENCH_<fig>.json artifacts")
+    ap.add_argument("--factor", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    base = (_load_dir(args.baseline) if os.path.isdir(args.baseline)
+            else _load_rows(args.baseline))
+    cur = _load_dir(args.current)
+    failures = []
+    for label, pdb_p, ref_p in GATES:
+        n = _common_largest_n(base, cur, pdb_p, ref_p)
+        bratio = _ratio_at(base, pdb_p, ref_p, n) if n else None
+        cratio = _ratio_at(cur, pdb_p, ref_p, n) if n else None
+        if bratio is None or cratio is None:
+            failures.append(f"{label}: no common n with both parquetdb and "
+                            f"reference rows (baseline vs current)")
+            continue
+        verdict = "OK" if cratio <= args.factor * bratio else "REGRESSED"
+        print(f"{label:12s} n={n}  baseline pdb/sqlite={bratio:.3f}  "
+              f"current pdb/sqlite={cratio:.3f}  "
+              f"gate={args.factor:.1f}x  {verdict}")
+        if verdict != "OK":
+            failures.append(
+                f"{label}: normalized time {cratio:.3f} exceeds "
+                f"{args.factor:.1f}x baseline {bratio:.3f}")
+    if failures:
+        print("PERF GATE FAILED:\n  " + "\n  ".join(failures),
+              file=sys.stderr)
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

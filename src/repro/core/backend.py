@@ -1,0 +1,207 @@
+"""Pluggable decode backends: numpy reference vs. Pallas-kernel (jax) decode.
+
+The TPQ reader decodes every page through :func:`active_backend`.  The
+``numpy`` backend is the always-correct reference (it simply calls
+:func:`repro.core.encodings.decode`); the ``jax`` backend routes the
+kernelized encodings — BITPACK, DICT, DELTA, BSS — through the Pallas
+kernels in :mod:`repro.kernels.ops` whenever the page is *provably safe*
+to decode in 32-bit device arithmetic, and falls back to the numpy path
+otherwise.  Both backends therefore produce byte-identical arrays on every
+page (the parity sweep in ``tests/test_backend.py`` asserts this across
+the full encoding matrix).
+
+Selection:
+
+- ``REPRO_DECODE_BACKEND=numpy|jax`` in the environment, or
+- :func:`set_backend` at runtime (tests, benchmarks), or
+- default: ``numpy``.
+
+The jax import probe is cached process-wide (:func:`jax_available`), so a
+``jax``-selected run on a machine without jax degrades to numpy after one
+cheap check — CI's perf-smoke job relies on this staying fast.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import encodings as enc
+
+ENV_VAR = "REPRO_DECODE_BACKEND"
+
+_INT32_MIN, _INT32_MAX = -(1 << 31), (1 << 31) - 1
+
+
+class DecodeBackend:
+    """Reference backend: the vectorized numpy decoders in ``encodings``."""
+
+    name = "numpy"
+
+    def decode(self, encoding: str, meta: dict, payload, n: int,
+               np_dtype, out: Optional[np.ndarray] = None) -> np.ndarray:
+        return enc.decode(encoding, meta, payload, n, np_dtype, out=out)
+
+    def range_mask(self, values: np.ndarray, lo, hi) -> np.ndarray:
+        """Boolean mask for ``lo <= values <= hi`` (fused on device backends)."""
+        return (values >= lo) & (values <= hi)
+
+
+class JaxDecodeBackend(DecodeBackend):
+    """Routes safe pages through the Pallas decode kernels.
+
+    Safety gate: the device kernels compute in 32-bit lanes (jax's default
+    x64-disabled mode), so a page is routed only when every decoded value is
+    exactly representable there — otherwise the numpy reference runs.  The
+    gate keeps the backend *bit-identical* to numpy by construction.
+    """
+
+    name = "jax"
+
+    def __init__(self):
+        from repro.kernels import ops  # deferred: jax import is heavy
+        self._ops = ops
+        self._interpret = ops.default_interpret()
+
+    # -- safety gates --------------------------------------------------------
+    @staticmethod
+    def _fits_i32(*vals) -> bool:
+        return all(_INT32_MIN <= int(v) <= _INT32_MAX for v in vals)
+
+    def _routable(self, encoding: str, meta: dict, n: int,
+                  dt: np.dtype) -> bool:
+        if n == 0:
+            return False
+        if encoding == enc.BITPACK:
+            if dt == np.bool_:
+                return True
+            bits, ref = meta["bits"], meta["ref"]
+            return (dt.kind in "iu" and bits <= 31
+                    and self._fits_i32(ref, ref + (1 << bits) - 1))
+        if encoding == enc.DICT:
+            return meta["bits"] <= 31  # values checked against the dict below
+        if encoding == enc.DELTA:
+            bits, first = meta["bits"], meta["first"]
+            if dt.kind not in "iu" or bits > 31:
+                return False
+            # worst-case partial sum: first ± n * max|delta|
+            span = (n - 1) * (1 << max(bits - 1, 0))
+            return self._fits_i32(first - span, first + span)
+        if encoding == enc.BSS:
+            return dt == np.float32
+        return False
+
+    def decode(self, encoding: str, meta: dict, payload, n: int,
+               np_dtype, out: Optional[np.ndarray] = None) -> np.ndarray:
+        dt = np.dtype(np_dtype)
+        if not self._routable(encoding, meta, n, dt):
+            return enc.decode(encoding, meta, payload, n, np_dtype, out=out)
+        payload = bytes(payload)  # kernels take contiguous host bytes
+        if encoding == enc.DICT:
+            # gate on the dictionary's actual values: the gather runs in the
+            # dictionary dtype on device, which must be 32-bit exact
+            dl = meta["dict_len"]
+            uniq = np.frombuffer(payload[:dl],
+                                 np.dtype(dt).newbyteorder("<"))
+            if dt.kind in "iu":
+                if len(uniq) and not self._fits_i32(uniq.min(), uniq.max()):
+                    return enc.decode(encoding, meta, payload, n, np_dtype,
+                                      out=out)
+            elif dt != np.float32:
+                return enc.decode(encoding, meta, payload, n, np_dtype,
+                                  out=out)
+        # ask the device for int32 where the gate proved values fit: jax's
+        # x64-disabled mode would otherwise truncate int64 with a warning
+        dev_dt = (np.dtype(np.int32)
+                  if encoding in (enc.BITPACK, enc.DELTA) and dt.kind in "iu"
+                  else dt)
+        vals = self._ops.decode_on_device(encoding, meta, payload, n, dev_dt,
+                                          interpret=self._interpret)
+        vals = np.asarray(vals).astype(dt, copy=False)
+        if out is not None:
+            out[:] = vals
+            return out
+        return vals
+
+    def range_mask(self, values: np.ndarray, lo, hi) -> np.ndarray:
+        # the device sees 32-bit lanes and the kernel casts bounds through
+        # float32, so both the column VALUES and the bounds must be exactly
+        # representable there — otherwise jnp.asarray would silently
+        # truncate (e.g. int64 2**32+50 -> 50) and the mask diverges from
+        # the numpy reference
+        dt = values.dtype
+        if dt == np.float32:
+            exact = bool(np.float32(lo) == lo and np.float32(hi) == hi)
+        elif dt.kind in "iu":
+            exact = (self._fits_i32(lo, hi)
+                     and max(abs(int(lo)), abs(int(hi))) < (1 << 24))
+            if exact and dt.itemsize > 4 and len(values):
+                # wide columns route only when the page's actual values fit
+                exact = self._fits_i32(values.min(), values.max())
+        else:
+            exact = False
+        if not exact:
+            return super().range_mask(values, lo, hi)
+        import jax.numpy as jnp
+        mask, _ = self._ops.filter_range(jnp.asarray(values), lo, hi,
+                                         interpret=self._interpret)
+        return np.asarray(mask)
+
+
+_jax_probe: Optional[bool] = None
+
+
+def jax_available() -> bool:
+    """Cached probe: can the jax backend be constructed in this process?"""
+    global _jax_probe
+    if _jax_probe is None:
+        try:
+            import jax  # noqa: F401
+            _jax_probe = True
+        except Exception:
+            _jax_probe = False
+    return _jax_probe
+
+
+_instances: Dict[str, DecodeBackend] = {}
+_active: Optional[str] = None
+
+
+def get_backend(name: str) -> DecodeBackend:
+    """Backend instance by name (constructed once per process)."""
+    if name not in ("numpy", "jax"):
+        raise ValueError(f"unknown decode backend {name!r} "
+                         "(expected 'numpy' or 'jax')")
+    be = _instances.get(name)
+    if be is None:
+        if name == "jax":
+            if not jax_available():
+                raise RuntimeError("jax backend requested but jax is not "
+                                   "importable; use 'numpy'")
+            be = JaxDecodeBackend()
+        else:
+            be = DecodeBackend()
+        _instances[name] = be
+    return be
+
+
+def set_backend(name: Optional[str]) -> None:
+    """Select the process-wide decode backend (None = back to env/default)."""
+    global _active
+    if name is not None:
+        get_backend(name)  # validate eagerly
+    _active = name
+
+
+def active_backend() -> DecodeBackend:
+    """The backend the reader should decode through, honoring overrides.
+
+    Precedence: :func:`set_backend` > ``REPRO_DECODE_BACKEND`` > numpy.
+    A jax selection on a jax-less machine silently degrades to numpy (the
+    probe is cached, so this costs one failed import per process).
+    """
+    name = _active or os.environ.get(ENV_VAR, "numpy")
+    if name == "jax" and not jax_available():
+        name = "numpy"
+    return get_backend(name)

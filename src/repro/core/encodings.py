@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import lzma
 import zlib
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -111,12 +111,17 @@ def _le(arr: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 # encoders  (meta, payload)
 # ---------------------------------------------------------------------------
-def _enc_plain(arr: np.ndarray) -> Tuple[dict, bytes]:
-    return {}, _le(arr).tobytes()
+def _enc_plain(arr: np.ndarray) -> Tuple[dict, np.ndarray]:
+    # uint8 view, not .tobytes(): the writer consumes the buffer protocol,
+    # so plain pages go encoder -> compressor/file with zero copies
+    return {}, np.ascontiguousarray(_le(arr)).view(np.uint8)
 
 
 def _dec_plain(meta, payload, n, dtype) -> np.ndarray:
-    return np.frombuffer(payload, np.dtype(dtype).newbyteorder("<"), count=n).astype(dtype)
+    # copy=False: on little-endian hosts this is a zero-copy (read-only)
+    # view straight into the reader's file mapping
+    return np.frombuffer(payload, np.dtype(dtype).newbyteorder("<"),
+                         count=n).astype(dtype, copy=False)
 
 
 def _enc_dict(arr: np.ndarray) -> Tuple[dict, bytes]:
@@ -198,9 +203,10 @@ def _dec_delta(meta, payload, n, dtype) -> np.ndarray:
     return out.astype(dtype)
 
 
-def _enc_bss(arr: np.ndarray) -> Tuple[dict, bytes]:
-    b = _le(arr).view(np.uint8).reshape(len(arr), arr.dtype.itemsize)
-    return {}, np.ascontiguousarray(b.T).tobytes()
+def _enc_bss(arr: np.ndarray) -> Tuple[dict, np.ndarray]:
+    b = np.ascontiguousarray(_le(arr)).view(np.uint8).reshape(
+        len(arr), arr.dtype.itemsize)
+    return {}, np.ascontiguousarray(b.T).reshape(-1)
 
 
 def _dec_bss(meta, payload, n, dtype) -> np.ndarray:
@@ -263,8 +269,21 @@ def encode(arr: np.ndarray, encoding: str = AUTO) -> Tuple[str, dict, bytes]:
     return encoding, meta, payload
 
 
-def decode(encoding: str, meta: dict, payload: bytes, n: int, dtype) -> np.ndarray:
-    return _DECODERS[encoding](meta, payload, n, dtype)
+def decode(encoding: str, meta: dict, payload: bytes, n: int, dtype,
+           out: Optional[np.ndarray] = None) -> np.ndarray:
+    """Decode a page payload; ``out`` (length-n, matching dtype) lets the
+    reader decode page-by-page into one preallocated chunk array instead of
+    concatenating per-page temporaries."""
+    if out is not None and encoding == BITPACK and meta["bits"] < 63 \
+            and np.dtype(dtype).kind in "iu" and out.dtype == np.int64:
+        u = unpack_bits(payload, n, meta["bits"])
+        np.add(u.view(np.int64), meta["ref"], out=out, casting="unsafe")
+        return out
+    res = _DECODERS[encoding](meta, payload, n, dtype)
+    if out is not None:
+        out[:] = res
+        return out
+    return res
 
 
 # ---------------------------------------------------------------------------

@@ -54,6 +54,20 @@ class Expr:
         """
         return None
 
+    def as_range(self) -> Optional[tuple]:
+        """``(column, lo, lo_open, hi, hi_open)`` when this expression is
+        exactly a contiguous range test on one column, else None.
+
+        ``lo``/``hi`` may be None (unbounded end); the ``*_open`` flags mark
+        strict inequalities.  The two-phase reader converts the bounds to an
+        inclusive interval in the column's dtype and routes page-mask
+        evaluation through the decode backend's fused ``range_mask`` (the
+        Pallas ``filter_range`` kernel on the jax backend).  Must be
+        *exact*: the converted mask on a fully-valid numeric column equals
+        ``evaluate``'s mask.
+        """
+        return None
+
 
 def _column_values(table: Table, name: str):
     """Numeric -> ndarray; string -> object ndarray; else error."""
@@ -131,6 +145,23 @@ class Comparison(Expr):
         if isinstance(self.value, FieldRef):
             cols.append(self.value.name)
         return cols
+
+    def as_range(self) -> Optional[tuple]:
+        v = self.value
+        if isinstance(v, FieldRef) or isinstance(v, (bool, np.bool_)) \
+                or not isinstance(v, (int, float, np.integer, np.floating)):
+            return None
+        if self.op == "==":
+            return (self.name, v, False, v, False)
+        if self.op == ">=":
+            return (self.name, v, False, None, False)
+        if self.op == ">":
+            return (self.name, v, True, None, False)
+        if self.op == "<=":
+            return (self.name, None, False, v, False)
+        if self.op == "<":
+            return (self.name, None, False, v, True)
+        return None  # "!=" is not a contiguous range
 
     _NEG_OP = {"==": "!=", "!=": "==", "<": ">=", "<=": ">",
                ">": "<=", ">=": "<"}
@@ -233,6 +264,18 @@ class IsNaN(Expr):
         return f"isnan({self.name})"
 
 
+def _tighter_bound(va, oa, vb, ob, *, hi: bool):
+    """Intersect two one-sided bounds ((value, open); value None = unbounded)."""
+    if va is None:
+        return vb, ob
+    if vb is None:
+        return va, oa
+    if va == vb:
+        return va, oa or ob
+    take_a = va < vb if hi else va > vb
+    return (va, oa) if take_a else (vb, ob)
+
+
 class And(Expr):
     def __init__(self, a: Expr, b: Expr):
         self.a, self.b = a, b
@@ -249,6 +292,15 @@ class And(Expr):
     def negate(self) -> Optional[Expr]:
         na, nb = self.a.negate(), self.b.negate()
         return Or(na, nb) if na is not None and nb is not None else None
+
+    def as_range(self) -> Optional[tuple]:
+        # (lo <= x) & (x < hi) on the same column is still one range
+        ra, rb = self.a.as_range(), self.b.as_range()
+        if ra is None or rb is None or ra[0] != rb[0]:
+            return None
+        lo, lo_open = _tighter_bound(ra[1], ra[2], rb[1], rb[2], hi=False)
+        hi, hi_open = _tighter_bound(ra[3], ra[4], rb[3], rb[4], hi=True)
+        return (ra[0], lo, lo_open, hi, hi_open)
 
     def __repr__(self):
         return f"({self.a!r} & {self.b!r})"

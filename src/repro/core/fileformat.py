@@ -21,8 +21,10 @@ enabling:
 """
 from __future__ import annotations
 
-import io
 import json
+import math
+import mmap
+import os
 import struct
 import zlib
 from typing import Any, Dict, Iterator, List, Optional, Sequence
@@ -30,13 +32,21 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence
 import numpy as np
 
 from . import encodings as enc
+from .backend import active_backend
 from .dtypes import (DType, KIND_BINARY, KIND_LIST, KIND_NULL, KIND_NUMERIC,
                      KIND_STRING, KIND_TENSOR)
 from .expressions import Expr
 from .schema import Schema
-from .statistics import (ColumnStats, compute_stats, merge_stat_maps,
-                         merge_stats)
-from .table import Column, Table, concat_columns, null_column_of
+from .statistics import (ColumnStats, compute_bloom, compute_stats,
+                         merge_stat_maps, merge_stats)
+from .table import (Column, Table, _ragged_gather_index, concat_columns,
+                    null_column_of)
+
+
+def _payload_nbytes(p) -> int:
+    if isinstance(p, (bytes, bytearray)):
+        return len(p)
+    return memoryview(p).nbytes
 
 MAGIC = b"TPQ1"
 VERSION = 1
@@ -75,17 +85,23 @@ class TPQWriter:
         self._closed = False
 
     # -- buffers ---------------------------------------------------------------
-    def _put(self, payload: bytes, encoding: str, meta: dict, codec: str,
+    def _put(self, payload, encoding: str, meta: dict, codec: str,
              count: int) -> dict:
+        # payload is any C-contiguous bytes-like (bytes, memoryview, uint8
+        # ndarray): both zlib and the file write consume the buffer protocol,
+        # so encoded pages reach disk without an intermediate .tobytes() copy
+        nbytes = _payload_nbytes(payload)
         comp = enc.compress(payload, codec, self.level)
-        if len(comp) >= len(payload):  # store raw when compression loses
-            comp, codec = payload, enc.CODEC_NONE
-        d = {"off": self._off, "len": len(comp), "enc": encoding,
+        if len(comp) >= nbytes:  # store raw when compression loses
+            comp, codec, clen = payload, enc.CODEC_NONE, nbytes
+        else:
+            clen = len(comp)
+        d = {"off": self._off, "len": clen, "enc": encoding,
              "codec": codec, "count": count}
         if meta:
             d["meta"] = meta
         self._fh.write(comp)
-        self._off += len(comp)
+        self._off += clen
         return d
 
     # encodings that already strip redundancy — compressing them again costs
@@ -106,7 +122,7 @@ class TPQWriter:
     def _write_validity(self, validity: Optional[np.ndarray]) -> Optional[dict]:
         if validity is None or validity.all():
             return None
-        payload = np.packbits(validity, bitorder="little").tobytes()
+        payload = np.packbits(validity, bitorder="little")
         return self._put(payload, "bitmap", {}, self.codec, len(validity))
 
     def _write_column_page(self, col: Column, name: str) -> dict:
@@ -122,8 +138,9 @@ class TPQWriter:
         elif k in (KIND_STRING, KIND_BINARY):
             lens = np.diff(col.offsets)
             page["lengths"] = self._write_values(lens, name)
-            blob = col.blob[col.offsets[0]:col.offsets[-1]]
-            page["blob"] = self._put(blob.tobytes(), enc.PLAIN, {},
+            blob = np.ascontiguousarray(
+                col.blob[col.offsets[0]:col.offsets[-1]])
+            page["blob"] = self._put(blob, enc.PLAIN, {},
                                      self.field_codecs.get(name, self.codec),
                                      int(len(blob)))
         elif k == KIND_LIST:
@@ -159,15 +176,21 @@ class TPQWriter:
                     break
                 piece = col.slice(s, min(s + self.page_rows, n))
                 page = self._write_column_page(piece, f.name)
-                st = compute_stats(piece, with_bloom=self.with_bloom)
+                # pages carry min/max/null stats only; the bloom fingerprint
+                # lives at chunk level (like Parquet) — per-page blooms made
+                # the footer JSON dominate file size and write time
+                st = compute_stats(piece, with_bloom=False)
                 page["stats"] = st.to_dict()
                 pages.append(page)
                 pstats.append(st)
                 if n == 0:
                     break
+            chunk_stats = merge_stats(pstats) if pstats else ColumnStats()
+            if self.with_bloom and pstats:
+                chunk_stats.bloom = compute_bloom(col)
             rg["columns"][f.name] = {
                 "pages": pages,
-                "stats": merge_stats(pstats).to_dict() if pstats else ColumnStats().to_dict(),
+                "stats": chunk_stats.to_dict(),
             }
         self._row_groups.append(rg)
         self._num_rows += n
@@ -211,16 +234,35 @@ class TPQReader:
     def __init__(self, path: str):
         self.path = path
         with open(path, "rb") as fh:
-            head = fh.read(4)
-            if head != MAGIC:
-                raise IOError(f"{path}: bad magic {head!r}")
-            fh.seek(-12, io.SEEK_END)
-            tail = fh.read(12)
-            if tail[8:] != MAGIC:
-                raise IOError(f"{path}: truncated (bad trailing magic)")
-            (flen,) = struct.unpack("<Q", tail[:8])
-            fh.seek(-(12 + flen), io.SEEK_END)
-            footer = json.loads(zlib.decompress(fh.read(flen)))
+            # map the whole file read-only: footer-described buffer ranges
+            # become memoryview slices (no seek/read syscall per page, no
+            # bytes copy for uncompressed buffers); falls back to one bulk
+            # read where mmap is unavailable.  The fd can close immediately
+            # — the mapping (and any ndarray viewing it) keeps the pages.
+            # Windows cannot delete a mapped file, which would break the
+            # orphan GC after compaction (cached readers hold maps for
+            # their lifetime) — bulk-read there instead.
+            self._mm = None
+            if os.name != "nt":
+                try:
+                    self._mm = mmap.mmap(fh.fileno(), 0,
+                                         access=mmap.ACCESS_READ)
+                except (ValueError, OSError):
+                    self._mm = None
+            if self._mm is not None:
+                self._buf = memoryview(self._mm)
+            else:
+                fh.seek(0)
+                self._buf = memoryview(fh.read())
+        buf = self._buf
+        if bytes(buf[:4]) != MAGIC:
+            raise IOError(f"{path}: bad magic {bytes(buf[:4])!r}")
+        if len(buf) < 16 or bytes(buf[-4:]) != MAGIC:
+            raise IOError(f"{path}: truncated (bad trailing magic)")
+        (flen,) = struct.unpack("<Q", buf[-12:-4])
+        if flen > len(buf) - 16:
+            raise IOError(f"{path}: truncated (bad trailing magic)")
+        footer = json.loads(zlib.decompress(buf[-(12 + flen):-12]))
         self.footer = footer
         self.schema = Schema.from_dict(footer["schema"])
         self.file_kind: str = footer.get("kind", "base")
@@ -262,43 +304,81 @@ class TPQReader:
                 for p in self.row_groups[rg]["columns"][name]["pages"]]
 
     # -- page reads ----------------------------------------------------------------
-    def _get(self, fh, buf: dict) -> bytes:
-        fh.seek(buf["off"])
-        return enc.decompress(fh.read(buf["len"]), buf["codec"])
+    def _get(self, buf: dict):
+        """Raw (decompressed) buffer bytes — a zero-copy slice of the file
+        mapping when the buffer is stored uncompressed."""
+        raw = self._buf[buf["off"]:buf["off"] + buf["len"]]
+        if buf["codec"] == enc.CODEC_NONE:
+            return raw
+        return enc.decompress(raw, buf["codec"])
 
-    def _read_values(self, fh, buf: dict, np_dtype) -> np.ndarray:
-        payload = self._get(fh, buf)
-        return enc.decode(buf["enc"], buf.get("meta", {}), payload,
-                          buf["count"], np_dtype)
+    def _read_values(self, buf: dict, np_dtype) -> np.ndarray:
+        payload = self._get(buf)
+        return active_backend().decode(buf["enc"], buf.get("meta", {}),
+                                       payload, buf["count"], np_dtype)
 
-    def _read_column_page(self, fh, page: dict, dtype: DType) -> Column:
+    def _read_column_page(self, page: dict, dtype: DType,
+                          sel: Optional[np.ndarray] = None,
+                          counters=None) -> Column:
+        """Decode one column page, optionally late-materialized.
+
+        ``sel`` is a selection vector (sorted row indices within the page,
+        from the filter-column mask): only the selected rows are
+        materialized — for var-len columns the page-slice and ``take`` are
+        fused, so unselected blob bytes are never copied out of the page
+        buffer.  ``None`` decodes the full page.  ``counters`` (a
+        ``ScanCounters``) accumulates ``bytes_saved_late``.
+        """
         rows = page["rows"]
         validity = None
         if "validity" in page:
-            raw = self._get(fh, page["validity"])
+            raw = self._get(page["validity"])
             validity = np.unpackbits(np.frombuffer(raw, np.uint8), count=rows,
                                      bitorder="little").astype(bool)
+            if sel is not None:
+                validity = validity[sel]
         k = dtype.kind
         if k == KIND_NUMERIC:
-            vals = self._read_values(fh, page["values"], dtype.np)
+            vals = self._read_values(page["values"], dtype.np)
+            if sel is not None:
+                vals = vals[sel]
+                _late_saved(counters, (rows - len(sel)) * vals.dtype.itemsize)
             return Column(dtype, values=vals, validity=validity)
         if k == KIND_TENSOR:
-            flat = self._read_values(fh, page["values"], dtype.np)
-            return Column(dtype, values=flat.reshape(rows, *dtype.shape),
-                          validity=validity)
+            flat = self._read_values(page["values"], dtype.np)
+            vals = flat.reshape(rows, *dtype.shape)
+            if sel is not None:
+                vals = vals[sel]
+                _late_saved(counters, (rows - len(sel)) * flat.dtype.itemsize
+                            * int(np.prod(dtype.shape)))
+            return Column(dtype, values=vals, validity=validity)
         if k in (KIND_STRING, KIND_BINARY):
-            lens = self._read_values(fh, page["lengths"], np.int64)
+            lens = self._read_values(page["lengths"], np.int64)
             offsets = np.zeros(rows + 1, np.int64)
             np.cumsum(lens, out=offsets[1:])
-            blob = np.frombuffer(self._get(fh, page["blob"]), np.uint8).copy()
+            blob = np.frombuffer(self._get(page["blob"]), np.uint8)
+            if sel is not None:
+                new_off, gather = _ragged_gather_index(offsets, sel)
+                _late_saved(counters, int(offsets[-1]) - len(gather))
+                return Column(dtype, offsets=new_off, blob=blob[gather],
+                              validity=validity)
             return Column(dtype, offsets=offsets, blob=blob, validity=validity)
         if k == KIND_LIST:
-            lens = self._read_values(fh, page["lengths"], np.int64)
+            lens = self._read_values(page["lengths"], np.int64)
             offsets = np.zeros(rows + 1, np.int64)
             np.cumsum(lens, out=offsets[1:])
-            child = self._read_column_page(fh, page["child"], dtype.child)
-            return Column(dtype, offsets=offsets, child=child, validity=validity)
-        return Column.nulls(rows)
+            if sel is not None:
+                new_off, child_sel = _ragged_gather_index(offsets, sel)
+                child = self._read_column_page(page["child"], dtype.child,
+                                               sel=child_sel,
+                                               counters=counters)
+                return Column(dtype, offsets=new_off, child=child,
+                              validity=validity)
+            child = self._read_column_page(page["child"], dtype.child,
+                                           counters=counters)
+            return Column(dtype, offsets=offsets, child=child,
+                          validity=validity)
+        return Column.nulls(rows if sel is None else len(sel))
 
     # -- table reads ------------------------------------------------------------
     def _project(self, columns: Optional[Sequence[str]],
@@ -350,79 +430,125 @@ class TPQReader:
                        if filter_expr is not None else [])
         two_phase = bool(filter_cols) and len(filter_cols) < len(names)
         rg_sel = set(row_groups) if row_groups is not None else None
-        with open(self.path, "rb") as fh:
-            for i, rg in enumerate(self.row_groups):
-                if rg_sel is not None and i not in rg_sel:
-                    continue
-                if (rg_sel is None and filter_expr is not None
-                        and not filter_expr.prune(self.row_group_stats(i))):
+        for i, rg in enumerate(self.row_groups):
+            if rg_sel is not None and i not in rg_sel:
+                continue
+            if (rg_sel is None and filter_expr is not None
+                    and not filter_expr.prune(self.row_group_stats(i))):
+                if counters is not None:
+                    counters.row_groups_skipped += 1
+                continue  # row-group pushdown: skip entirely
+            first_chunk = (next(iter(rg["columns"].values()))
+                           if rg["columns"] else None)
+            npages = len(first_chunk["pages"]) if first_chunk else 0
+            page_sel = list(range(npages))
+            if prune_pages and filter_expr is not None and npages > 1:
+                page_sel = self._select_pages(i, filter_expr, npages)
+                if not page_sel:
                     if counters is not None:
                         counters.row_groups_skipped += 1
-                    continue  # row-group pushdown: skip entirely
-                first_chunk = (next(iter(rg["columns"].values()))
-                               if rg["columns"] else None)
-                npages = len(first_chunk["pages"]) if first_chunk else 0
-                page_sel = list(range(npages))
-                if prune_pages and filter_expr is not None and npages > 1:
-                    page_sel = self._select_pages(i, filter_expr, npages)
-                    if not page_sel:
-                        if counters is not None:
-                            counters.row_groups_skipped += 1
-                            counters.pages_skipped += npages
-                        continue
+                        counters.pages_skipped += npages
+                    continue
+            if counters is not None:
+                counters.row_groups_scanned += 1
+                counters.pages_scanned += len(page_sel)
+                counters.pages_skipped += npages - len(page_sel)
+                counters.rows_scanned += sum(
+                    first_chunk["pages"][j]["rows"] for j in page_sel) \
+                    if first_chunk else 0
+
+            def read_pages(name: str, idxs, sels=None) -> Column:
+                pages = rg["columns"][name]["pages"]
                 if counters is not None:
-                    counters.row_groups_scanned += 1
-                    counters.pages_scanned += len(page_sel)
-                    counters.pages_skipped += npages - len(page_sel)
-                    counters.rows_scanned += sum(
-                        first_chunk["pages"][j]["rows"] for j in page_sel) \
-                        if first_chunk else 0
+                    counters.bytes_decoded += sum(
+                        _page_stored_bytes(pages[j]) for j in idxs)
+                dtype = self.schema[name].dtype
+                if (sels is None and len(idxs) > 1
+                        and dtype.kind == KIND_NUMERIC
+                        and not any("validity" in pages[j] for j in idxs)):
+                    # decode page-by-page into one preallocated chunk array
+                    # (skips the per-page temporaries + concat copy)
+                    be = active_backend()
+                    total = sum(pages[j]["rows"] for j in idxs)
+                    out = np.empty(total, dtype.np)
+                    pos = 0
+                    for j in idxs:
+                        b = pages[j]["values"]
+                        rows_j = pages[j]["rows"]
+                        be.decode(b["enc"], b.get("meta", {}), self._get(b),
+                                  b["count"], dtype.np,
+                                  out=out[pos:pos + rows_j])
+                        pos += rows_j
+                    return Column(dtype, values=out)
+                pieces = [self._read_column_page(
+                    pages[j], dtype,
+                    sel=None if sels is None else sels[jj],
+                    counters=counters) for jj, j in enumerate(idxs)]
+                return (concat_columns(pieces) if len(pieces) != 1
+                        else pieces[0])
 
-                def read_pages(name: str, idxs) -> Column:
-                    pages = rg["columns"][name]["pages"]
-                    if counters is not None:
-                        counters.bytes_decoded += sum(
-                            _page_stored_bytes(pages[j]) for j in idxs)
-                    pieces = [self._read_column_page(
-                        fh, pages[j], self.schema[name].dtype) for j in idxs]
-                    return (concat_columns(pieces) if len(pieces) != 1
-                            else pieces[0])
-
-                if two_phase:
-                    # phase 1: decode ONLY the filter columns, page by page;
-                    # a page with zero matches never touches the other columns
-                    fschema = self.schema.select(filter_cols)
-                    kept, masks, fcache = [], [], {}
-                    for j in page_sel:
-                        fcols = {n: read_pages(n, [j]) for n in filter_cols}
+            if two_phase:
+                # phase 1: decode ONLY the filter columns, page by page;
+                # a page with zero matches never touches the other columns.
+                # Each surviving page's mask becomes a *selection vector*:
+                # phase 2 materializes only the selected rows of the payload
+                # columns (late materialization — the page-slice and take
+                # are fused inside _read_column_page).
+                fschema = self.schema.select(filter_cols)
+                # single-column contiguous ranges evaluate through the
+                # decode backend's fused range_mask (Pallas filter_range
+                # on the jax backend); anything else through Expr.evaluate
+                rng = (filter_expr.as_range()
+                       if len(filter_cols) == 1 else None)
+                if rng is not None and rng[0] != filter_cols[0]:
+                    rng = None
+                kept: List[int] = []
+                sels: List[Optional[np.ndarray]] = []
+                fcache: Dict[int, Dict[str, Column]] = {}
+                for j in page_sel:
+                    fcols = {n: read_pages(n, [j]) for n in filter_cols}
+                    mask = None
+                    if rng is not None:
+                        fc = fcols[filter_cols[0]]
+                        if fc.dtype.kind == KIND_NUMERIC \
+                                and fc.validity is None:
+                            bounds = _inclusive_bounds(rng, fc.values.dtype)
+                            if bounds is not None:
+                                mask = np.asarray(active_backend().range_mask(
+                                    fc.values, bounds[0], bounds[1]), bool)
+                    if mask is None:
                         mask = filter_expr.evaluate(Table(fschema, fcols))
-                        if mask.any():
-                            kept.append(j)
-                            masks.append(mask)
-                            fcache[j] = fcols
-                    if not kept:
-                        continue
-                    cols: Dict[str, Column] = {}
-                    for name in names:
-                        if name in filter_cols:
-                            cols[name] = concat_columns(
-                                [fcache[j][name] for j in kept]) \
-                                if len(kept) != 1 else fcache[kept[0]][name]
-                        else:
-                            cols[name] = read_pages(name, kept)
-                    t = Table(sub_schema, cols)
-                    mask = np.concatenate(masks)
+                    if mask.any():
+                        kept.append(j)
+                        sels.append(None if mask.all()
+                                    else np.nonzero(mask)[0])
+                        fcache[j] = fcols
+                if not kept:
+                    continue
+                if counters is not None:
+                    counters.rows_skipped_late += sum(
+                        len(fcache[j][filter_cols[0]]) - len(s)
+                        for j, s in zip(kept, sels) if s is not None)
+                cols: Dict[str, Column] = {}
+                for name in names:
+                    if name in filter_cols:
+                        pieces = [fcache[j][name] if s is None
+                                  else fcache[j][name].take(s)
+                                  for j, s in zip(kept, sels)]
+                        cols[name] = (pieces[0] if len(pieces) == 1
+                                      else concat_columns(pieces))
+                    else:
+                        cols[name] = read_pages(name, kept, sels)
+                t = Table(sub_schema, cols)
+            else:
+                cols = {name: read_pages(name, page_sel) for name in names}
+                t = Table(sub_schema, cols)
+                if filter_expr is not None:
+                    mask = filter_expr.evaluate(t)
                     if not mask.all():
                         t = t.filter_mask(mask)
-                else:
-                    cols = {name: read_pages(name, page_sel) for name in names}
-                    t = Table(sub_schema, cols)
-                    if filter_expr is not None:
-                        mask = filter_expr.evaluate(t)
-                        if not mask.all():
-                            t = t.filter_mask(mask)
-                if t.num_rows:
-                    yield t
+            if t.num_rows:
+                yield t
 
     def _select_pages(self, rg: int, expr: Expr, npages: int) -> List[int]:
         """Page-index pruning: keep pages whose aligned stats may match."""
@@ -448,6 +574,51 @@ class TPQReader:
             for p in chunk["pages"]:
                 total += _page_stored_bytes(p)
         return total
+
+
+def _inclusive_bounds(rng, np_dtype):
+    """Convert an ``Expr.as_range`` 5-tuple to inclusive [lo, hi] in the
+    column's dtype, or None when it cannot be done exactly.
+
+    Integer columns snap open/fractional bounds to the next representable
+    integer; float columns use ``nextafter`` for strict bounds.  The
+    resulting inclusive mask is bit-identical to ``Expr.evaluate`` on a
+    fully-valid column.
+    """
+    _, lo, lo_open, hi, hi_open = rng
+    try:
+        if np_dtype.kind in "iu":
+            # a float bound >= 2^53-2 is within one ulp of int values that
+            # numpy's evaluate compares in (rounded) float64; exact integer
+            # arithmetic here would then *diverge* from evaluate, making
+            # results projection-dependent — keep the residual path instead
+            for b in (lo, hi):
+                if isinstance(b, (float, np.floating)) \
+                        and abs(float(b)) >= 2.0**53 - 2:
+                    return None
+            info = np.iinfo(np_dtype)
+            lo_i = info.min if lo is None else \
+                (math.floor(lo) + 1 if lo_open else math.ceil(lo))
+            hi_i = info.max if hi is None else \
+                (math.ceil(hi) - 1 if hi_open else math.floor(hi))
+            if lo_i > info.max or hi_i < info.min:
+                return int(info.max), int(info.min)  # provably empty
+            return max(int(lo_i), info.min), min(int(hi_i), info.max)
+        if np_dtype.kind == "f":
+            lo_f = -np.inf if lo is None else \
+                (np.nextafter(lo, np.inf) if lo_open else float(lo))
+            hi_f = np.inf if hi is None else \
+                (np.nextafter(hi, -np.inf) if hi_open else float(hi))
+            return lo_f, hi_f
+    except (OverflowError, ValueError):
+        pass
+    return None
+
+
+def _late_saved(counters, nbytes: int) -> None:
+    """Accumulate payload bytes that late materialization never copied."""
+    if counters is not None and nbytes > 0:
+        counters.bytes_saved_late += int(nbytes)
 
 
 def _page_stored_bytes(page: dict) -> int:

@@ -90,6 +90,12 @@ class ScanCounters:
     bytes_total: int = 0        # stored bytes of every chunk in every file
     bytes_selected: int = 0     # projected columns of surviving row groups
     bytes_decoded: int = 0      # actually decoded (after page pruning)
+    # late materialization (two-phase reader): payload rows the selection
+    # vector kept out of result batches, and the bytes of their values —
+    # var-len bytes are never copied out of the page buffer; fixed-width
+    # pages decode to a transient and only the selection is kept
+    rows_skipped_late: int = 0
+    bytes_saved_late: int = 0
     # merge-on-read delta work (planning fills the first three from the
     # delta chain; execution fills applied/shadowed as rows are merged)
     delta_files: int = 0            # delta files in the overlaid chain
@@ -163,6 +169,11 @@ class ScanReport:
                 f"  executed:   {c.pages_scanned} pages decoded "
                 f"({c.pages_skipped} pruned), {c.rows_scanned} rows scanned, "
                 f"{c.rows_matched} matched, {c.bytes_decoded} bytes decoded")
+            if c.rows_skipped_late or c.bytes_saved_late:
+                lines.append(
+                    f"  late mat.:  {c.rows_skipped_late} payload rows "
+                    f"skipped, {c.bytes_saved_late} value bytes kept out "
+                    f"of result batches")
         else:
             lines.append("  (planned only — pass execute=True for decode "
                          "counters)")

@@ -40,7 +40,9 @@ def _splitmix(x: np.ndarray) -> np.ndarray:
 
 
 def _hash2_int(v) -> tuple:
-    x = int(_splitmix(np.array([np.int64(v)]).view(np.uint64))[0])
+    # mod-2^64 like the build side (_bloom_from_ints views int64 as uint64),
+    # so the full uint64 domain [2^63, 2^64) probes without overflow
+    x = int(_splitmix(np.array([int(v) & 0xFFFFFFFFFFFFFFFF], np.uint64))[0])
     return x & 0xFFFFFFFF, (x >> 32) & 0xFFFFFFFF
 
 
@@ -93,6 +95,13 @@ class ColumnStats:
             if isinstance(v, (int, np.integer)) and not isinstance(
                     v, (bool, np.bool_)):
                 h1, h2 = _hash2_int(v)
+            elif isinstance(v, (float, np.floating)) and float(v).is_integer() \
+                    and -2.0**63 <= float(v) < 2.0**64:
+                # int-column blooms are built with the int hash; a float
+                # literal like 1.0 must probe the same way or the chunk is
+                # wrongly pruned (non-integral floats can't match int rows,
+                # so any verdict for them is sound)
+                h1, h2 = _hash2_int(int(v))
             else:
                 h1, h2 = _hash2(_value_bytes(v))
             bits = np.frombuffer(self.bloom, np.uint8)
@@ -171,6 +180,41 @@ def _bloom_from_ints(uniq: np.ndarray) -> bytes:
     for i in range(3):
         bitarr[((h1 + np.uint64(i) * h2) % nb).astype(np.int64)] = 1
     return np.packbits(bitarr, bitorder="little").tobytes()
+
+
+def compute_bloom(col: Column) -> Optional[bytes]:
+    """Chunk-level bloom fingerprint for an int/string column, or None.
+
+    Skips high-cardinality chunks *before* paying for a full ``np.unique``:
+    if a 2x-oversized sample is already all-distinct, the chunk almost
+    surely exceeds ``_BLOOM_MAX_DISTINCT`` and the bloom would be useless —
+    skipping is always sound (a missing bloom only weakens pruning).
+    """
+    k = col.dtype.kind
+    if k == KIND_NUMERIC and col.dtype.is_integer and not col.dtype.is_float:
+        vals = col.values if col.validity is None else col.values[col.validity]
+        if len(vals) == 0:
+            return None
+        if len(vals) > 2 * _BLOOM_MAX_DISTINCT:
+            sample = vals[:2 * _BLOOM_MAX_DISTINCT]
+            if len(np.unique(sample)) > _BLOOM_MAX_DISTINCT:
+                return None
+        uniq = np.unique(vals)
+        if len(uniq) <= _BLOOM_MAX_DISTINCT:
+            return _bloom_from_ints(uniq)
+        return None
+    if k == KIND_STRING:
+        n = len(col)
+        if n > 2 * _BLOOM_MAX_DISTINCT:
+            sample = set(col.slice(0, 2 * _BLOOM_MAX_DISTINCT).to_pylist())
+            sample.discard(None)
+            if len(sample) > _BLOOM_MAX_DISTINCT:
+                return None  # high-cardinality: skip the full materialize
+        vals = [v for v in col.to_pylist() if v is not None]
+        uniq = set(vals)
+        if vals and len(uniq) <= _BLOOM_MAX_DISTINCT:
+            return _bloom_from_values([u.encode("utf-8") for u in uniq])
+    return None
 
 
 def compute_stats(col: Column, with_bloom: bool = True) -> ColumnStats:

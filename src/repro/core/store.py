@@ -195,6 +195,7 @@ class ParquetDB:
         self.compaction_policy = compaction_policy or CompactionPolicy()
         self._maintenance_thread: Optional[threading.Thread] = None
         self._maintenance_mutex = threading.Lock()  # single-flight guard
+        self._schema_hint_cache: Optional[tuple] = None
         # startup recovery: GC files not in the committed manifest (also
         # collects old generations left behind by a prior compaction).
         # Best-effort under the writer lock: another process may be mid-
@@ -292,17 +293,53 @@ class ParquetDB:
                   treat_fields_as_ragged=(), convert_to_fixed_shape=True) -> Table:
         if isinstance(data, Table):
             t = data
-        elif isinstance(data, dict):
-            t = Table.from_pydict(data, treat_fields_as_ragged=treat_fields_as_ragged,
-                                  convert_to_fixed_shape=convert_to_fixed_shape)
-        elif isinstance(data, list):
-            t = Table.from_pylist(data, treat_fields_as_ragged=treat_fields_as_ragged,
-                                  convert_to_fixed_shape=convert_to_fixed_shape)
         else:
-            raise TypeError(f"unsupported input type {type(data)}")
+            # the committed schema short-circuits type inference for
+            # steady-state appends; Table inputs never need it, so the
+            # manifest load is skipped on that path
+            hint = self._schema_hint()
+            if isinstance(data, dict):
+                t = Table.from_pydict(
+                    data, treat_fields_as_ragged=treat_fields_as_ragged,
+                    convert_to_fixed_shape=convert_to_fixed_shape,
+                    schema_hint=hint)
+            elif isinstance(data, list):
+                t = Table.from_pylist(
+                    data, treat_fields_as_ragged=treat_fields_as_ragged,
+                    convert_to_fixed_shape=convert_to_fixed_shape,
+                    schema_hint=hint)
+            else:
+                raise TypeError(f"unsupported input type {type(data)}")
         if schema is not None:
             t = t.align_to_schema(schema.unify(t.schema))
         return t
+
+    def _schema_hint(self) -> Optional[Schema]:
+        """Committed dataset schema as an ingest hint (None on first create).
+
+        Read outside the writer lock: the hint only short-circuits type
+        inference — alignment/unification still runs against the schema
+        loaded under the lock, so a stale hint can never corrupt a commit.
+        Memoized on the manifest file's (size, mtime): steady-state appends
+        pay one ``os.stat`` here instead of a second manifest parse.
+        """
+        mpath = os.path.join(self._dir.path, "_manifest.json")
+        try:
+            st = os.stat(mpath)
+            key = (st.st_size, st.st_mtime_ns)
+        except OSError:
+            return None
+        cached = self._schema_hint_cache
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        try:
+            man = self._dir.load()
+        except OSError:
+            return None
+        hint = (None if not man.files and "schema" not in man.metadata
+                else self._manifest_schema(man))
+        self._schema_hint_cache = (key, hint)
+        return hint
 
     def _write_file(self, path: str, table: Table,
                     row_group_rows: Optional[int] = None,

@@ -16,6 +16,8 @@ Column physical layouts
 """
 from __future__ import annotations
 
+import contextlib
+import gc
 import json
 import pickle
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
@@ -29,6 +31,23 @@ from .schema import Field, Schema
 
 # Field-metadata key marking transparently-serialized python objects
 SERIALIZED_KEY = "serialized"  # value: "json" | "pickle"
+
+
+@contextlib.contextmanager
+def _gc_paused():
+    """Pause cyclic GC around bulk materialization.
+
+    ``tolist`` on a multi-million-row table allocates millions of objects
+    and creates no reference cycles; letting the generational collector
+    scan mid-build roughly doubles materialization time.
+    """
+    was = gc.isenabled()
+    gc.disable()
+    try:
+        yield
+    finally:
+        if was:
+            gc.enable()
 
 
 # ---------------------------------------------------------------------------
@@ -94,6 +113,10 @@ class Column:
                       child=child, validity=validity)
 
     # -- element access (slow path, used by to_pylist) ------------------------
+    def _blob_view(self) -> memoryview:
+        """Zero-copy view of the blob buffer (no ``.tobytes()`` round-trip)."""
+        return memoryview(np.ascontiguousarray(self.blob))
+
     def _get(self, i: int):
         if self.validity is not None and not self.validity[i]:
             return None
@@ -103,11 +126,15 @@ class Column:
         if k == KIND_TENSOR:
             return self.values[i]
         if k in (KIND_STRING, KIND_BINARY):
-            b = bytes(self.blob[self.offsets[i]:self.offsets[i + 1]])
-            return b.decode("utf-8") if k == KIND_STRING else b
+            mv = self._blob_view()[self.offsets[i]:self.offsets[i + 1]]
+            return str(mv, "utf-8") if k == KIND_STRING else bytes(mv)
         if k == KIND_LIST:
             lo, hi = int(self.offsets[i]), int(self.offsets[i + 1])
-            return [self.child._get(j) for j in range(lo, hi)]
+            child = self.child
+            # bulk-slice flat numeric children instead of per-element _get
+            if child.dtype.kind == KIND_NUMERIC and child.validity is None:
+                return child.values[lo:hi].tolist()
+            return [child._get(j) for j in range(lo, hi)]
         return None  # null column
 
     def to_pylist(self) -> list:
@@ -120,11 +147,19 @@ class Column:
             return out
         if k == KIND_TENSOR and self.validity is None:
             return list(self.values)
-        if k == KIND_STRING and self.validity is None:
-            off = self.offsets
-            blob = self.blob.tobytes()
-            return [blob[off[i]:off[i + 1]].decode("utf-8")
-                    for i in range(self._n)]
+        if k in (KIND_STRING, KIND_BINARY):
+            # memoryview slicing: no full-blob copy, one small copy per value
+            off = self.offsets.tolist()
+            mv = self._blob_view()
+            if k == KIND_STRING:
+                out = [str(mv[off[i]:off[i + 1]], "utf-8")
+                       for i in range(self._n)]
+            else:
+                out = [bytes(mv[off[i]:off[i + 1]]) for i in range(self._n)]
+            if self.validity is not None:
+                for i in np.nonzero(~self.validity)[0]:
+                    out[i] = None
+            return out
         return [self._get(i) for i in range(self._n)]
 
     def to_numpy(self) -> np.ndarray:
@@ -146,24 +181,12 @@ class Column:
         if k in (KIND_NUMERIC, KIND_TENSOR):
             return Column(self.dtype, values=self.values[idx], validity=val)
         if k in (KIND_STRING, KIND_BINARY):
-            lens = (self.offsets[1:] - self.offsets[:-1])[idx]
-            new_off = np.zeros(len(idx) + 1, np.int64)
-            np.cumsum(lens, out=new_off[1:])
-            new_blob = np.empty(int(new_off[-1]), np.uint8)
-            src_off = self.offsets
-            for out_i, src_i in enumerate(idx):
-                lo, hi = src_off[src_i], src_off[src_i + 1]
-                new_blob[new_off[out_i]:new_off[out_i + 1]] = self.blob[lo:hi]
-            return Column(self.dtype, offsets=new_off, blob=new_blob, validity=val)
+            new_off, gather = _ragged_gather_index(self.offsets, idx)
+            return Column(self.dtype, offsets=new_off,
+                          blob=np.ascontiguousarray(self.blob)[gather],
+                          validity=val)
         if k == KIND_LIST:
-            lens = (self.offsets[1:] - self.offsets[:-1])[idx]
-            new_off = np.zeros(len(idx) + 1, np.int64)
-            np.cumsum(lens, out=new_off[1:])
-            # gather child indices
-            child_idx = np.empty(int(new_off[-1]), np.int64)
-            for out_i, src_i in enumerate(idx):
-                lo, hi = int(self.offsets[src_i]), int(self.offsets[src_i + 1])
-                child_idx[new_off[out_i]:new_off[out_i + 1]] = np.arange(lo, hi)
+            new_off, child_idx = _ragged_gather_index(self.offsets, idx)
             return Column(self.dtype, offsets=new_off,
                           child=self.child.take(child_idx), validity=val)
         return Column.nulls(len(idx))
@@ -205,6 +228,24 @@ class Column:
         return self.validity
 
 
+def _ragged_gather_index(offsets: np.ndarray, idx: np.ndarray):
+    """Vectorized ragged take: flat gather indices for rows ``idx``.
+
+    Returns ``(new_offsets, gather)`` where ``gather`` maps every output
+    element position to its source position — one fancy-index instead of a
+    per-row python loop (the take hot path for string/list columns).
+    """
+    lens = (offsets[1:] - offsets[:-1])[idx]
+    new_off = np.zeros(len(idx) + 1, np.int64)
+    np.cumsum(lens, out=new_off[1:])
+    total = int(new_off[-1])
+    if total == 0:
+        return new_off, np.empty(0, np.int64)
+    starts = offsets[idx]
+    gather = np.repeat(starts - new_off[:-1], lens) + np.arange(total)
+    return new_off, gather
+
+
 def _varlen_from_bytes(items: List[Optional[bytes]], dtype: DType) -> Column:
     n = len(items)
     validity = None
@@ -237,6 +278,8 @@ def null_column_of(dtype: DType, n: int) -> Column:
 def concat_columns(cols: List[Column]) -> Column:
     """Concatenate columns of identical dtype (callers promote/cast first)."""
     assert cols, "empty concat"
+    if len(cols) == 1:
+        return cols[0]  # columns are immutable: no defensive copy
     dtype = cols[0].dtype
     assert all(c.dtype == dtype for c in cols), [str(c.dtype) for c in cols]
     n = sum(len(c) for c in cols)
@@ -276,14 +319,29 @@ def _try_json(v) -> Optional[bytes]:
 
 
 def infer_column(values: List[Any], *, ragged: bool = False,
-                 convert_to_fixed_shape: bool = True) -> Tuple[Column, Optional[dict]]:
+                 convert_to_fixed_shape: bool = True,
+                 dtype_hint: Optional[DType] = None) -> Tuple[Column, Optional[dict]]:
     """Build a Column from a list of python values.
 
     Returns (column, field_metadata).  field_metadata is non-None when values
     were transparently serialized (dict / heterogeneous objects), mirroring the
     paper's ``serialize_python_objects``.
+
+    ``dtype_hint`` (from an existing dataset schema) lets steady-state appends
+    skip the type-sniffing cascade: the hinted bulk builder is attempted first
+    and silently falls through to full inference when the values don't fit.
     """
     n = len(values)
+    if dtype_hint is not None and not ragged:
+        if dtype_hint.kind == KIND_LIST:
+            # the dataset already types this column as a ragged list; an
+            # all-empty or accidentally-uniform batch must not re-infer as
+            # a fixed-shape tensor (which would fail schema unification)
+            ragged = True
+        else:
+            col = _column_from_hint(values, dtype_hint)
+            if col is not None:
+                return col, None
     # fast path: uniform numeric values, no Nones — one C-level conversion
     # instead of 2n isinstance checks (the pylist ingest hot path)
     try:
@@ -293,15 +351,18 @@ def infer_column(values: List[Any], *, ragged: bool = False,
                                   else arr.astype(np.int64, copy=False)), None
     except (ValueError, TypeError, OverflowError):
         pass
-    present = [v for v in values if v is not None]
-    if not present:
+    first = next((v for v in values if v is not None), None)
+    if first is None:
         return Column.nulls(n), None
-    first = present[0]
+
+    if isinstance(first, str):
+        col = _bulk_strings(values)
+        if col is not None:
+            return col, None
+    present = [v for v in values if v is not None]
 
     if isinstance(first, (bool, np.bool_)) and all(isinstance(v, (bool, np.bool_)) for v in present):
         return _masked_numeric(values, np.bool_), None
-    if isinstance(first, str) and all(isinstance(v, str) for v in present):
-        return Column.strings(values), None
     if isinstance(first, bytes) and all(isinstance(v, bytes) for v in present):
         return Column.binary(values), None
     if _all_scalar_number(present):
@@ -332,6 +393,52 @@ def _all_scalar_number(vals) -> bool:
     return all(
         isinstance(v, (int, float, np.integer, np.floating))
         and not isinstance(v, (bool, np.bool_)) for v in vals)
+
+
+def _bulk_strings(values: List[Any]) -> Optional[Column]:
+    """One-pass UTF-8 blob + offsets build; None when values aren't all str.
+
+    Validation is folded into the encode pass itself (``str.encode`` raises
+    on non-strings) instead of a separate full ``isinstance`` sweep.
+    """
+    try:
+        enc = [b"" if v is None else str.encode(v, "utf-8") for v in values]
+    except TypeError:  # str.encode rejects any non-str element
+        return None
+    n = len(values)
+    offsets = np.zeros(n + 1, np.int64)
+    np.cumsum([len(b) for b in enc], out=offsets[1:])
+    blob = (np.frombuffer(b"".join(enc), np.uint8)
+            if offsets[-1] else np.empty(0, np.uint8))
+    validity = None
+    if any(v is None for v in values):
+        validity = np.array([v is not None for v in values], bool)
+    return Column(DType.string(), offsets=offsets, blob=blob, validity=validity)
+
+
+def _column_from_hint(values: List[Any], dtype: DType) -> Optional[Column]:
+    """Schema-reuse bulk build: decode ``values`` straight into ``dtype``.
+
+    Used by steady-state appends (the dataset schema is known) to skip the
+    inference cascade.  Returns None — caller falls back to full inference —
+    whenever the values don't losslessly fit the hinted type.
+    """
+    k = dtype.kind
+    if k == KIND_STRING:
+        return _bulk_strings(values)
+    if k == KIND_NUMERIC:
+        try:
+            arr = np.asarray(values)
+        except (ValueError, TypeError, OverflowError):
+            return None
+        if arr.ndim != 1 or arr.dtype.kind not in "biuf":
+            return None  # Nones / mixed types: full inference handles masks
+        if arr.dtype == dtype.np:
+            return Column(dtype, values=arr)
+        if np.can_cast(arr.dtype, dtype.np, "safe"):
+            return Column(dtype, values=arr.astype(dtype.np))
+        return None  # would truncate (e.g. floats into an int column)
+    return None  # tensor/list/binary hints: inference is already bulk
 
 
 def _masked_numeric(values: List[Any], np_dtype) -> Column:
@@ -410,6 +517,78 @@ def _ragged_strings(values):
 
 
 # ---------------------------------------------------------------------------
+# Vectorized pylist ingest
+# ---------------------------------------------------------------------------
+def _needs_flatten(records: List[dict]) -> bool:
+    """True when any record needs the flatten pass: a nested dict value
+    (dotted-column flatten) or a non-string key (flatten coerces keys via
+    ``str``; without it mixed key types crash the column sort).
+
+    Flat string-keyed records (the overwhelmingly common ingest shape) skip
+    the per-record dict rebuild in :func:`nested.flatten_records` entirely.
+    """
+    return any(isinstance(v, dict) or type(k) is not str
+               for r in records for k, v in r.items())
+
+
+def _from_pylist_uniform(records: List[dict],
+                         metadata: Optional[dict]) -> Optional["Table"]:
+    """All-scalar uniform-record fast path: one 2-D conversion, no sniffing.
+
+    Applies when every record has exactly the first record's key set and the
+    first record's values are homogeneously ``int`` or ``float`` (the paper's
+    Fig. 5 workload: n rows x 100 integer columns).  One ``itemgetter`` pass
+    transposes the rows, one ``np.asarray`` builds the matrix, and columns
+    are contiguous slices — replacing the per-column python scan that made
+    ingest interpreter-bound.  Returns None (caller runs full inference) on
+    any mismatch; the dtype check after conversion rejects rows that smuggle
+    in strings, Nones, dicts or ragged values, so the fallback stays sound.
+    """
+    if not records:
+        return None
+    import operator
+    r0 = records[0]
+    names0 = list(r0)
+    ncols = len(names0)
+    if ncols == 0 or any(type(k) is not str for k in names0):
+        return None  # non-string keys go through the flatten/str() path
+    kinds = {type(v) for v in r0.values()}
+    if kinds == {int}:
+        want = "iu"
+    elif kinds == {float}:
+        want = "f"
+    else:
+        return None
+    getter = operator.itemgetter(*names0)
+    try:
+        rows = [getter(r) for r in records if len(r) == ncols]
+    except (KeyError, TypeError):
+        return None
+    if len(rows) != len(records):
+        return None  # some record had extra keys alongside missing ones
+    try:
+        arr = np.asarray(rows)
+    except (ValueError, TypeError, OverflowError):
+        return None
+    if ncols == 1:  # itemgetter with one key returns scalars
+        arr = arr.reshape(-1, 1)
+    if arr.ndim != 2 or arr.dtype.kind not in want:
+        return None  # mixed/ragged/object rows: full inference handles them
+    if arr.dtype.kind == "u":
+        # a value >= 2**63 pushed the whole matrix to uint64; astype(int64)
+        # would wrap it negative, and keeping "u" would mistype every other
+        # column — only per-column inference preserves exact dtypes here
+        return None
+    if arr.dtype.kind == "i":
+        arr = arr.astype(np.int64, copy=False)
+    order = sorted(range(ncols), key=lambda j: names0[j])
+    cols = {names0[j]: Column.numeric(np.ascontiguousarray(arr[:, j]))
+            for j in order}
+    fields = [Field(names0[j], cols[names0[j]].dtype) for j in order]
+    return Table(Schema(fields, metadata=metadata), cols)
+
+
+# ---------------------------------------------------------------------------
 # Table
 # ---------------------------------------------------------------------------
 class Table:
@@ -454,15 +633,29 @@ class Table:
     @staticmethod
     def from_pylist(records: List[dict], *, treat_fields_as_ragged=(),
                     convert_to_fixed_shape: bool = True,
-                    metadata: Optional[dict] = None) -> "Table":
-        flats = nested.flatten_records(records)
+                    metadata: Optional[dict] = None,
+                    schema_hint: Optional[Schema] = None) -> "Table":
+        if not treat_fields_as_ragged:
+            t = _from_pylist_uniform(records, metadata)
+            if t is not None:
+                return t
+        flats = records if not _needs_flatten(records) \
+            else nested.flatten_records(records)
         names: List[str] = sorted({k for r in flats for k in r})
+        hints: Dict[str, DType] = {}
+        if schema_hint is not None:
+            # reuse dataset dtypes for plain fields (serialized fields carry
+            # metadata and must re-run inference to re-serialize)
+            name_set = set(names)
+            hints = {f.name: f.dtype for f in schema_hint
+                     if not f.metadata and f.name in name_set}
         cols, fields = {}, []
         for name in names:
             vals = [r.get(name) for r in flats]
             col, fmeta = infer_column(
                 vals, ragged=name in set(treat_fields_as_ragged),
-                convert_to_fixed_shape=convert_to_fixed_shape)
+                convert_to_fixed_shape=convert_to_fixed_shape,
+                dtype_hint=hints.get(name))
             cols[name] = col
             fields.append(Field(name, col.dtype, metadata=fmeta))
         t = Table(Schema(fields, metadata=metadata), cols)
@@ -472,10 +665,14 @@ class Table:
     @staticmethod
     def from_pydict(data: Dict[str, Any], *, treat_fields_as_ragged=(),
                     convert_to_fixed_shape: bool = True,
-                    metadata: Optional[dict] = None) -> "Table":
+                    metadata: Optional[dict] = None,
+                    schema_hint: Optional[Schema] = None) -> "Table":
         cols, fields = {}, []
         for name in sorted(data.keys()):
             v = data[name]
+            hint = (schema_hint[name].dtype
+                    if schema_hint is not None and name in schema_hint
+                    and not schema_hint[name].metadata else None)
             if isinstance(v, Column):
                 col, fmeta = v, None
             elif isinstance(v, np.ndarray) and v.ndim == 1 and v.dtype != object:
@@ -485,7 +682,8 @@ class Table:
             else:
                 col, fmeta = infer_column(
                     list(v), ragged=name in set(treat_fields_as_ragged),
-                    convert_to_fixed_shape=convert_to_fixed_shape)
+                    convert_to_fixed_shape=convert_to_fixed_shape,
+                    dtype_hint=hint)
             cols[name] = col
             fields.append(Field(name, col.dtype, metadata=fmeta))
         return Table(Schema(fields, metadata=metadata), cols)
@@ -540,15 +738,19 @@ class Table:
 
     # -- export -------------------------------------------------------------------
     def to_pylist(self, *, rebuild_nested: bool = False) -> List[dict]:
-        pl = {n: _decode_objects(self.schema[n], c) for n, c in self.columns.items()}
-        rows = [{n: pl[n][i] for n in self.column_names} for i in range(self._n)]
+        with _gc_paused():
+            pl = {n: _decode_objects(self.schema[n], c)
+                  for n, c in self.columns.items()}
+            rows = [{n: pl[n][i] for n in self.column_names}
+                    for i in range(self._n)]
         if rebuild_nested:
             rows = nested.rebuild_records(rows)
         return rows
 
     def to_pydict(self) -> Dict[str, list]:
-        return {n: _decode_objects(self.schema[n], c)
-                for n, c in self.columns.items()}
+        with _gc_paused():
+            return {n: _decode_objects(self.schema[n], c)
+                    for n, c in self.columns.items()}
 
     def __repr__(self) -> str:
         return f"Table[{self._n} rows x {self.num_columns} cols]({self.schema})"

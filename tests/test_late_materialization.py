@@ -1,0 +1,254 @@
+"""Selection-vector late materialization: edge cases + counter reporting.
+
+The two-phase reader turns the filter-column mask into a per-page selection
+vector and materializes only the selected rows of payload columns.  These
+tests pin the edge cases — empty selection, all-rows selection, all-null
+pages, var-len/list/tensor payloads — and assert the result is always
+row-identical to a full scan, with ``rows_skipped_late``/``bytes_saved_late``
+reported by ``explain(execute=True)``.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (LoadConfig, NormalizeConfig, ParquetDB, Table,
+                        TPQReader, field, write_table)
+from repro.core.scan import ScanCounters
+
+
+def norm(v):
+    if isinstance(v, np.ndarray):
+        return v.tolist()
+    if isinstance(v, dict):
+        return {k: norm(x) for k, x in v.items()}
+    if isinstance(v, list):
+        return [norm(x) for x in v]
+    return v
+
+
+@pytest.fixture()
+def mixed_file(tmp_path):
+    """One file, 4 pages of 250 rows, every column kind as payload."""
+    n = 1000
+    rng = np.random.default_rng(5)
+    t = Table.from_pydict({
+        "k": np.arange(n),
+        "f": rng.standard_normal(n),
+        "s": [f"val_{i % 13}_{'x' * (i % 7)}" for i in range(n)],
+        "t": rng.standard_normal((n, 2, 2)),
+        "l": [[j for j in range(i % 4)] for i in range(n)],
+        "ls": [[f"s{j}" for j in range(i % 3)] for i in range(n)],
+    })
+    p = str(tmp_path / "late.tpq")
+    write_table(p, t, page_rows=250, row_group_rows=1000)
+    return p, t
+
+
+def _read(path, expr, **kw):
+    c = ScanCounters()
+    out = TPQReader(path).read(filter_expr=expr, counters=c, **kw)
+    return out, c
+
+
+class TestSelectionVector:
+    def test_sparse_selection_all_kinds(self, mixed_file):
+        p, t = mixed_file
+        out, c = _read(p, (field("k") >= 100) & (field("k") < 103))
+        assert out.num_rows == 3
+        full = t.filter_mask(((np.arange(1000) >= 100) & (np.arange(1000) < 103)))
+        assert norm(out.to_pylist()) == norm(full.to_pylist())
+        assert c.rows_skipped_late > 0
+        assert c.bytes_saved_late > 0
+
+    def test_all_rows_selection_skips_nothing(self, mixed_file):
+        p, t = mixed_file
+        out, c = _read(p, field("k") >= 0)   # every row matches
+        assert out.num_rows == 1000
+        assert c.rows_skipped_late == 0
+        assert c.bytes_saved_late == 0
+        assert norm(out.to_pylist()) == norm(t.to_pylist())
+
+    def test_empty_selection_yields_nothing(self, mixed_file):
+        p, _ = mixed_file
+        # explicit row-group selection is authoritative (no stats pruning)
+        # and page pruning is off: every page reaches phase 1, every mask
+        # comes back empty, no payload column is ever touched
+        out, c = _read(p, field("k") < 0, row_groups=[0], prune_pages=False)
+        assert out.num_rows == 0
+        assert c.rows_skipped_late == 0   # nothing was kept to late-skip
+
+    def test_single_row_per_page(self, mixed_file):
+        p, t = mixed_file
+        out, _ = _read(p, field("k").isin([10, 260, 510, 990]))
+        assert sorted(out["k"].to_pylist()) == [10, 260, 510, 990]
+        oracle = t.filter_mask(np.isin(np.arange(1000), [10, 260, 510, 990]))
+        assert norm(out.to_pylist()) == norm(oracle.to_pylist())
+
+    def test_all_null_payload_page(self, tmp_path):
+        t = Table.from_pylist(
+            [{"k": i, "v": None if i < 500 else float(i)} for i in range(1000)])
+        p = str(tmp_path / "nulls.tpq")
+        write_table(p, t, page_rows=250, row_group_rows=1000)
+        out, c = _read(p, (field("k") >= 100) & (field("k") < 110))
+        assert out["v"].to_pylist() == [None] * 10
+        out2, _ = _read(p, (field("k") >= 700) & (field("k") < 705))
+        assert out2["v"].to_pylist() == [700.0, 701.0, 702.0, 703.0, 704.0]
+
+    def test_validity_respected_under_selection(self, tmp_path):
+        t = Table.from_pylist(
+            [{"k": i, "s": None if i % 3 == 0 else f"s{i}"} for i in range(500)])
+        p = str(tmp_path / "vs.tpq")
+        write_table(p, t, page_rows=100, row_group_rows=500)
+        out, _ = _read(p, (field("k") >= 150) & (field("k") < 156))
+        assert out["s"].to_pylist() == [None, "s151", "s152", None, "s154",
+                                        "s155"]
+
+    def test_multi_filter_columns(self, mixed_file):
+        p, t = mixed_file
+        expr = (field("k") < 300) & (field("s") == "val_5_")
+        out, _ = _read(p, expr)
+        ks = out["k"].to_pylist()
+        assert ks and all(k < 300 and k % 13 == 5 and k % 7 == 0 for k in ks)
+
+
+class TestFusedRangeMask:
+    """The single-column range fast path (backend.range_mask) must be
+    mask-identical to Expr.evaluate for every op and dtype mix."""
+
+    @pytest.mark.parametrize("make_expr", [
+        lambda f: f == 500, lambda f: f != 500,
+        lambda f: f < 123, lambda f: f <= 123,
+        lambda f: f > 877, lambda f: f >= 877,
+        lambda f: (f >= 100) & (f < 200),
+        lambda f: (f > 100) & (f <= 200),
+    ], ids=["eq", "ne", "lt", "le", "gt", "ge", "range", "range-open"])
+    @pytest.mark.parametrize("col,vals", [
+        ("k", None),                       # int64
+        ("f", None),                       # float64
+    ])
+    def test_ops_match_full_scan(self, tmp_path, make_expr, col, vals):
+        n = 1000
+        rng = np.random.default_rng(17)
+        t = Table.from_pydict({
+            "k": rng.integers(0, 1000, n),
+            "f": rng.integers(0, 1000, n).astype(np.float64),
+            "payload": [f"p{i}" for i in range(n)],
+        })
+        p = str(tmp_path / "rm.tpq")
+        write_table(p, t, page_rows=250, row_group_rows=1000)
+        expr = make_expr(field(col))
+        out = TPQReader(p).read(filter_expr=expr, prune_pages=False)
+        oracle = t.filter_mask(expr.evaluate(t))
+        assert norm(out.to_pylist()) == norm(oracle.to_pylist())
+
+    def test_float_strict_bounds_on_int_and_float(self, tmp_path):
+        t = Table.from_pydict({"x": np.arange(10),
+                               "y": np.arange(10) + 0.5,
+                               "pay": ["z"] * 10})
+        p = str(tmp_path / "fb.tpq")
+        write_table(p, t, page_rows=5, row_group_rows=10)
+        rd = TPQReader(p)
+        out = rd.read(filter_expr=(field("x") > 2.5) & (field("x") < 5))
+        assert out["x"].to_pylist() == [3, 4]
+        out = rd.read(filter_expr=field("y") > 4.5)
+        assert out["y"].to_pylist() == [4.5 + i for i in range(1, 6)]
+        out = rd.read(filter_expr=field("x") == 2.5)
+        assert out.num_rows == 0
+
+    def test_projection_independent_near_2p53(self, tmp_path):
+        # float bounds within one ulp of 2^53 must not take the exact-int
+        # fused path while the residual path compares in rounded float64 —
+        # results would depend on which columns were projected
+        t = Table.from_pydict({"a": np.array([1, 2**53, 2**53 + 1], np.int64),
+                               "pay": ["x", "y", "z"]})
+        p = str(tmp_path / "p53.tpq")
+        write_table(p, t, page_rows=3, row_group_rows=3)
+        rd = TPQReader(p)
+        expr = field("a") > float(2**53)
+        two_phase = rd.read(filter_expr=expr)            # fused-eligible
+        residual = rd.read(filter_expr=expr, columns=["a"])  # evaluate path
+        assert two_phase["a"].to_pylist() == residual["a"].to_pylist()
+
+    def test_as_range_shapes(self):
+        assert (field("a") == 5).as_range() == ("a", 5, False, 5, False)
+        assert ((field("a") >= 1) & (field("a") < 9)).as_range() == \
+            ("a", 1, False, 9, True)
+        assert ((field("a") > 1) & (field("b") < 9)).as_range() is None
+        assert (field("a") != 5).as_range() is None
+        assert (field("a") == "s").as_range() is None
+        assert (field("a") == True).as_range() is None  # noqa: E712
+
+
+def test_uint64_bloom_probe_full_domain():
+    # bloom build hashes values mod 2^64; int and float probes in
+    # [2^63, 2^64) must do the same — they used to overflow or byte-hash
+    from repro.core.statistics import compute_stats
+    from repro.core.table import Column
+    col = Column.numeric(np.array([1, 2**63, 2**64 - 1], np.uint64))
+    st = compute_stats(col)
+    assert st.bloom is not None
+    assert st.may_contain(2**63)
+    assert st.may_contain(float(2**63))
+    assert st.may_contain(2**64 - 1)
+
+
+def test_float_literal_equality_not_bloom_pruned(tmp_path):
+    # field('x') == 1.0 on an int column: the chunk bloom is built with the
+    # integer hash, so the float literal must probe the same way — this
+    # used to prune the whole file and return 0 rows
+    from repro.core.statistics import compute_stats
+    from repro.core.table import Column
+    col = Column.numeric(np.arange(100, dtype=np.int64))
+    st = compute_stats(col)
+    assert st.bloom is not None
+    assert st.may_contain(1.0)
+    assert st.may_contain(np.float64(42.0))
+    db = ParquetDB(os.path.join(str(tmp_path), "fb"))
+    db.create([{"x": i, "y": i * 2} for i in range(100)])
+    assert db.read(filters=[field("x") == 7.0]).num_rows == 1
+    assert db.read(filters=[field("x") == 7]).num_rows == 1
+
+
+class TestExplainReporting:
+    def test_selective_scan_reports_late_savings(self, tmp_path):
+        n = 20_000
+        db = ParquetDB(os.path.join(str(tmp_path), "late"))
+        db.create([{"a": i, "b": f"payload_{i}", "c": float(i)}
+                   for i in range(n)])
+        db.normalize(NormalizeConfig(max_rows_per_file=5_000,
+                                     max_rows_per_group=2_048))
+        rep = db.explain(filters=[field("a") == n // 2], execute=True)
+        assert rep.counters.rows_matched == 1
+        assert rep.counters.rows_skipped_late > 0
+        assert rep.counters.bytes_saved_late > 0
+        assert "late mat." in str(rep)
+        # a full scan reports none
+        rep = db.explain(execute=True)
+        assert rep.counters.rows_skipped_late == 0
+        assert rep.counters.bytes_saved_late == 0
+
+    def test_to_dict_carries_new_counters(self, tmp_path):
+        db = ParquetDB(os.path.join(str(tmp_path), "d"))
+        db.create([{"a": i, "b": i} for i in range(10)])
+        d = db.explain(execute=True).to_dict()
+        assert "rows_skipped_late" in d["counters"]
+        assert "bytes_saved_late" in d["counters"]
+
+    def test_pruned_equals_unpruned_under_late_mat(self, tmp_path):
+        """Oracle: late materialization never changes scan results."""
+        rng = np.random.default_rng(9)
+        n = 10_000
+        db = ParquetDB(os.path.join(str(tmp_path), "oracle"))
+        db.create(Table.from_pydict({
+            "k": rng.integers(0, 500, n),
+            "s": [f"r{i}" for i in range(n)],
+            "v": rng.standard_normal(n),
+        }))
+        db.normalize(NormalizeConfig(max_rows_per_file=2_500,
+                                     max_rows_per_group=512))
+        expr = field("k") == 123
+        pruned = db.read(filters=[expr])
+        full = db.read()
+        oracle = full.filter_mask(expr.evaluate(full))
+        assert norm(pruned.to_pylist()) == norm(oracle.to_pylist())
