@@ -1,0 +1,127 @@
+"""Fig. 11 (beyond-paper): aggregate pushdown + parallel scan.
+
+Three claims, one suite:
+
+- ``fig11/aggregate/*`` — count/min/max/sum/mean over the whole dataset,
+  answered from footer statistics (zero pages decoded) vs. the same
+  aggregate computed by fully materializing the table
+  (``aggregate-full-mat``) and vs. SQLite's un-indexed ``SELECT
+  COUNT/MIN/MAX/SUM/AVG``.  The derived ``speedup_vs_full_mat`` is the
+  order-of-magnitude headline; a built-in oracle asserts the pushed-down
+  answer equals the materialized one exactly.
+- ``fig11/aggregate-filtered/*`` — the same aggregate under a range
+  predicate that splits a row group, exercising the covered/partial
+  classification (most groups answered from stats, one decoded).
+- ``fig11/read-scan-mt*`` + ``fig11/mt-read/*`` — full-table read-scan at
+  1/2/4 morsel workers over a multi-fragment layout; ``mt-read`` (2
+  workers, SQLite-normalized) is the row CI's perf gate tracks, since 2
+  workers is what CI runners actually have.
+"""
+from __future__ import annotations
+
+import os
+from typing import List
+
+import numpy as np
+
+from repro.core import LoadConfig, NormalizeConfig, ParquetDB, field
+
+from .common import (TmpDir, gen_rows_pylist, row, sqlite_create, timeit,
+                     timeit_median)
+
+# filtered aggregate: predicate on the sorted id column, cut mid-row-group
+# so the planner must produce all three classes (pruned/covered/partial);
+# a random-valued column would make every group partial and show nothing
+FILTER_FRACTION = 3  # keep ids >= n // 3 (+7 to land inside a group)
+
+
+def run(scale: str = "small") -> List[dict]:
+    counts = {"small": [10_000, 50_000],
+              "medium": [10_000, 100_000],
+              "paper": [100_000, 1_000_000]}[scale]
+    out: List[dict] = []
+    spec = {"*": "count", "col0": ["min", "max", "sum", "mean"]}
+    for n in counts:
+        rows = gen_rows_pylist(n)
+        with TmpDir() as tmp:
+            db = ParquetDB(os.path.join(tmp, "pdb"), "bench")
+            db.create(rows)
+            # database-like layout: several fragments and row groups — the
+            # granularity statistics answer at and morsels parallelize over
+            db.normalize(NormalizeConfig(max_rows_per_file=max(n // 8, 1_000),
+                                         max_rows_per_group=2_048))
+
+            # --- aggregate pushdown vs full materialization
+            t_agg = timeit_median(lambda: db.aggregate(spec), k=5)
+
+            def full_mat():
+                t = db.read(columns=["col0"])
+                v = t["col0"].values
+                return (t.num_rows, int(v.min()), int(v.max()),
+                        int(v.sum()), float(v.mean()))
+
+            t_mat = timeit_median(full_mat, k=3)
+            got, rep = db.aggregate(spec, explain=True)
+            nr, mn, mx, sm, mean = full_mat()
+            assert (got["*"]["count"], got["col0"]["min"], got["col0"]["max"],
+                    got["col0"]["sum"]) == (nr, mn, mx, sm), \
+                "aggregate pushdown diverged from materialized reduction"
+            assert rep.counters.groups_answered_by_stats > 0, \
+                "no row group was answered from footer statistics"
+            assert rep.counters.pages_scanned == 0, \
+                "unfiltered aggregate decoded pages despite full stats cover"
+            out.append(row(f"fig11/aggregate/parquetdb/n={n}", t_agg, rows=n,
+                           speedup_vs_full_mat=t_mat / t_agg,
+                           groups_stats=rep.counters.groups_answered_by_stats,
+                           bytes_skipped=rep.counters.bytes_skipped_agg))
+            out.append(row(f"fig11/aggregate-full-mat/parquetdb/n={n}", t_mat,
+                           rows=n))
+
+            # --- filtered aggregate (covered + partial classification)
+            expr = field("id") >= n // FILTER_FRACTION + 7
+            t_fagg = timeit_median(
+                lambda: db.aggregate({"*": "count", "col0": "sum"},
+                                     filters=[expr]), k=5)
+            fa, frep = db.aggregate({"*": "count", "col0": "sum"},
+                                    filters=[expr], explain=True)
+            full = db.read(columns=["col0"], filters=[expr])
+            assert fa["*"]["count"] == full.num_rows
+            assert fa["col0"]["sum"] == (int(full["col0"].values.sum())
+                                         if full.num_rows else None)
+            assert frep.counters.groups_answered_by_stats > 0, \
+                "filtered aggregate answered nothing from stats"
+            assert frep.counters.rows_scanned > 0, \
+                "mid-group cut should force at least one partial group"
+            out.append(row(
+                f"fig11/aggregate-filtered/parquetdb/n={n}", t_fagg, rows=n,
+                groups_stats=frep.counters.groups_answered_by_stats,
+                rows_decoded=frep.counters.rows_scanned))
+
+            # --- parallel read-scan (morsel scheduler)
+            t_mt = {}
+            for nt in (1, 2, 4):
+                cfg = LoadConfig(num_threads=nt)
+                t_mt[nt] = timeit_median(
+                    lambda: db.read(load_config=cfg), k=3)
+                out.append(row(f"fig11/read-scan-mt{nt}/parquetdb/n={n}",
+                               t_mt[nt], rows=n,
+                               speedup_vs_mt1=t_mt[1] / t_mt[nt]))
+            # parity oracle: threaded scan is identical to serial
+            s1 = db.read(load_config=LoadConfig(num_threads=1))
+            s4 = db.read(load_config=LoadConfig(num_threads=4))
+            assert np.array_equal(s1["id"].values, s4["id"].values) and \
+                np.array_equal(s1["col0"].values, s4["col0"].values), \
+                "parallel scan diverged from serial scan"
+            out.append(row(f"fig11/mt-read/parquetdb/n={n}", t_mt[2], rows=n))
+
+            # --- SQLite reference (same machine, same run: normalizes CI)
+            conn = sqlite_create(os.path.join(tmp, "s.db"), rows)
+            q = ("SELECT COUNT(*), MIN(col0), MAX(col0), SUM(col0), "
+                 "AVG(col0) FROM test_table")
+            t = timeit(lambda: conn.execute(q).fetchone(), repeat=3)
+            out.append(row(f"fig11/aggregate/sqlite/n={n}", t, rows=n))
+            t = timeit(lambda: conn.execute(
+                "SELECT * FROM test_table").fetchall(), repeat=3)
+            out.append(row(f"fig11/mt-read/sqlite/n={n}", t, rows=n))
+            conn.close()
+    return out

@@ -15,7 +15,7 @@ from __future__ import annotations
 import os
 from typing import List
 
-from repro.core import ParquetDB
+from repro.core import LoadConfig, NormalizeConfig, ParquetDB
 
 from .common import (TmpDir, gen_rows_pylist, row, sqlite_create, timeit,
                      timeit_median)
@@ -42,6 +42,19 @@ def run(scale: str = "small") -> List[dict]:
             out.append(row(f"fig5/read-scan/parquetdb/n={n}", t_scan, rows=n))
             out.append(row(f"fig5/read-materialize/parquetdb/n={n}", t_mat,
                            rows=n))
+            # --- parallel read-scan: multi-fragment layout, 1 vs 4 morsel
+            # workers (a single-file dataset is one morsel — nothing to
+            # parallelize — so re-partition like a grown database first)
+            db.normalize(NormalizeConfig(max_rows_per_file=max(n // 8, 1_000),
+                                         max_rows_per_group=2_048))
+            t_mt1 = timeit_median(lambda: db.read(
+                load_config=LoadConfig(num_threads=1)), k=3)
+            t_mt4 = timeit_median(lambda: db.read(
+                load_config=LoadConfig(num_threads=4)), k=3)
+            out.append(row(f"fig5/read-scan-mt1/parquetdb/n={n}", t_mt1,
+                           rows=n))
+            out.append(row(f"fig5/read-scan-mt4/parquetdb/n={n}", t_mt4,
+                           rows=n, speedup_vs_mt1=t_mt1 / t_mt4))
             # --- SQLite (paper Listing 1 incl. PRAGMAs)
             conn_holder = {}
             t_create = timeit(lambda: conn_holder.setdefault(

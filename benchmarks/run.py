@@ -19,8 +19,8 @@ import sys
 import time
 
 SUITES = ["fig5_create_read", "fig6_formats", "fig7_needle", "fig8_update",
-          "fig9_alexandria", "fig10_ops", "pipeline_bench", "kernels_bench",
-          "ckpt_bench"]
+          "fig9_alexandria", "fig10_ops", "fig11_aggregate",
+          "pipeline_bench", "kernels_bench", "ckpt_bench"]
 
 
 def _suite_tag(suite: str) -> str:

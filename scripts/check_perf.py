@@ -2,10 +2,12 @@
 
 Compares a fresh ``benchmarks.run --json`` artifact directory against the
 committed ``BENCH_baseline.json`` (recorded from the pre-engine seed code) on
-the two headline paths:
+the headline paths:
 
-- fig5 create  (bulk ingest)
-- fig7 needle  (index-free selective read)
+- fig5 create   (bulk ingest)
+- fig7 needle   (index-free selective read)
+- fig11 agg     (stats-answered aggregates, zero pages decoded)
+- fig11 mtread  (morsel-parallel full read-scan at num_threads=2)
 
 Raw wall-clock is not portable across CI machines, so each ParquetDB timing
 is normalized by the SQLite timing *from the same run* (same machine, same
@@ -33,6 +35,12 @@ import sys
 GATES = [
     ("fig5 create", "fig5/create/parquetdb/", "fig5/create/sqlite/"),
     ("fig7 needle", "fig7/parquetdb/", "fig7/sqlite-noindex/"),
+    # stats-answered aggregates (count/min/max/sum/mean from footers) vs
+    # SQLite's un-indexed aggregate over the same rows
+    ("fig11 agg", "fig11/aggregate/parquetdb/", "fig11/aggregate/sqlite/"),
+    # parallel read-scan at num_threads=2 (what CI runners actually have)
+    # vs SQLite full-table fetch from the same run
+    ("fig11 mtread", "fig11/mt-read/parquetdb/", "fig11/mt-read/sqlite/"),
 ]
 
 

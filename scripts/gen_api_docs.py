@@ -19,7 +19,7 @@ import textwrap
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
-from repro.core import compaction, scan, store, transactions  # noqa: E402
+from repro.core import aggregate, compaction, scan, store, transactions  # noqa: E402
 
 OUT = os.path.join(REPO, "docs", "API.md")
 
@@ -39,17 +39,18 @@ lifecycle.
 # (class, members); None = every public method, () = class docstring only
 SECTIONS = [
     (store.ParquetDB,
-     ["create", "read", "update", "delete", "normalize", "compact",
-      "maintenance_stats", "explain", "wait_for_maintenance",
+     ["create", "read", "aggregate", "update", "delete", "normalize",
+      "compact", "maintenance_stats", "explain", "wait_for_maintenance",
       "set_metadata", "set_field_metadata"]),
     (store.Dataset, ["schema", "iter_batches", "to_table", "scan_plan",
-                     "explain"]),
+                     "explain", "aggregate"]),
     (store.NormalizeConfig, ()),
     (store.LoadConfig, ()),
     (compaction.CompactionPolicy, ()),
     (compaction.MaintenanceStats, ()),
     (compaction.CompactionResult, ()),
     (scan.ScanPlan, ["fragments", "execute", "explain"]),
+    (aggregate.AggregatePlan, ["execute", "report"]),
     (scan.ScanCounters, ()),
     (scan.ScanReport, ()),
     (scan.DeltaOverlay, ()),

@@ -11,6 +11,7 @@ from .expressions import Expr, field
 from .fileformat import TPQReader, TPQWriter, read_table, write_table
 from .scan import (DeltaOverlay, FragmentPlan, ScanCounters, ScanPlan,
                    ScanReport)
+from .aggregate import AggregatePlan
 from .compaction import CompactionPolicy, CompactionResult, MaintenanceStats
 from .transactions import DeltaEntry, Manifest
 from .store import Dataset, LoadConfig, NormalizeConfig, ParquetDB
@@ -19,7 +20,8 @@ __all__ = [
     "DType", "Field", "ID_COLUMN", "Schema", "Column", "Table",
     "concat_tables", "Expr", "field", "TPQReader", "TPQWriter",
     "read_table", "write_table", "DeltaOverlay", "FragmentPlan",
-    "ScanCounters", "ScanPlan", "ScanReport", "CompactionPolicy",
-    "CompactionResult", "MaintenanceStats", "DeltaEntry", "Manifest",
-    "Dataset", "LoadConfig", "NormalizeConfig", "ParquetDB",
+    "ScanCounters", "ScanPlan", "ScanReport", "AggregatePlan",
+    "CompactionPolicy", "CompactionResult", "MaintenanceStats",
+    "DeltaEntry", "Manifest", "Dataset", "LoadConfig", "NormalizeConfig",
+    "ParquetDB",
 ]

@@ -47,6 +47,15 @@ class DecodeBackend:
         """Boolean mask for ``lo <= values <= hi`` (fused on device backends)."""
         return (values >= lo) & (values <= hi)
 
+    def minmax(self, values: np.ndarray):
+        """(min, max) of a non-empty 1-D numeric array.
+
+        The aggregate layer's partial-row-group reduction; the jax backend
+        routes it through the Pallas ``page_minmax`` kernel when the dtype
+        is exactly representable in 32-bit device lanes.
+        """
+        return values.min(), values.max()
+
 
 class JaxDecodeBackend(DecodeBackend):
     """Routes safe pages through the Pallas decode kernels.
@@ -147,6 +156,24 @@ class JaxDecodeBackend(DecodeBackend):
         mask, _ = self._ops.filter_range(jnp.asarray(values), lo, hi,
                                          interpret=self._interpret)
         return np.asarray(mask)
+
+    # min/max are pure comparisons — no arithmetic — so the only gate is
+    # that jnp.asarray must not truncate the values: <=32-bit ints and
+    # float32 round-trip exactly in x64-disabled mode, wider dtypes fall
+    # back to the numpy reference
+    _MINMAX_SAFE = frozenset(["i1", "i2", "i4", "u1", "u2", "u4", "f4"])
+
+    def minmax(self, values: np.ndarray):
+        dt = values.dtype
+        if dt.kind + str(dt.itemsize) not in self._MINMAX_SAFE \
+                or len(values) == 0:
+            return super().minmax(values)
+        import jax.numpy as jnp
+        page = min(len(values), 4096)
+        mins, maxs = self._ops.page_minmax(jnp.asarray(values), page,
+                                           interpret=self._interpret)
+        return (np.asarray(mins).min().item(),
+                np.asarray(maxs).max().item())
 
 
 _jax_probe: Optional[bool] = None

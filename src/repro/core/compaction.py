@@ -36,7 +36,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from .fileformat import DEFAULT_ROW_GROUP_ROWS, TPQReader
-from .scan import DeltaOverlay, ScanPlan
+from .scan import DeltaOverlay, ScanPlan, resolve_num_threads, scan_pool
 from .schema import ID_COLUMN, Schema
 from .table import Table, concat_tables
 from .transactions import DELTA_TOMBSTONE, DatasetDir, Manifest
@@ -67,6 +67,11 @@ class CompactionPolicy:
     min_row_group_fill: float = 0.0  # mean rows-per-row-group / target
     #                                  below this triggers; 0 disables
     target_rows_per_group: int = 131_072
+    num_threads: Optional[int] = None
+    # workers for the affected-file merge scan and the rewrite, on the
+    # shared scan pool (None = os.cpu_count(), 1 = serial) — same knob and
+    # semantics as LoadConfig.num_threads
+    use_threads: bool = True
 
 
 @dataclasses.dataclass
@@ -233,9 +238,11 @@ def compact_locked(dirobj: DatasetDir, man: Manifest, schema: Schema,
     # Merged view of the affected region only: the overlay substitutes
     # upserts / drops tombstones while streaming; every shadowed base row
     # lives in an affected file (range check is conservative-inclusive),
-    # so the subset scan observes the complete delta effect.
+    # so the subset scan observes the complete delta effect.  The scan and
+    # the rewrite below both run on the shared morsel pool
+    # (policy.num_threads), so compaction cost also scales down with cores.
     plan = ScanPlan(merge, reader_of, schema, deltas=man.deltas,
-                    overlay=overlay)
+                    overlay=overlay, cfg=policy)
     parts = list(plan.execute())
     keep = [fn for fn in man.files if fn not in set(merge)]
     new_files: List[str] = []
@@ -255,13 +262,31 @@ def compact_locked(dirobj: DatasetDir, man: Manifest, schema: Schema,
         cuts = np.unique(np.searchsorted(ids[order], cut_ids))
         bounds = [0] + [int(c) for c in cuts if 0 < c < merged.num_rows] \
             + [merged.num_rows]
+        # name files serially (new_file_name mutates the manifest), write
+        # them in parallel — outputs are disjoint paths, and a crash mid-
+        # write only leaves uncommitted files for the next open's GC
+        pieces: List[tuple] = []
         for seg_lo, seg_hi in zip(bounds, bounds[1:]):
             for s in range(seg_lo, seg_hi, step):
                 piece = merged.slice(s, min(s + step, seg_hi))
                 nf = dirobj.new_file_name(man)
-                write_file(dirobj.file_path(nf), piece)
+                pieces.append((nf, piece))
                 new_files.append(nf)
                 rows_written += piece.num_rows
+        # write fan-out only on an explicit thread count: encoding under
+        # auto mode is usually GIL-bound (same reasoning as the scan's
+        # profitability gate, which the merge ScanPlan above applies)
+        nthreads = resolve_num_threads(policy) \
+            if policy.num_threads is not None else 1
+        if nthreads > 1 and len(pieces) > 1:
+            futs = [scan_pool(nthreads).submit(
+                write_file, dirobj.file_path(nf), piece)
+                for nf, piece in pieces]
+            for f in futs:
+                f.result()  # re-raise the first failure with its traceback
+        else:
+            for nf, piece in pieces:
+                write_file(dirobj.file_path(nf), piece)
     result.dropped_files = merge + [d.name for d in man.deltas]
     man.files = _sorted_by_min_id(keep + new_files, reader_of)
     man.deltas = []

@@ -40,6 +40,21 @@ class Expr:
     def prune(self, stats: StatsMap) -> bool:  # may-match?
         raise NotImplementedError
 
+    def all_match(self, stats: StatsMap) -> bool:
+        """True only when statistics prove EVERY row in the chunk matches.
+
+        The dual of :meth:`prune` (which proves *no* row matches):
+        together they classify a chunk as fully-covered / fully-pruned /
+        partial, which is what lets ``ParquetDB.aggregate`` answer a
+        predicate-filtered aggregate from footer statistics without
+        decoding a page.  Conservative: False means "must decode", so a
+        subclass that cannot decide simply inherits this default.  Null
+        semantics follow :meth:`evaluate` (null rows match no comparison),
+        hence comparisons require ``null_count == 0``; NaN rows are
+        invisible to min/max, hence ordering ops require ``nan_count == 0``.
+        """
+        return False
+
     def columns(self) -> List[str]:
         raise NotImplementedError
 
@@ -140,6 +155,39 @@ class Comparison(Expr):
             return True
         return True
 
+    def all_match(self, stats: StatsMap) -> bool:
+        if isinstance(self.value, FieldRef):
+            return False  # column-vs-column: stats cannot decide
+        st = stats.get(self.name)
+        if st is None:
+            return False
+        if st.num_values == 0:
+            return True  # vacuous: an empty chunk has no non-matching row
+        if st.null_count or st.min is None:
+            return False  # null rows never match a comparison
+        v, lo, hi = self.value, st.min, st.max
+        try:
+            if self.op == "!=":
+                # NaN rows DO match "!=" — only equality to v must be
+                # excluded, which may_contain can refute via min/max or
+                # the bloom fingerprint
+                return not st.may_contain(v)
+            if st.nan_count:
+                return False  # NaN matches no ordering op / equality
+            if self.op == "==":
+                return bool(lo == hi == v)
+            if self.op == "<":
+                return bool(hi < v)
+            if self.op == "<=":
+                return bool(hi <= v)
+            if self.op == ">":
+                return bool(lo > v)
+            if self.op == ">=":
+                return bool(lo >= v)
+        except TypeError:
+            return False
+        return False
+
     def columns(self) -> List[str]:
         cols = [self.name]
         if isinstance(self.value, FieldRef):
@@ -199,6 +247,21 @@ class IsIn(Expr):
             return True
         return any(st.may_contain(v) for v in self.values)
 
+    def all_match(self, stats: StatsMap) -> bool:
+        st = stats.get(self.name)
+        if st is None:
+            return False
+        if st.num_values == 0:
+            return True
+        if st.null_count or st.nan_count or st.min is None:
+            return False
+        # decidable only for a constant chunk whose single value is listed
+        try:
+            return bool(st.min == st.max and
+                        any(st.min == v for v in self.values))
+        except TypeError:
+            return False
+
     def columns(self):
         return [self.name]
 
@@ -224,6 +287,14 @@ class IsNull(Expr):
         if self._negated:  # is_valid
             return st.null_count < st.num_values
         return st.null_count > 0
+
+    def all_match(self, stats: StatsMap) -> bool:
+        st = stats.get(self.name)
+        if st is None:
+            return False
+        if self._negated:  # is_valid: every row non-null
+            return st.null_count == 0
+        return st.null_count == st.num_values
 
     def columns(self):
         return [self.name]
@@ -257,6 +328,12 @@ class IsNaN(Expr):
         st = stats.get(self.name)
         return True if st is None else st.nan_count > 0
 
+    def all_match(self, stats: StatsMap) -> bool:
+        st = stats.get(self.name)
+        if st is None:
+            return False
+        return st.null_count == 0 and st.nan_count == st.num_values
+
     def columns(self):
         return [self.name]
 
@@ -285,6 +362,9 @@ class And(Expr):
 
     def prune(self, stats):
         return self.a.prune(stats) and self.b.prune(stats)
+
+    def all_match(self, stats: StatsMap) -> bool:
+        return self.a.all_match(stats) and self.b.all_match(stats)
 
     def columns(self):
         return self.a.columns() + self.b.columns()
@@ -316,6 +396,11 @@ class Or(Expr):
     def prune(self, stats):
         return self.a.prune(stats) or self.b.prune(stats)
 
+    def all_match(self, stats: StatsMap) -> bool:
+        # sufficient, not necessary (a/b may cover disjoint halves) — but
+        # False only ever costs a decode, never correctness
+        return self.a.all_match(stats) or self.b.all_match(stats)
+
     def columns(self):
         return self.a.columns() + self.b.columns()
 
@@ -339,6 +424,15 @@ class Not(Expr):
         # Expr.negate); unsupported shapes stay conservative
         neg = self.a.negate()
         return True if neg is None else neg.prune(stats)
+
+    def all_match(self, stats: StatsMap) -> bool:
+        # ~a matches everything iff a matches nothing, which is exactly
+        # what a.prune refuting the chunk proves (evaluate's null/NaN
+        # semantics make ~ a plain mask complement, so no extra terms)
+        if not self.a.prune(stats):
+            return True
+        neg = self.a.negate()
+        return neg.all_match(stats) if neg is not None else False
 
     def columns(self):
         return self.a.columns()

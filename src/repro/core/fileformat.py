@@ -272,6 +272,28 @@ class TPQReader:
         self._rg_stats: List[Optional[Dict[str, ColumnStats]]] = \
             [None] * len(self.row_groups)
 
+    def dup(self) -> "TPQReader":
+        """Per-thread handle over the same file mapping.
+
+        Shares the mmap/buffer and the parsed footer (all read-only after
+        construction) but gets private stats-memo slots, so scan workers on
+        different threads never write the same memo cell.  Costs no I/O and
+        no footer re-parse — this is what the per-thread reader cache in
+        ``store.py`` hands to morsel workers.
+        """
+        other = object.__new__(TPQReader)
+        other.path = self.path
+        other._mm = self._mm          # mapping outlives both handles
+        other._buf = self._buf
+        other.footer = self.footer
+        other.schema = self.schema
+        other.file_kind = self.file_kind
+        other.num_rows = self.num_rows
+        other.row_groups = self.row_groups
+        other._file_stats = None
+        other._rg_stats = [None] * len(self.row_groups)
+        return other
+
     # -- stats access ------------------------------------------------------------
     # Everything here is served from the (already-parsed) footer: the scan
     # planner prunes fragments and row groups without touching a data page.
@@ -630,6 +652,27 @@ def _page_stored_bytes(page: dict) -> int:
     if "child" in page:
         t += _page_stored_bytes(page["child"])
     return t
+
+
+def page_codec_split(page: dict) -> tuple:
+    """(stored_bytes, codec_compressed_bytes) for one column page.
+
+    Footer-only.  The scan planner's auto-threading heuristic uses the
+    ratio: decompression releases the GIL, so pages that are mostly
+    codec-compressed parallelize across morsel workers, while raw/
+    entropy-coded pages decode under the GIL and do not.
+    """
+    stored = compressed = 0
+    for k in ("validity", "values", "lengths", "blob"):
+        if k in page:
+            stored += page[k]["len"]
+            if page[k].get("codec", enc.CODEC_NONE) != enc.CODEC_NONE:
+                compressed += page[k]["len"]
+    if "child" in page:
+        s, c = page_codec_split(page["child"])
+        stored += s
+        compressed += c
+    return stored, compressed
 
 
 def _concat_same_schema(parts: List[Table]) -> Table:

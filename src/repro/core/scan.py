@@ -25,9 +25,23 @@ Every stage records counters (:class:`ScanCounters`); ``ScanPlan.explain``
 returns them as a :class:`ScanReport` so pruning decisions are observable
 and testable — ``db.explain(filters=...)`` from user code.
 
-Execution reuses the threaded readahead of the original read path
-(:func:`prefetch`): fragments decode on a background thread while the
-consumer drains already-decoded tables.
+**Parallel execution.**  Surviving fragments are split into *morsels* —
+contiguous runs of row groups capped at ``MORSEL_ROWS`` rows — and decoded
+on a shared, process-wide :class:`~concurrent.futures.ThreadPoolExecutor`
+(work-stealing: idle workers pull the next morsel from the shared queue).
+The pool is sized from ``LoadConfig.num_threads`` (default
+``os.cpu_count()``); each worker obtains its own per-thread ``TPQReader``
+handle over the shared file mapping (see ``store._get_reader``), decodes
+its morsel into Tables, and records work into a **morsel-local**
+:class:`ScanCounters`.  The consumer merges results with an
+order-preserving bounded merge: morsel outputs are yielded strictly in
+plan order (so ``read()`` output is byte-identical to the serial scan,
+order included) and at most ``num_threads + fragment_readahead`` morsels
+are in flight, bounding memory.  Counters are merged single-threaded in
+the consumer (:meth:`ScanCounters.merge_from`), so no increment is ever
+lost to a data race.  ``num_threads=1`` (or ``use_threads=False``) falls
+back to the serial path with the classic readahead thread
+(:func:`prefetch`).
 
 **Merge-on-read deltas.**  A manifest may carry a chain of delta files
 (:class:`repro.core.transactions.DeltaEntry`) — *upsert* files holding
@@ -50,22 +64,75 @@ so a fragment shadowed only by deletes keeps its pushdown.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import itertools
+import os
 import queue
 import threading
+from concurrent.futures import ThreadPoolExecutor
 from typing import (Callable, Dict, Generator, Iterable, List, Optional,
-                    Sequence)
+                    Sequence, Tuple)
 
 import numpy as np
 
 from .expressions import Expr
-from .fileformat import TPQReader
+from .fileformat import TPQReader, page_codec_split
 from .schema import ID_COLUMN, Schema
 from .table import Table, concat_tables
 from .transactions import DELTA_TOMBSTONE, DeltaEntry
 
 __all__ = ["ScanCounters", "FragmentPlan", "ScanReport", "ScanPlan",
-           "DeltaOverlay", "file_may_match", "prefetch"]
+           "DeltaOverlay", "file_may_match", "prefetch", "scan_pool",
+           "resolve_num_threads", "MORSEL_ROWS"]
+
+# Target rows per morsel: small enough that a handful of fragments yields
+# enough parallelism, large enough that per-task overhead (submit, counter
+# merge) stays invisible next to decode cost.  A row group larger than the
+# target is one morsel (morsels never split a row group: page pruning,
+# two-phase decode and selection vectors all operate per row group).
+MORSEL_ROWS = 65_536
+
+_POOL_LOCK = threading.Lock()
+_POOL: Optional[ThreadPoolExecutor] = None
+_POOL_WORKERS = 0
+
+
+def resolve_num_threads(cfg) -> int:
+    """Worker count for a scan config (duck-typed, like the readahead knob).
+
+    ``use_threads=False`` forces 1; ``num_threads=None`` (the default)
+    means ``os.cpu_count()``.  Always >= 1.
+    """
+    if not getattr(cfg, "use_threads", True):
+        return 1
+    nt = getattr(cfg, "num_threads", None)
+    if nt is None:
+        nt = os.cpu_count() or 1
+    return max(1, int(nt))
+
+
+def scan_pool(num_threads: int) -> ThreadPoolExecutor:
+    """The shared scan/compaction worker pool, grown to >= ``num_threads``.
+
+    One process-wide pool serves every concurrent scan (morsels from
+    different scans interleave on the same workers — work stealing across
+    queries, not just within one).  Workers never submit work back to the
+    pool, so sharing cannot deadlock.  The pool only ever grows: when a
+    larger size is requested a bigger executor replaces the global slot,
+    but the old one is **not** shut down — an in-flight scan that cached
+    it keeps submitting refill morsels to it until that scan completes
+    (shutting it down would make those submits raise).  Abandoned
+    executors idle until interpreter exit; growth is monotonic, so at
+    most a handful ever exist.
+    """
+    global _POOL, _POOL_WORKERS
+    with _POOL_LOCK:
+        if _POOL is None or _POOL_WORKERS < num_threads:
+            _POOL = ThreadPoolExecutor(max_workers=num_threads,
+                                       thread_name_prefix="tpq-scan")
+            _POOL_WORKERS = num_threads
+    return _POOL
 
 
 @dataclasses.dataclass
@@ -103,9 +170,25 @@ class ScanCounters:
     delta_tombstone_rows: int = 0   # ids staged in tombstone files
     delta_rows_applied: int = 0     # base rows substituted with upsert rows
     rows_shadowed: int = 0          # base rows dropped by tombstones
+    # aggregate pushdown (AggregatePlan): row groups whose contribution was
+    # answered from footer statistics alone, and the stored bytes of their
+    # read set that were therefore never decoded
+    groups_answered_by_stats: int = 0
+    bytes_skipped_agg: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+    def merge_from(self, other: "ScanCounters") -> None:
+        """Fold another counter set into this one (all fields are sums).
+
+        This is the single-threaded merge point of the parallel scan:
+        every worker increments a morsel-local ``ScanCounters`` and the
+        consumer merges, so no ``+=`` ever races another thread.
+        """
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
 
 
 @dataclasses.dataclass
@@ -164,6 +247,11 @@ class ScanReport:
                 d += (f"; {c.delta_rows_applied} applied, "
                       f"{c.rows_shadowed} rows dropped")
             lines.append(d)
+        if c.groups_answered_by_stats or c.bytes_skipped_agg:
+            lines.append(
+                f"  aggregate:  {c.groups_answered_by_stats} row groups "
+                f"answered from footer stats, {c.bytes_skipped_agg} stored "
+                f"bytes never decoded")
         if self.executed:
             lines.append(
                 f"  executed:   {c.pages_scanned} pages decoded "
@@ -319,8 +407,9 @@ class ScanPlan:
     schema:      unified dataset schema; files may each hold a subset.
     columns:     output column names (already resolved), None = all.
     filter_expr: AND-combined predicate, or None.
-    cfg:         duck-typed config — ``use_threads`` / ``fragment_readahead``
-                 (both ``LoadConfig`` and ``NormalizeConfig`` qualify).
+    cfg:         duck-typed config — ``use_threads`` / ``num_threads`` /
+                 ``fragment_readahead`` (both ``LoadConfig`` and
+                 ``NormalizeConfig`` qualify).
     prune:       set False to disable all stats pruning (oracle/testing).
     deltas:      merge-on-read chain (manifest ``DeltaEntry`` list, commit
                  order) to overlay on the base files; empty = plain scan.
@@ -328,6 +417,11 @@ class ScanPlan:
                  to reuse (compaction resolves the chain once for
                  affected-file selection and passes it through); its read
                  schema must cover this plan's read set.
+    restrict:    optional ``{file: row-group indices}`` cap — planning
+                 intersects its stats-selected row groups with this map
+                 (files absent from the map scan nothing).  The aggregate
+                 layer uses it to decode only the *partial* row groups
+                 that footer statistics could not answer.
     """
 
     def __init__(self, files: Sequence[str],
@@ -337,7 +431,8 @@ class ScanPlan:
                  filter_expr: Optional[Expr] = None,
                  cfg=None, prune: bool = True,
                  deltas: Sequence[DeltaEntry] = (),
-                 overlay: Optional[DeltaOverlay] = None):
+                 overlay: Optional[DeltaOverlay] = None,
+                 restrict: Optional[Dict[str, Sequence[int]]] = None):
         self._files = list(files)
         self._reader_of = reader_of
         self._schema = schema
@@ -346,6 +441,13 @@ class ScanPlan:
         self._deltas = list(deltas)
         self._use_threads = bool(getattr(cfg, "use_threads", True))
         self._readahead = int(getattr(cfg, "fragment_readahead", 4))
+        self._num_threads = resolve_num_threads(cfg)
+        # num_threads=None is "auto": size from cpu_count but only engage
+        # the pool when the decode work can actually overlap (see
+        # _parallel_profitable); an explicit thread count always engages.
+        self._threads_auto = getattr(cfg, "num_threads", None) is None
+        self._restrict = ({fn: set(rgs) for fn, rgs in restrict.items()}
+                          if restrict is not None else None)
         out_names = list(columns) if columns is not None else schema.names
         self._out_schema = schema.select(out_names)
         self._filter_cols = [c for c in dict.fromkeys(
@@ -414,6 +516,9 @@ class ScanPlan:
                 else:
                     selected = [i for i in range(n)
                                 if self._expr.prune(rd.row_group_stats(i))]
+            if self._restrict is not None:
+                allowed = self._restrict.get(fn, set())
+                selected = [i for i in selected if i in allowed]
             c.row_groups_skipped += n - len(selected)
             if selected:
                 c.files_scanned += 1
@@ -428,37 +533,139 @@ class ScanPlan:
     def execute(self, batch_size: Optional[int] = None,
                 counters: Optional[ScanCounters] = None
                 ) -> Generator[Table, None, None]:
-        """Yield result tables; decoding runs on a readahead thread.
+        """Yield result tables, decoding morsels on the shared worker pool.
 
-        Counters accumulate into ``counters`` (or a fresh copy of the plan
-        counters, exposed as ``self.last_counters``).
+        With ``num_threads > 1`` (the default is ``os.cpu_count()``) the
+        surviving row groups are split into morsels and decoded in
+        parallel; output order and content are byte-identical to the
+        serial scan (order-preserving merge).  Counters accumulate into
+        ``counters`` (or a fresh copy of the plan counters, exposed as
+        ``self.last_counters``) — per-morsel counters are merged in the
+        consumer, never incremented across threads.
         """
         self._build()
         if counters is None:
             counters = dataclasses.replace(self._plan_counters)
         self.last_counters = counters
 
-        def pieces() -> Generator[Table, None, None]:
-            for frag in self._fragments:
-                if frag.row_groups:
-                    yield from self._fragment_tables(frag, counters)
-
-        stream = (prefetch(pieces(), self._readahead)
-                  if self._use_threads else pieces())
+        morsels = self._morsels()
+        parallel = self._num_threads > 1 and len(morsels) > 1 \
+            and (not self._threads_auto or self._parallel_profitable())
+        if parallel:
+            stream = self._execute_parallel(morsels, counters)
+        else:
+            def pieces() -> Generator[Table, None, None]:
+                for frag, rgs in morsels:
+                    yield from self._fragment_tables(frag, counters,
+                                                     row_groups=rgs)
+            stream = (prefetch(pieces(), self._readahead)
+                      if self._use_threads else pieces())
         if batch_size is None:
             yield from stream
         else:
             yield from rechunk(stream, batch_size)
 
-    def _fragment_tables(self, frag: FragmentPlan, counters: ScanCounters
+    # ------------------------------------------------------- morsel dispatch
+    def _morsels(self) -> List[Tuple[FragmentPlan, List[int]]]:
+        """Split surviving row groups into scan-ordered morsels.
+
+        A morsel is a contiguous run of row groups within one fragment,
+        capped at ``MORSEL_ROWS`` rows — the unit of work the shared pool
+        schedules.  Never crosses a fragment boundary and never splits a
+        row group.
+        """
+        out: List[Tuple[FragmentPlan, List[int]]] = []
+        for frag in self._fragments:
+            if not frag.row_groups:
+                continue
+            rd = self._reader_of(frag.file)
+            run: List[int] = []
+            rows = 0
+            for i in frag.row_groups:
+                run.append(i)
+                rows += rd.row_group_num_rows(i)
+                if rows >= MORSEL_ROWS:
+                    out.append((frag, run))
+                    run, rows = [], 0
+            if run:
+                out.append((frag, run))
+        return out
+
+    def _parallel_profitable(self) -> bool:
+        """Footer-only heuristic for auto mode: will threads overlap?
+
+        CPython morsel workers only run concurrently while the GIL is
+        released, which on the decode path means codec decompression
+        (zlib/&c release it; raw and entropy-coded buffers decode under
+        the GIL, where extra threads just convoy).  Sample the first
+        surviving row group's read set: go parallel when at least half of
+        its stored bytes are codec-compressed.  An explicit
+        ``num_threads`` bypasses this entirely.
+        """
+        for frag in self._fragments:
+            if not frag.row_groups:
+                continue
+            rd = self._reader_of(frag.file)
+            have = set(rd.schema.names)
+            rg = rd.row_groups[frag.row_groups[0]]
+            stored = compressed = 0
+            for name in self._read_schema.names:
+                if name not in have:
+                    continue
+                for p in rg["columns"][name]["pages"]:
+                    s, c = page_codec_split(p)
+                    stored += s
+                    compressed += c
+            return stored > 0 and compressed * 2 >= stored
+        return False
+
+    def _execute_parallel(self, morsels, counters: ScanCounters
+                          ) -> Generator[Table, None, None]:
+        """Decode morsels on the shared pool; order-preserving bounded merge.
+
+        Up to ``num_threads + fragment_readahead`` morsels are in flight;
+        completed results are consumed strictly in submission (= plan)
+        order, so the output stream is identical to the serial scan.  A
+        worker exception propagates to the caller with its original
+        traceback (``Future.result`` re-raises), and the ``finally`` block
+        cancels not-yet-started morsels so an abandoned scan leaves no
+        queued work behind.
+        """
+        pool = scan_pool(self._num_threads)
+        max_inflight = self._num_threads + max(self._readahead, 1)
+
+        def run_morsel(frag: FragmentPlan, rgs: List[int]):
+            local = ScanCounters()  # morsel-local: no cross-thread `+=`
+            tables = list(self._fragment_tables(frag, local, row_groups=rgs))
+            return tables, local
+
+        it = iter(morsels)
+        inflight: "collections.deque" = collections.deque(
+            pool.submit(run_morsel, frag, rgs)
+            for frag, rgs in itertools.islice(it, max_inflight))
+        try:
+            while inflight:
+                tables, local = inflight.popleft().result()
+                counters.merge_from(local)  # single-threaded merge point
+                nxt = next(it, None)
+                if nxt is not None:
+                    inflight.append(pool.submit(run_morsel, *nxt))
+                yield from tables
+        finally:
+            for fut in inflight:
+                fut.cancel()
+
+    def _fragment_tables(self, frag: FragmentPlan, counters: ScanCounters,
+                         row_groups: Optional[List[int]] = None
                          ) -> Generator[Table, None, None]:
         rd = self._reader_of(frag.file)
         have = set(rd.schema.names)
         cols_here = [n for n in self._read_schema.names if n in have]
         pushdown = self._expr if frag.pushdown else None
         ov = self._overlay()
+        rgs = frag.row_groups if row_groups is None else row_groups
         for t in rd.iter_row_group_tables(cols_here, pushdown,
-                                          row_groups=frag.row_groups,
+                                          row_groups=rgs,
                                           counters=counters):
             t = t.align_to_schema(self._read_schema)
             if ov is not None and ov.has_work:
@@ -549,24 +756,56 @@ def rechunk(stream: Iterable[Table], batch_size: int
 
 
 def prefetch(gen: Iterable[Table], depth: int) -> Generator[Table, None, None]:
-    """Background-thread readahead (LoadConfig.fragment_readahead)."""
+    """Background-thread readahead (LoadConfig.fragment_readahead).
+
+    Failure semantics (regression-tested in ``tests/test_parallel_scan.py``):
+
+    - a producer exception propagates to the consumer **with its original
+      traceback** (the exception object is re-raised as captured, so the
+      failing frame inside ``gen`` stays visible);
+    - the worker can never be left blocked on a full queue: every ``put``
+      polls a stop event, and the consumer's ``finally`` (normal exit,
+      error, or an early ``close()`` of the generator) sets the event,
+      drains the queue, and joins the thread.
+    """
     q: "queue.Queue" = queue.Queue(maxsize=max(depth, 1))
     DONE = object()
+    stop = threading.Event()
+
+    def offer(item) -> bool:
+        """Put, but give up promptly once the consumer is gone."""
+        while not stop.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def worker():
         try:
             for item in gen:
-                q.put(item)
-            q.put(DONE)
-        except BaseException as e:  # propagate
-            q.put(e)
+                if not offer(item):
+                    return
+            offer(DONE)
+        except BaseException as e:  # propagate WITH the worker traceback
+            offer(e)
 
-    th = threading.Thread(target=worker, daemon=True)
+    th = threading.Thread(target=worker, name="tpq-prefetch", daemon=True)
     th.start()
-    while True:
-        item = q.get()
-        if item is DONE:
-            return
-        if isinstance(item, BaseException):
-            raise item
-        yield item
+    try:
+        while True:
+            item = q.get()
+            if item is DONE:
+                return
+            if isinstance(item, BaseException):
+                raise item  # __traceback__ captured in the worker survives
+            yield item
+    finally:
+        stop.set()
+        while True:  # drain so a blocked put wakes and sees the stop flag
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        th.join(timeout=5.0)

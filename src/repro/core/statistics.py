@@ -81,6 +81,11 @@ class ColumnStats:
     min: Any = None                # min/max but matches "!=" and negations
     max: Any = None
     bloom: Optional[bytes] = None  # _BLOOM_BITS//8 bytes, or None
+    # sum over valid (non-null, non-NaN) numeric values — the footer fact
+    # that lets ParquetDB.aggregate answer sum/mean without decoding.
+    # None for non-numeric chunks and for files written before the field
+    # existed (the aggregate layer then falls back to decoding).
+    sum: Any = None
 
     # -- pruning helpers ------------------------------------------------------
     def may_contain(self, v: Any) -> bool:
@@ -136,6 +141,8 @@ class ColumnStats:
         if self.min is not None:
             d["min"] = _json_safe(self.min)
             d["max"] = _json_safe(self.max)
+        if self.sum is not None:
+            d["sum"] = _json_safe(self.sum)
         if self.bloom is not None:
             d["bloom"] = self.bloom.hex()
         return d
@@ -145,8 +152,26 @@ class ColumnStats:
         return ColumnStats(
             num_values=d.get("n", 0), null_count=d.get("nulls", 0),
             nan_count=d.get("nan", 0),
-            min=d.get("min"), max=d.get("max"),
+            min=d.get("min"), max=d.get("max"), sum=d.get("sum"),
             bloom=bytes.fromhex(d["bloom"]) if "bloom" in d else None)
+
+
+def exact_int_sum(vals: np.ndarray) -> int:
+    """Sum an integer/bool array as an exact python int (no int64 wrap).
+
+    The fast int64 reduction runs when the value bound proves it cannot
+    overflow; otherwise fall back to object-dtype accumulation, which
+    numpy performs with python ints (arbitrary precision).  Both the
+    footer ``sum`` statistic and the aggregate decode path use this, so
+    stats-answered and decoded sums agree exactly at any magnitude.
+    """
+    n = len(vals)
+    if n == 0:
+        return 0
+    bound = max(abs(int(vals.min())), abs(int(vals.max())))
+    if bound * n < 2 ** 62:
+        return int(vals.sum())
+    return int(vals.astype(object).sum())
 
 
 def _json_safe(v: Any):
@@ -232,9 +257,11 @@ def compute_stats(col: Column, with_bloom: bool = True) -> ColumnStats:
             # counted instead — "!=" and negation pruning consult nan_count
             nn = vals[~np.isnan(vals)]
             st.nan_count = int(len(vals) - len(nn))
+            st.sum = float(nn.sum()) if len(nn) else 0.0
             if len(nn):
                 st.min, st.max = float(nn.min()), float(nn.max())
         else:
+            st.sum = exact_int_sum(vals)
             st.min = _json_safe(vals.min())
             st.max = _json_safe(vals.max())
             if with_bloom:
@@ -280,6 +307,7 @@ def merge_stats(parts: List[ColumnStats]) -> ColumnStats:
     """Row-group stats from page stats (Parquet: footer aggregates pages)."""
     out = ColumnStats()
     blooms = []
+    acc_sum: Any = 0
     for p in parts:
         out.num_values += p.num_values
         out.null_count += p.null_count
@@ -287,7 +315,17 @@ def merge_stats(parts: List[ColumnStats]) -> ColumnStats:
         if p.min is not None:
             out.min = p.min if out.min is None else min(out.min, p.min)
             out.max = p.max if out.max is None else max(out.max, p.max)
+        if acc_sum is not None:
+            if p.sum is not None:
+                acc_sum = acc_sum + p.sum
+            elif p.num_values > p.null_count:
+                # a part with valid values but no recorded sum (pre-sum
+                # file, non-numeric chunk) poisons the merged sum; an
+                # all-null/empty part just contributes 0
+                acc_sum = None
         blooms.append(p.bloom)
+    out.sum = acc_sum if parts and any(p.sum is not None for p in parts) \
+        else None
     if (blooms and all(b is not None for b in blooms)
             and len({len(b) for b in blooms}) == 1):
         acc = np.zeros(len(blooms[0]), np.uint8)

@@ -40,6 +40,7 @@ from typing import Any, Dict, Generator, Iterable, List, Optional, Sequence, Uni
 import numpy as np
 
 from . import nested
+from .aggregate import AggregatePlan, AggSpec
 from .compaction import (CompactionPolicy, CompactionResult, MaintenanceStats,
                          compact_locked, gather_stats)
 from .dtypes import DType, KIND_STRING
@@ -62,8 +63,17 @@ _READER_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _READER_CACHE_MAX = 128
 _READER_CACHE_LOCK = threading.Lock()
 
+# Per-thread reader handles over the shared parse (TPQReader.dup): morsel
+# workers look up readers on every row-group decode, so the hot path must
+# not contend on _READER_CACHE_LOCK nor share stats-memo cells across
+# threads.  Entries are validated by the same (path, size, mtime) key and
+# invalidated wholesale when the eviction generation advances.
+_TL_READERS = threading.local()
+_TL_READERS_MAX = 64
+_EVICT_GEN = 0
 
-def _get_reader(path: str) -> TPQReader:
+
+def _get_shared_reader(path: str) -> TPQReader:
     st = os.stat(path)
     key = (path, st.st_size, st.st_mtime_ns)
     with _READER_CACHE_LOCK:
@@ -79,27 +89,61 @@ def _get_reader(path: str) -> TPQReader:
     return rd
 
 
+def _get_reader(path: str) -> TPQReader:
+    """This thread's handle for ``path`` (shared mmap, private stats memos).
+
+    The footer is parsed once process-wide (``_get_shared_reader``); each
+    thread then holds a lock-free ``dup``, so concurrent morsel workers
+    touch no shared mutable reader state.  The thread cache is keyed by
+    path alone — data-file names are never reused within a dataset
+    (``DatasetDir.new_file_name`` is monotonic), so a path fully
+    identifies content and the hot lookup skips ``os.stat`` entirely.
+    Opening a dataset handle or evicting readers bumps the generation,
+    which lazily flushes every thread's cache (covers the delete-and-
+    recreate-directory case, where names CAN recur).  Limitation: a
+    directory deleted and recreated by *another process* while this one
+    keeps reading is outside the snapshot-isolation contract (the
+    manifest protocol guarantees consistency only while a generation's
+    files stay on disk) — that scenario could serve a stale mapping here.
+    """
+    cache = getattr(_TL_READERS, "cache", None)
+    if cache is None or _TL_READERS.gen != _EVICT_GEN:
+        cache = _TL_READERS.cache = {}
+        _TL_READERS.gen = _EVICT_GEN
+    rd = cache.get(path)
+    if rd is None:
+        rd = cache[path] = _get_shared_reader(path).dup()
+        if len(cache) > _TL_READERS_MAX:
+            cache.pop(next(iter(cache)))
+    return rd
+
+
 def _evict_readers(paths: Iterable[str]) -> None:
     """Drop cached footers for files removed by compaction/GC.
 
     Stale keys can never serve a wrong read (lookup re-stats the path), but
     they pin dead footers in memory until LRU pressure; compaction can drop
-    a whole generation at once, so evict eagerly.
+    a whole generation at once, so evict eagerly.  Per-thread caches are
+    invalidated lazily via the generation counter (each thread clears its
+    own cache on next lookup — a thread-local cannot be cleared from here).
     """
+    global _EVICT_GEN
     drop = set(paths)
     with _READER_CACHE_LOCK:
         for key in [k for k in _READER_CACHE if k[0] in drop]:
             del _READER_CACHE[key]
+        _EVICT_GEN += 1  # under the lock: bumps must never be lost
 
 
 @dataclasses.dataclass
 class NormalizeConfig:
-    """Paper Table 10."""
+    """Paper Table 10 (+ ``num_threads``, this repo's parallel-scan knob)."""
     load_format: str = "table"
     batch_size: Optional[int] = None
     batch_readahead: int = 16
     fragment_readahead: int = 4
     use_threads: bool = True
+    num_threads: Optional[int] = None   # morsel workers; None = cpu_count()
     max_partitions: int = 1024
     max_open_files: int = 1024
     max_rows_per_file: int = 10_000
@@ -109,11 +153,18 @@ class NormalizeConfig:
 
 @dataclasses.dataclass
 class LoadConfig:
-    """Paper Table 8."""
+    """Paper Table 8 (+ ``num_threads``, this repo's parallel-scan knob).
+
+    ``num_threads`` sizes the shared morsel pool for this scan: ``None``
+    (default) means ``os.cpu_count()``, ``1`` forces the serial path, and
+    ``use_threads=False`` overrides everything back to serial.  Output is
+    byte-identical (order included) at every setting.
+    """
     batch_size: int = 131_072
     batch_readahead: int = 16
     fragment_readahead: int = 4
     use_threads: bool = True
+    num_threads: Optional[int] = None   # morsel workers; None = cpu_count()
 
 
 class Dataset:
@@ -147,6 +198,16 @@ class Dataset:
     def explain(self, execute: bool = False) -> ScanReport:
         """Pruning report for this dataset's scan (see ParquetDB.explain)."""
         return self.scan_plan().explain(execute=execute)
+
+    def aggregate(self, spec, explain: bool = False):
+        """Aggregate this dataset's (filtered) rows — see ParquetDB.aggregate.
+
+        The dataset's filter applies; its ``LoadConfig`` sizes the morsel
+        pool for whatever partial row groups need decoding.
+        """
+        plan = self._db._aggregate_plan(spec, self._filter, self._cfg)
+        values = plan.execute()
+        return (values, plan.report()) if explain else values
 
 
 class ParquetDB:
@@ -196,6 +257,12 @@ class ParquetDB:
         self._maintenance_thread: Optional[threading.Thread] = None
         self._maintenance_mutex = threading.Lock()  # single-flight guard
         self._schema_hint_cache: Optional[tuple] = None
+        self._snapshot_cache: Optional[tuple] = None
+        # a fresh handle may sit on a recreated directory whose file names
+        # collide with a previous dataset's: flush per-thread readers
+        global _EVICT_GEN
+        with _READER_CACHE_LOCK:
+            _EVICT_GEN += 1
         # startup recovery: GC files not in the committed manifest (also
         # collects old generations left behind by a prior compaction).
         # Best-effort under the writer lock: another process may be mid-
@@ -233,10 +300,35 @@ class ParquetDB:
     def _set_manifest_schema(self, man: Manifest, schema: Schema) -> None:
         man.metadata["schema"] = schema.to_dict()
 
+    def _load_snapshot(self) -> tuple:
+        """(manifest, schema) of the committed state, for READ paths.
+
+        Memoized on the manifest file's (size, mtime_ns), like
+        ``_schema_hint``: steady-state reads skip the JSON parse and the
+        schema rebuild entirely — this is what makes a footer-answered
+        ``aggregate`` a sub-millisecond call.  Callers must treat the
+        returned manifest as immutable; write paths keep loading their own
+        mutable copy via ``self._dir.load()``.
+        """
+        mpath = os.path.join(self._dir.path, "_manifest.json")
+        try:
+            st = os.stat(mpath)
+            key = (st.st_size, st.st_mtime_ns)
+        except OSError:
+            man = self._dir.load()
+            return man, self._manifest_schema(man)
+        cached = self._snapshot_cache
+        if cached is not None and cached[0] == key:
+            return cached[1], cached[2]
+        man = self._dir.load()
+        schema = self._manifest_schema(man)
+        self._snapshot_cache = (key, man, schema)
+        return man, schema
+
     @property
     def schema(self) -> Schema:
         """Unified dataset schema from the committed manifest."""
-        return self._manifest_schema(self._dir.load())
+        return self._load_snapshot()[1]
 
     @property
     def n_files(self) -> int:
@@ -483,7 +575,7 @@ class ParquetDB:
             return self._read_nested(columns, expr, rebuild_nested_from_scratch)
         names = self._resolve_columns(columns, include_cols)
         if load_format == "table":
-            if not self._dir.load().files:
+            if not self._load_snapshot()[0].files:
                 return Table.empty(self.schema.select(names))
             parts = list(self._iter_batches(names, expr, None, cfg))
             if not parts:
@@ -508,9 +600,10 @@ class ParquetDB:
         the committed snapshot.
         """
         if man is None:
-            man = self._dir.load()
-        return ScanPlan(man.files, self._reader_of,
-                        self._manifest_schema(man), columns=names,
+            man, schema = self._load_snapshot()
+        else:
+            schema = self._manifest_schema(man)
+        return ScanPlan(man.files, self._reader_of, schema, columns=names,
                         filter_expr=expr, cfg=cfg, prune=prune,
                         deltas=man.deltas)
 
@@ -534,6 +627,43 @@ class ParquetDB:
         names = self._resolve_columns(columns, include_cols)
         cfg = load_config or LoadConfig()
         return self._scan_plan(names, expr, cfg).explain(execute=execute)
+
+    # ------------------------------------------------------------------ aggregate
+    def _aggregate_plan(self, spec: AggSpec, expr: Optional[Expr],
+                        cfg) -> AggregatePlan:
+        man, schema = self._load_snapshot()
+        return AggregatePlan(man.files, self._reader_of, schema, spec,
+                             filter_expr=expr, cfg=cfg, deltas=man.deltas)
+
+    def aggregate(self, spec: AggSpec,
+                  ids: Optional[Sequence[int]] = None,
+                  filters: Optional[Sequence[Expr]] = None,
+                  load_config: Optional[LoadConfig] = None,
+                  explain: bool = False):
+        """Aggregate (optionally filtered) rows without materializing them.
+
+        ``spec`` maps a column name — or ``"*"`` for a row count — to one
+        aggregate op or a list of ops from ``("count", "min", "max",
+        "sum", "mean")``; the result is ``{column: {op: value}}``::
+
+            >>> db.aggregate({"*": "count", "x": ["min", "max", "mean"]},
+            ...              filters=[field("y") > 0])
+
+        Row groups whose footer statistics *decide* the filter (and carry
+        the needed min/max/sum facts) are answered **without decoding a
+        page**; only the undecidable remainder runs through the vectorized
+        scan (morsel-parallel, merge-on-read deltas folded in exactly).
+        Semantics: ``count(col)`` counts non-null values, ``count(*)``
+        counts rows, ``min``/``max``/``sum``/``mean`` reduce over valid
+        (non-null, non-NaN) values and return ``None`` when no such value
+        exists.  With ``explain=True`` returns ``(values, report)`` where
+        the report's counters include ``groups_answered_by_stats`` and
+        ``bytes_skipped_agg``.
+        """
+        expr = self._build_filter(ids, filters)
+        plan = self._aggregate_plan(spec, expr, load_config or LoadConfig())
+        values = plan.execute()
+        return (values, plan.report()) if explain else values
 
     def _iter_batches(self, columns, expr: Optional[Expr],
                       batch_size: Optional[int], cfg: LoadConfig

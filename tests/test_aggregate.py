@@ -1,0 +1,346 @@
+"""Aggregate pushdown: footer-answered aggregates vs. decode-path oracles.
+
+Every aggregate here is checked against a numpy reduction over the fully
+materialized (filtered) table — the two paths must agree exactly — and the
+stats-coverage claims are asserted through the report counters
+(``groups_answered_by_stats`` > 0, ``bytes_decoded`` == 0 for fully
+covered queries).
+"""
+import json
+import os
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import LoadConfig, ParquetDB, field
+from repro.core.backend import active_backend, jax_available, set_backend
+from repro.core.expressions import IsNull
+from repro.core.statistics import ColumnStats, merge_stats
+
+
+@pytest.fixture()
+def db(tmp_path):
+    """2 files x 4 row groups of 250 rows; x sorted, y cyclic float with
+    NaN, s strings, opt nullable."""
+    db = ParquetDB(os.path.join(str(tmp_path), "agg"),
+                   row_group_rows=250, page_rows=125)
+    for f in range(2):
+        lo = f * 1000
+        db.create([{"x": lo + i,
+                    "y": float("nan") if (lo + i) % 10 == 0
+                    else float((lo + i) % 7),
+                    "s": f"k{(lo + i) % 13:02d}",
+                    "opt": None if (lo + i) % 4 == 0 else (lo + i) % 50}
+                   for i in range(1000)])
+    return db
+
+
+def _oracle(db, filters=None):
+    t = db.read(filters=filters)
+    x = np.array(t["x"].to_pylist(), dtype=np.float64)
+    y = np.array(t["y"].to_pylist(), dtype=np.float64)
+    opt = t["opt"].to_pylist()
+    opt_v = np.array([v for v in opt if v is not None], dtype=np.float64)
+    s = t["s"].to_pylist()
+    return {
+        "rows": t.num_rows,
+        "x_min": int(x.min()) if len(x) else None,
+        "x_max": int(x.max()) if len(x) else None,
+        "x_sum": int(x.sum()) if len(x) else None,
+        "y_count": len(y),
+        "y_sum": float(np.nansum(y)) if np.isfinite(np.nansum(y)) else None,
+        "y_vcount": int((~np.isnan(y)).sum()),
+        "opt_count": len(opt_v),
+        "opt_sum": int(opt_v.sum()) if len(opt_v) else None,
+        "s_min": min(s) if s else None,
+        "s_max": max(s) if s else None,
+    }
+
+
+class TestUnfiltered:
+    def test_full_cover_answers_from_footers(self, db):
+        want = _oracle(db)
+        got, rep = db.aggregate(
+            {"*": "count", "x": ["min", "max", "sum", "mean"],
+             "opt": ["count", "sum"], "s": ["min", "max"]}, explain=True)
+        assert got["*"]["count"] == want["rows"]
+        assert got["x"]["min"] == want["x_min"]
+        assert got["x"]["max"] == want["x_max"]
+        assert got["x"]["sum"] == want["x_sum"]
+        assert got["x"]["mean"] == want["x_sum"] / want["rows"]
+        assert got["opt"]["count"] == want["opt_count"]
+        assert got["opt"]["sum"] == want["opt_sum"]
+        assert got["s"]["min"] == want["s_min"]
+        assert got["s"]["max"] == want["s_max"]
+        # every group answered from stats, nothing decoded
+        assert rep.counters.groups_answered_by_stats == 8
+        assert rep.counters.bytes_decoded == 0
+        assert rep.counters.pages_scanned == 0
+        assert rep.counters.bytes_skipped_agg > 0
+
+    def test_nan_semantics_match_decode_path(self, db):
+        want = _oracle(db)
+        got = db.aggregate({"y": ["count", "sum", "mean"]})
+        # count includes NaN rows (they are values), sum/mean exclude them
+        assert got["y"]["count"] == want["y_count"]
+        assert got["y"]["sum"] == pytest.approx(want["y_sum"])
+        assert got["y"]["mean"] == pytest.approx(
+            want["y_sum"] / want["y_vcount"])
+
+
+class TestFiltered:
+    @pytest.mark.parametrize("filters", [
+        [field("x") >= 500],                       # aligned on group bounds
+        [field("x") > 333],                        # mid-group boundary
+        [(field("x") >= 700) & (field("x") < 1_430)],
+        [field("s") == "k05"],                     # never stats-decidable
+        [field("x") != 777],
+        [IsNull("opt")],
+        [field("x") < -5],                         # empty result
+    ])
+    def test_matches_materialized_oracle(self, db, filters):
+        want = _oracle(db, filters=filters)
+        got = db.aggregate({"*": "count",
+                            "x": ["min", "max", "sum"],
+                            "opt": ["count", "sum"]}, filters=filters)
+        assert got["*"]["count"] == want["rows"]
+        assert got["x"]["min"] == want["x_min"]
+        assert got["x"]["max"] == want["x_max"]
+        assert got["x"]["sum"] == want["x_sum"]
+        assert got["opt"]["count"] == want["opt_count"]
+        assert got["opt"]["sum"] == want["opt_sum"]
+
+    def test_classification_three_ways(self, db):
+        # x >= 500: groups [0,250) [250,500) pruned, [500,750)... covered
+        got, rep = db.aggregate({"*": "count", "x": "sum"},
+                                filters=[field("x") >= 500], explain=True)
+        c = rep.counters
+        assert got["*"]["count"] == 1500
+        assert c.groups_answered_by_stats == 6   # fully covered
+        assert c.pages_scanned == 0              # pruned ones decode nothing
+        # mid-group boundary: exactly one partial group decodes
+        got, rep = db.aggregate({"*": "count", "x": "sum"},
+                                filters=[field("x") >= 510], explain=True)
+        c = rep.counters
+        assert got["*"]["count"] == 1490
+        assert c.groups_answered_by_stats == 5
+        assert c.rows_scanned > 0                # the boundary group decoded
+        assert got["x"]["sum"] == sum(range(510, 2000))
+
+    def test_parallel_partial_path_matches_serial(self, db):
+        filt = [field("x") > 111]
+        a = db.aggregate({"*": "count", "x": ["sum", "min", "max"]},
+                         filters=filt,
+                         load_config=LoadConfig(num_threads=1))
+        b = db.aggregate({"*": "count", "x": ["sum", "min", "max"]},
+                         filters=filt,
+                         load_config=LoadConfig(num_threads=4))
+        assert a == b
+
+
+class TestDeltasFoldExactly:
+    def test_update_delete_then_aggregate(self, db):
+        db.update([{"id": i, "x": -(i + 1)} for i in range(0, 2000, 9)])
+        db.delete(ids=list(range(3, 2000, 17)))
+        want = _oracle(db)
+        got, rep = db.aggregate(
+            {"*": "count", "x": ["min", "max", "sum", "mean"]}, explain=True)
+        assert got["*"]["count"] == want["rows"]
+        assert got["x"]["min"] == want["x_min"]
+        assert got["x"]["max"] == want["x_max"]
+        assert got["x"]["sum"] == want["x_sum"]
+        # shadowed groups were decoded, not answered from stale stats
+        assert rep.counters.rows_scanned > 0
+
+    def test_filtered_aggregate_sees_upserted_values(self, db):
+        db.update([{"id": 42, "x": 10**6}])
+        got = db.aggregate({"*": "count"}, filters=[field("x") >= 10**6])
+        assert got["*"]["count"] == 1
+        got = db.aggregate({"x": "max"})
+        assert got["x"]["max"] == 10**6
+
+    def test_tombstone_only_fragment_keeps_stats_answer_elsewhere(self, db):
+        db.delete(ids=[5])  # shadows one group of file 0 only
+        _, rep = db.aggregate({"*": "count"}, explain=True)
+        # 7 of 8 groups still answered from footers
+        assert rep.counters.groups_answered_by_stats == 7
+        assert rep.counters.rows_scanned == 250
+
+    def test_aggregate_after_compaction_restores_full_cover(self, db):
+        db.update([{"id": i, "x": -i} for i in range(50)])
+        db.delete(ids=[999])
+        db.compact(force=True)
+        want = _oracle(db)
+        got, rep = db.aggregate({"*": "count", "x": "sum"}, explain=True)
+        assert got["*"]["count"] == want["rows"]
+        assert got["x"]["sum"] == want["x_sum"]
+        assert rep.counters.pages_scanned == 0  # fully covered again
+
+
+def _strip_sum_stats(path):
+    """Rewrite a TPQ file's footer without any 'sum' statistic — simulates
+    a file written before the sum field existed (backward compat)."""
+    with open(path, "rb") as fh:
+        buf = fh.read()
+    (flen,) = struct.unpack("<Q", buf[-12:-4])
+    footer = json.loads(zlib.decompress(buf[-(12 + flen):-12]))
+    for rg in footer["row_groups"]:
+        for chunk in rg["columns"].values():
+            chunk["stats"].pop("sum", None)
+            for page in chunk["pages"]:
+                page["stats"].pop("sum", None)
+    blob = zlib.compress(json.dumps(footer).encode("utf-8"), 6)
+    with open(path, "wb") as fh:
+        fh.write(buf[:-(12 + flen)])
+        fh.write(blob)
+        fh.write(struct.pack("<Q", len(blob)))
+        fh.write(buf[-4:])
+
+
+class TestBackwardCompat:
+    def test_pre_sum_files_fall_back_to_decode(self, db, tmp_path):
+        data_dir = os.path.join(str(tmp_path), "agg")
+        man = json.load(open(os.path.join(data_dir, "_manifest.json")))
+        for fn in man["files"]:
+            _strip_sum_stats(os.path.join(data_dir, fn))
+        want = _oracle(db)
+        got, rep = db.aggregate({"*": "count", "x": ["sum", "min", "max"]},
+                                explain=True)
+        assert got["x"]["sum"] == want["x_sum"]       # exact, via decode
+        assert got["x"]["min"] == want["x_min"]       # min/max still footer
+        assert rep.counters.rows_scanned == 2000      # sum forced decode
+        # count-only query stays footer-answered even without sums
+        _, rep = db.aggregate({"*": "count", "x": ["min", "max"]},
+                              explain=True)
+        assert rep.counters.groups_answered_by_stats == 8
+        assert rep.counters.pages_scanned == 0
+
+    def test_merge_stats_sum_poisoning(self):
+        a = ColumnStats(num_values=4, null_count=0, min=0, max=3, sum=6)
+        b = ColumnStats(num_values=4, null_count=4)       # all null, no sum
+        c = ColumnStats(num_values=4, null_count=0, min=5, max=9)  # pre-sum
+        m = merge_stats([a, b])
+        assert m.sum == 6          # all-null part contributes zero
+        m = merge_stats([a, c])
+        assert m.sum is None       # valid values without a sum: poisoned
+        assert merge_stats([b]).sum is None
+
+
+class TestSpecValidationAndSurface:
+    def test_bad_specs_raise(self, db):
+        with pytest.raises(ValueError):
+            db.aggregate({})
+        with pytest.raises(ValueError):
+            db.aggregate({"x": "median"})
+        with pytest.raises(ValueError):
+            db.aggregate({"*": "sum"})
+        with pytest.raises(KeyError):
+            db.aggregate({"nope": "min"})
+        with pytest.raises(TypeError):
+            db.aggregate({"s": "sum"})
+
+    def test_dataset_aggregate_uses_dataset_filter(self, db):
+        ds = db.read(filters=[field("x") >= 1500], load_format="dataset")
+        got, rep = ds.aggregate({"*": "count", "x": "min"}, explain=True)
+        assert got["*"]["count"] == 500
+        assert got["x"]["min"] == 1500
+        assert rep.counters.groups_answered_by_stats == 2
+
+    def test_empty_dataset(self, tmp_path):
+        empty = ParquetDB(os.path.join(str(tmp_path), "empty"),
+                          initial_fields=None)
+        empty.create([{"x": 1}])
+        empty.delete(ids=[0])
+        got = empty.aggregate({"*": "count", "x": ["min", "sum", "mean"]})
+        assert got["*"]["count"] == 0
+        assert got["x"]["min"] is None
+        assert got["x"]["sum"] is None
+        assert got["x"]["mean"] is None
+
+    def test_schema_evolution_missing_column_counts_zero(self, tmp_path):
+        db = ParquetDB(os.path.join(str(tmp_path), "evo"),
+                       eager_schema_align=False)
+        db.create([{"x": i} for i in range(100)])
+        db.create([{"x": 100 + i, "z": i * 2} for i in range(50)])
+        got = db.aggregate({"*": "count", "z": ["count", "sum", "max"]})
+        assert got["*"]["count"] == 150
+        assert got["z"]["count"] == 50       # old rows are null for z
+        assert got["z"]["sum"] == sum(i * 2 for i in range(50))
+        assert got["z"]["max"] == 98
+
+
+class TestStatsBoundSoundness:
+    def test_long_string_minmax_decodes_not_footer_bounds(self, tmp_path):
+        """Footer string bounds are truncated (min) / sentinel-padded (max)
+        for long values — sound for pruning, but an aggregate must never
+        report them as column values (regression)."""
+        db = ParquetDB(os.path.join(str(tmp_path), "longs"))
+        a, z = "a" * 103, "z" * 103
+        db.create([{"s": a}, {"s": z}, {"s": "middle"}])
+        got, rep = db.aggregate({"s": ["min", "max", "count"]}, explain=True)
+        assert got["s"]["min"] == a          # actual value, not a prefix
+        assert got["s"]["max"] == z          # no \U0010ffff sentinel
+        assert got["s"]["count"] == 3
+        assert rep.counters.rows_scanned > 0  # forced to decode
+        # short strings still answer from footers
+        db2 = ParquetDB(os.path.join(str(tmp_path), "shorts"))
+        db2.create([{"s": "aa"}, {"s": "zz"}])
+        got, rep = db2.aggregate({"s": ["min", "max"]}, explain=True)
+        assert got["s"] == {"min": "aa", "max": "zz"}
+        assert rep.counters.pages_scanned == 0
+
+    def test_huge_int_sum_is_exact(self, tmp_path):
+        """int64-wrapping sums (footer and decode path) are a silent-wrong
+        answer; both must accumulate exactly (regression)."""
+        db = ParquetDB(os.path.join(str(tmp_path), "huge"))
+        db.create([{"v": 2 ** 62} for _ in range(4)])
+        got = db.aggregate({"v": ["sum", "mean"]})
+        assert got["v"]["sum"] == 2 ** 64           # stats path, no wrap
+        assert got["v"]["mean"] == 2 ** 64 / 4
+        # force the decode path with a filter that stats cannot decide
+        db.create([{"v": 1}])
+        got = db.aggregate({"v": "sum"}, filters=[field("v") > 1])
+        assert got["v"]["sum"] == 2 ** 64           # decode path, no wrap
+
+
+class TestBackendMinmax:
+    def test_numpy_reference(self):
+        be = active_backend()
+        vals = np.array([5, -3, 9, 0], dtype=np.int64)
+        assert be.minmax(vals) == (-3, 9)
+
+    @pytest.mark.skipif(not jax_available(), reason="jax not importable")
+    @pytest.mark.parametrize("dtype", [np.int8, np.int16, np.int32,
+                                       np.uint8, np.uint16, np.uint32,
+                                       np.float32, np.int64, np.float64])
+    def test_jax_kernel_parity(self, dtype):
+        rng = np.random.default_rng(0)
+        info_ints = np.issubdtype(dtype, np.integer)
+        if info_ints:
+            info = np.iinfo(dtype)
+            vals = rng.integers(max(info.min, -1000), min(info.max, 1000),
+                                size=10_001).astype(dtype)
+        else:
+            vals = rng.normal(size=10_001).astype(dtype)
+        set_backend("jax")
+        try:
+            lo, hi = active_backend().minmax(vals)
+        finally:
+            set_backend(None)
+        assert lo == vals.min() and hi == vals.max()
+
+    @pytest.mark.skipif(not jax_available(), reason="jax not importable")
+    def test_jax_aggregate_matches_numpy(self, tmp_path):
+        db = ParquetDB(os.path.join(str(tmp_path), "jx"),
+                       row_group_rows=200, page_rows=100)
+        db.create([{"v": (i * 37) % 501} for i in range(1000)])
+        filt = [field("v") > 13]
+        ref = db.aggregate({"v": ["min", "max", "sum"]}, filters=filt)
+        set_backend("jax")
+        try:
+            jx = db.aggregate({"v": ["min", "max", "sum"]}, filters=filt)
+        finally:
+            set_backend(None)
+        assert ref == jx

@@ -1,0 +1,252 @@
+"""Morsel-driven parallel scan: parity, counters, prefetch, compaction races.
+
+The contract under test: ``read()`` with ``num_threads > 1`` is
+byte-identical — order included — to the serial scan, counters lose no
+updates to threading, a prefetch worker can neither swallow a traceback
+nor leak blocked on a full queue, and parallel readers racing a background
+``compact()`` always see a consistent snapshot.
+"""
+import os
+import threading
+import time
+import traceback
+
+import numpy as np
+import pytest
+
+from repro.core import LoadConfig, ParquetDB, field
+from repro.core.scan import (MORSEL_ROWS, prefetch, resolve_num_threads,
+                             scan_pool)
+
+
+def _mkdb(tmp_path, name="pdb", n=4_000, files=4, **kw):
+    """Several files with interleaved-range columns and some nulls."""
+    kw.setdefault("row_group_rows", 500)
+    kw.setdefault("page_rows", 125)
+    db = ParquetDB(os.path.join(str(tmp_path), name), **kw)
+    per = n // files
+    for f in range(files):
+        lo = f * per
+        db.create([{"x": lo + i,
+                    "y": float((lo + i) % 17),
+                    "s": f"s{(lo + i) % 23:02d}",
+                    "opt": None if (lo + i) % 5 == 0 else (lo + i) % 97}
+                   for i in range(per)])
+    return db
+
+
+def _tables_equal(a, b):
+    assert a.column_names == b.column_names
+    assert a.num_rows == b.num_rows
+    for c in a.column_names:
+        assert a[c].to_pylist() == b[c].to_pylist(), c
+
+
+FILTERS = [
+    None,
+    [field("x") >= 1_000],
+    [(field("x") >= 700) & (field("x") < 2_900)],
+    [field("s") == "s07"],
+    [field("opt").is_null()],
+    [field("y") != 3.0],
+]
+PROJECTIONS = [None, ["x"], ["s", "y"], ["opt", "x"]]
+
+
+class TestParallelParity:
+    @pytest.mark.parametrize("filters", FILTERS)
+    @pytest.mark.parametrize("columns", PROJECTIONS)
+    def test_matrix_threads_vs_serial(self, tmp_path, filters, columns):
+        db = _mkdb(tmp_path)
+        serial = db.read(columns=columns, filters=filters,
+                         load_config=LoadConfig(num_threads=1))
+        for nt in (2, 4):
+            par = db.read(columns=columns, filters=filters,
+                          load_config=LoadConfig(num_threads=nt))
+            _tables_equal(serial, par)
+
+    def test_parity_with_deltas(self, tmp_path):
+        db = _mkdb(tmp_path, auto_compact=False)
+        db.update([{"id": i, "x": -i} for i in range(0, 4_000, 7)])
+        db.delete(ids=list(range(0, 4_000, 11)))
+        db.update([{"id": 3, "x": 10**6}])
+        for filters in (None, [field("x") >= 0],
+                        [(field("x") > -50) & (field("x") < 2_000)]):
+            serial = db.read(filters=filters,
+                             load_config=LoadConfig(num_threads=1))
+            par = db.read(filters=filters,
+                          load_config=LoadConfig(num_threads=4))
+            _tables_equal(serial, par)
+
+    def test_batches_format_parity(self, tmp_path):
+        db = _mkdb(tmp_path)
+        s = list(db.read(load_format="batches", batch_size=333,
+                         load_config=LoadConfig(num_threads=1)))
+        p = list(db.read(load_format="batches", batch_size=333,
+                         load_config=LoadConfig(num_threads=4)))
+        assert [t.num_rows for t in s] == [t.num_rows for t in p]
+        for a, b in zip(s, p):
+            _tables_equal(a, b)
+
+    def test_use_threads_false_forces_serial(self):
+        assert resolve_num_threads(LoadConfig(use_threads=False,
+                                              num_threads=8)) == 1
+        assert resolve_num_threads(LoadConfig(num_threads=3)) == 3
+        assert resolve_num_threads(LoadConfig()) == max(1, os.cpu_count() or 1)
+
+    def test_pool_is_shared_and_grows(self):
+        a = scan_pool(2)
+        assert scan_pool(2) is a          # same size: same pool
+        b = scan_pool(max(4, a._max_workers + 1))
+        assert b is not a                 # grew: replaced
+        assert scan_pool(2) is b          # never shrinks
+
+    def test_pool_growth_does_not_kill_inflight_scans(self):
+        """A scan holding the old pool must keep submitting after another
+        caller grows the global slot (regression: grow-by-replace used to
+        shut the old executor down, making refill submits raise)."""
+        old = scan_pool(2)
+        scan_pool(old._max_workers + 2)
+        assert old.submit(lambda: 42).result() == 42
+
+
+class TestCounterMerge:
+    def test_no_lost_updates_under_threads(self, tmp_path):
+        """Exec counters from an 8-way scan equal the serial scan's exactly;
+        a racy shared `+=` would drop increments on this many row groups."""
+        db = _mkdb(tmp_path, n=8_000, files=8)
+        expr = [field("x") >= 0]
+        serial = db.explain(filters=expr, execute=True,
+                            load_config=LoadConfig(num_threads=1)).counters
+        for _ in range(3):  # repeat: races are probabilistic
+            par = db.explain(filters=expr, execute=True,
+                             load_config=LoadConfig(num_threads=8)).counters
+            assert par.to_dict() == serial.to_dict()
+
+    def test_merge_from_sums_every_field(self):
+        from repro.core import ScanCounters
+        import dataclasses
+        a = ScanCounters(**{f.name: 1 for f in
+                            dataclasses.fields(ScanCounters)})
+        b = ScanCounters(**{f.name: 2 for f in
+                            dataclasses.fields(ScanCounters)})
+        a.merge_from(b)
+        assert all(getattr(a, f.name) == 3
+                   for f in dataclasses.fields(ScanCounters))
+
+
+class TestPrefetchRegression:
+    def test_worker_traceback_propagates(self):
+        def _inner_kaboom():
+            raise ValueError("kaboom")
+
+        def gen():
+            yield 1
+            _inner_kaboom()
+
+        with pytest.raises(ValueError, match="kaboom") as ei:
+            list(prefetch(gen(), 2))
+        tb = "".join(traceback.format_exception(
+            ei.type, ei.value, ei.tb))
+        # the frame that raised inside the worker must be visible
+        assert "_inner_kaboom" in tb
+
+    def test_early_close_does_not_leak_blocked_worker(self):
+        produced = threading.Event()
+
+        def gen():  # unbounded producer: would block forever on a full
+            i = 0   # queue if close() didn't drain + signal stop
+            while True:
+                produced.set()
+                yield i
+                i += 1
+
+        g = prefetch(gen(), 1)
+        assert next(g) == 0
+        assert produced.wait(timeout=5)
+        g.close()  # finally-block: stop, drain, join
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline:
+            if not any(t.name == "tpq-prefetch" and t.is_alive()
+                       for t in threading.enumerate()):
+                return
+            time.sleep(0.01)
+        pytest.fail("prefetch worker still alive after consumer close()")
+
+    def test_error_mid_stream_also_joins_worker(self):
+        def gen():
+            yield from range(100)
+            raise RuntimeError("late failure")
+
+        with pytest.raises(RuntimeError, match="late failure"):
+            list(prefetch(gen(), 1))
+        time.sleep(0.05)
+        assert not any(t.name == "tpq-prefetch" and t.is_alive()
+                       for t in threading.enumerate())
+
+
+class TestCompactionRace:
+    def test_parallel_readers_see_consistent_snapshot(self, tmp_path):
+        """Scans racing compact() must never mix generations or see
+        partial merges (deferred GC keeps the old snapshot readable)."""
+        db = _mkdb(tmp_path, n=2_000, files=4, auto_compact=False)
+        db.update([{"id": i, "x": -1000 - i} for i in range(0, 2_000, 13)])
+        db.delete(ids=list(range(5, 2_000, 31)))
+        expected = db.read(load_config=LoadConfig(num_threads=1))
+        exp_by_id = sorted(zip(expected["id"].to_pylist(),
+                               expected["x"].to_pylist()))
+
+        errors = []
+        stop = threading.Event()
+
+        def reader():
+            cfg = LoadConfig(num_threads=2)
+            try:
+                while not stop.is_set():
+                    t = db.read(load_config=cfg)
+                    got = sorted(zip(t["id"].to_pylist(),
+                                     t["x"].to_pylist()))
+                    if got != exp_by_id:
+                        errors.append("snapshot mismatch during compaction")
+                        return
+            except Exception as e:  # pragma: no cover - failure detail
+                errors.append(f"{type(e).__name__}: {e}")
+
+        threads = [threading.Thread(target=reader) for _ in range(4)]
+        for t in threads:
+            t.start()
+        time.sleep(0.05)
+        result = db.compact(force=True)
+        time.sleep(0.1)
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+        assert not errors, errors
+        assert result.compacted
+        # post-compaction reads still match, chain folded
+        after = db.read(load_config=LoadConfig(num_threads=4))
+        assert sorted(zip(after["id"].to_pylist(),
+                          after["x"].to_pylist())) == exp_by_id
+        assert db.n_delta_files == 0
+
+
+class TestMorselShapes:
+    def test_single_morsel_falls_back_to_serial_path(self, tmp_path):
+        # one small file, one row group: must not spin up the pool
+        db = ParquetDB(os.path.join(str(tmp_path), "tiny"))
+        db.create([{"x": i} for i in range(10)])
+        t = db.read(load_config=LoadConfig(num_threads=8))
+        assert t.num_rows == 10
+
+    def test_morsels_respect_row_cap_and_order(self, tmp_path):
+        db = ParquetDB(os.path.join(str(tmp_path), "caps"),
+                       row_group_rows=100, page_rows=50)
+        db.create([{"x": i} for i in range(1_000)])
+        plan = db.read(load_format="dataset").scan_plan()
+        plan.fragments()
+        morsels = plan._morsels()
+        rgs = [i for _, run in morsels for i in run]
+        assert rgs == sorted(rgs)  # plan order preserved
+        rd_rows = 100
+        for _, run in morsels:
+            assert (len(run) - 1) * rd_rows < MORSEL_ROWS
