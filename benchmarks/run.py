@@ -7,6 +7,10 @@ into a ParquetDB results store so they are queryable like everything else.
 ``--json [DIR]`` additionally writes one ``BENCH_<fig>.json`` artifact per
 suite (median-of-k timings in the rows, plus rows/sec where applicable) —
 the machine-readable trajectory that ``scripts/check_perf.py`` gates CI on.
+The canonical artifact directory is ``bench/`` (the bare ``--json``
+default); the committed engine artifacts CI gates on live there.  (The
+root ``BENCH_baseline.json`` is different: it records the pre-engine
+*seed* numbers as a trajectory record — see scripts/check_perf.py.)
 """
 from __future__ import annotations
 
@@ -55,9 +59,10 @@ def main(argv=None) -> int:
                     help="comma-separated suite prefixes")
     ap.add_argument("--store", default=None,
                     help="optional ParquetDB dir for results")
-    ap.add_argument("--json", nargs="?", const=".", default=None,
+    ap.add_argument("--json", nargs="?", const="bench", default=None,
                     metavar="DIR",
-                    help="write BENCH_<fig>.json artifacts into DIR")
+                    help="write BENCH_<fig>.json artifacts into DIR "
+                         "(default: the canonical bench/ directory)")
     args = ap.parse_args(argv)
 
     only = args.only.split(",") if args.only else None

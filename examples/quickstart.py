@@ -46,8 +46,29 @@ print(db.read(columns=["name"]).to_pylist())
 adults = db.read(columns=["name", "age"], filters=[field("age") >= 30])
 print("age>=30:", adults.to_pylist())
 
+# The same read as a composable lazy Query — read() is a thin shim over
+# this: where/select/order_by/limit build one plan the scan engine
+# optimizes end to end (filter fusion, projection pushdown, early stop)
+adults2 = (db.query()
+             .where(field("age") >= 30)
+             .select("name", "age")
+             .order_by("age", desc=True)
+             .to_table())
+print("query() same rows:", adults2.to_pylist())
+
+# Computed columns and grouped aggregation (morsel-parallel hash groups)
+by_age = (db.query()
+            .group_by("age")
+            .agg({"*": "count"})
+            .order_by("age")
+            .to_table())
+print("rows per age:", by_age.to_pylist())
+
 # explain(): how would this read be pruned?  Footer stats only — no decode.
 print(db.explain(columns=["name", "age"], filters=[field("age") >= 30]))
+
+# Query.explain() renders the whole operator tree around the scan report
+print(db.query().where(field("age") >= 30).select("name").limit(1).explain())
 
 # An impossible predicate scans almost nothing — but note the file count
 # is not 0: the update above staged an upsert delta, and a fragment that

@@ -19,7 +19,8 @@ import textwrap
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
-from repro.core import aggregate, compaction, scan, store, transactions  # noqa: E402
+from repro.core import (aggregate, compaction, query, scan, store,  # noqa: E402
+                        transactions)
 
 OUT = os.path.join(REPO, "docs", "API.md")
 
@@ -39,11 +40,17 @@ lifecycle.
 # (class, members); None = every public method, () = class docstring only
 SECTIONS = [
     (store.ParquetDB,
-     ["create", "read", "aggregate", "update", "delete", "normalize",
-      "compact", "maintenance_stats", "explain", "wait_for_maintenance",
-      "set_metadata", "set_field_metadata"]),
-    (store.Dataset, ["schema", "iter_batches", "to_table", "scan_plan",
-                     "explain", "aggregate"]),
+     ["create", "query", "read", "aggregate", "update", "delete",
+      "normalize", "compact", "maintenance_stats", "explain",
+      "wait_for_maintenance", "set_metadata", "set_field_metadata"]),
+    (query.Query,
+     ["where", "select", "group_by", "order_by", "limit", "offset",
+      "distinct", "to_table", "iter_batches", "to_pylist", "count", "agg",
+      "explain"]),
+    (query.GroupedQuery, ["agg"]),
+    (query.QueryReport, ()),
+    (store.Dataset, ["query", "schema", "iter_batches", "to_table",
+                     "scan_plan", "explain", "aggregate"]),
     (store.NormalizeConfig, ()),
     (store.LoadConfig, ()),
     (compaction.CompactionPolicy, ()),

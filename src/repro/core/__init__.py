@@ -2,25 +2,29 @@
 
 Public API mirrors the paper's ParquetDB: ``ParquetDB`` with
 create/read/update/delete/normalize, expression filters via ``field``, and the
-config dataclasses ``NormalizeConfig`` / ``LoadConfig``.
+config dataclasses ``NormalizeConfig`` / ``LoadConfig``.  The fluent,
+composable entrypoint is ``db.query()`` (:mod:`repro.core.query`) — the
+legacy methods are thin shims over it.
 """
 from .dtypes import DType
 from .schema import Field, ID_COLUMN, Schema
 from .table import Column, Table, concat_tables
-from .expressions import Expr, field
+from .expressions import Arith, Expr, field
 from .fileformat import TPQReader, TPQWriter, read_table, write_table
 from .scan import (DeltaOverlay, FragmentPlan, ScanCounters, ScanPlan,
                    ScanReport)
 from .aggregate import AggregatePlan
+from .query import GroupedQuery, Query, QueryReport
 from .compaction import CompactionPolicy, CompactionResult, MaintenanceStats
 from .transactions import DeltaEntry, Manifest
 from .store import Dataset, LoadConfig, NormalizeConfig, ParquetDB
 
 __all__ = [
     "DType", "Field", "ID_COLUMN", "Schema", "Column", "Table",
-    "concat_tables", "Expr", "field", "TPQReader", "TPQWriter",
+    "concat_tables", "Arith", "Expr", "field", "TPQReader", "TPQWriter",
     "read_table", "write_table", "DeltaOverlay", "FragmentPlan",
     "ScanCounters", "ScanPlan", "ScanReport", "AggregatePlan",
+    "GroupedQuery", "Query", "QueryReport",
     "CompactionPolicy", "CompactionResult", "MaintenanceStats",
     "DeltaEntry", "Manifest", "Dataset", "LoadConfig", "NormalizeConfig",
     "ParquetDB",

@@ -9,6 +9,15 @@ The crucial part for the paper's "statistics replace indexes" claim is
 ``Expr.prune(stats)``: given per-chunk ColumnStats it returns False only when
 the chunk *provably* cannot contain a matching row — that is predicate
 pushdown.  Pruning is conservative: True means "must read".
+
+Every expression renders as a SQL-ish, fully parenthesized string via
+``repr`` — ``((age >= 30) AND (city == 'SF'))`` — which is what
+``ScanReport`` and ``Query.explain()`` print, so plans stay readable.
+
+Beyond predicates, :class:`Arith` is the *value* expression used by
+``Query.select(**computed)``: ``field('x') + field('y')``, ``field('x') * 2``
+etc. build an arithmetic tree that evaluates to a numeric Column per batch
+(null if any operand is null).
 """
 from __future__ import annotations
 
@@ -17,7 +26,7 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from .statistics import ColumnStats
-from .table import Table
+from .table import Column, Table
 from .dtypes import KIND_NUMERIC, KIND_STRING
 
 StatsMap = Dict[str, ColumnStats]
@@ -266,7 +275,8 @@ class IsIn(Expr):
         return [self.name]
 
     def __repr__(self):
-        return f"({self.name} isin {self.values!r})"
+        vals = ", ".join(repr(v) for v in self.values)
+        return f"({self.name} IN ({vals}))"
 
 
 class IsNull(Expr):
@@ -301,6 +311,10 @@ class IsNull(Expr):
 
     def negate(self) -> Optional[Expr]:
         return IsNull(self.name, negate=not self._negated)
+
+    def __repr__(self):
+        return (f"({self.name} IS NOT NULL)" if self._negated
+                else f"({self.name} IS NULL)")
 
 
 class IsNaN(Expr):
@@ -383,7 +397,7 @@ class And(Expr):
         return (ra[0], lo, lo_open, hi, hi_open)
 
     def __repr__(self):
-        return f"({self.a!r} & {self.b!r})"
+        return f"({self.a!r} AND {self.b!r})"
 
 
 class Or(Expr):
@@ -409,7 +423,7 @@ class Or(Expr):
         return And(na, nb) if na is not None and nb is not None else None
 
     def __repr__(self):
-        return f"({self.a!r} | {self.b!r})"
+        return f"({self.a!r} OR {self.b!r})"
 
 
 class Not(Expr):
@@ -441,14 +455,126 @@ class Not(Expr):
         return self.a
 
     def __repr__(self):
-        return f"~{self.a!r}"
+        return f"(NOT {self.a!r})"
 
 
-class FieldRef:
+class _ArithOps:
+    """Mixin giving FieldRef/Arith the ``+ - * /`` operators (value exprs)."""
+
+    def __add__(self, other):
+        return Arith("+", self, other)
+
+    def __radd__(self, other):
+        return Arith("+", other, self)
+
+    def __sub__(self, other):
+        return Arith("-", self, other)
+
+    def __rsub__(self, other):
+        return Arith("-", other, self)
+
+    def __mul__(self, other):
+        return Arith("*", self, other)
+
+    def __rmul__(self, other):
+        return Arith("*", other, self)
+
+    def __truediv__(self, other):
+        return Arith("/", self, other)
+
+    def __rtruediv__(self, other):
+        return Arith("/", other, self)
+
+    def __neg__(self):
+        return Arith("-", 0, self)
+
+
+_ARITH_FNS = {"+": np.add, "-": np.subtract, "*": np.multiply,
+              "/": np.true_divide}
+
+
+def _operand_values(x, table: Table):
+    """(values ndarray-or-scalar, validity-or-None) of one Arith operand."""
+    if isinstance(x, FieldRef):
+        col = table.column(x.name)
+        if col.dtype.kind != KIND_NUMERIC:
+            raise TypeError(f"computed expression needs a numeric column, "
+                            f"but {x.name!r} is {col.dtype}")
+        vals = col.values
+        if vals.dtype.kind == "b":
+            # bool is numeric (b1), but numpy's +|*|- on bool arrays are
+            # logical ops / errors — arithmetic means ints here
+            vals = vals.astype(np.int64)
+        return vals, col.validity
+    if isinstance(x, Arith):
+        col = x.evaluate_column(table)
+        return col.values, col.validity
+    if isinstance(x, (int, float, np.integer, np.floating)) \
+            and not isinstance(x, (bool, np.bool_)):
+        return x, None
+    raise TypeError(f"unsupported operand in computed expression: {x!r}")
+
+
+def _operand_repr(x) -> str:
+    if isinstance(x, FieldRef):
+        return x.name
+    return repr(x)
+
+
+class Arith(_ArithOps):
+    """Arithmetic *value* expression over numeric columns and scalars.
+
+    Built by operator overloading — ``field('x') * 2 + field('y')`` — and
+    consumed by ``Query.select(**computed)``: :meth:`evaluate_column`
+    produces one numeric Column per batch.  Null semantics: a row is null
+    in the result when any column operand is null in that row (validity
+    masks AND together).  Division always yields float64 (``0/0`` and
+    ``x/0`` follow IEEE NaN/inf, warnings suppressed).
+    """
+
+    def __init__(self, op: str, a, b):
+        assert op in _ARITH_FNS, op
+        self.op, self.a, self.b = op, a, b
+
+    def evaluate_column(self, table: Table) -> Column:
+        av, avd = _operand_values(self.a, table)
+        bv, bvd = _operand_values(self.b, table)
+        with np.errstate(all="ignore"):
+            out = _ARITH_FNS[self.op](av, bv)
+        out = np.asarray(out)
+        if out.ndim == 0:  # scalar-only tree: broadcast to the batch
+            out = np.full(table.num_rows, out[()])
+        if avd is None:
+            validity = None if bvd is None else bvd.copy()
+        else:
+            validity = avd.copy() if bvd is None else (avd & bvd)
+        return Column.numeric(np.ascontiguousarray(out), validity=validity)
+
+    def columns(self) -> List[str]:
+        cols: List[str] = []
+        for x in (self.a, self.b):
+            if isinstance(x, FieldRef):
+                cols.append(x.name)
+            elif isinstance(x, Arith):
+                cols.extend(x.columns())
+        return cols
+
+    def __repr__(self):
+        return f"({_operand_repr(self.a)} {self.op} {_operand_repr(self.b)})"
+
+
+class FieldRef(_ArithOps):
     """``field('energy') > -1.0`` builds a Comparison."""
 
     def __init__(self, name: str):
         self.name = name
+
+    def evaluate_column(self, table: Table) -> Column:
+        """A bare FieldRef used as a computed column is a copy/rename."""
+        return table.column(self.name)
+
+    def columns(self) -> List[str]:
+        return [self.name]
 
     def __eq__(self, v):  # type: ignore[override]
         return Comparison(self.name, "==", v)

@@ -71,7 +71,7 @@ import os
 import queue
 import threading
 from concurrent.futures import ThreadPoolExecutor
-from typing import (Callable, Dict, Generator, Iterable, List, Optional,
+from typing import (Any, Callable, Dict, Generator, Iterable, List, Optional,
                     Sequence, Tuple)
 
 import numpy as np
@@ -531,8 +531,9 @@ class ScanPlan:
 
     # --------------------------------------------------------------- execute
     def execute(self, batch_size: Optional[int] = None,
-                counters: Optional[ScanCounters] = None
-                ) -> Generator[Table, None, None]:
+                counters: Optional[ScanCounters] = None,
+                map_fn: Optional[Callable[[Table], Any]] = None
+                ) -> Generator[Any, None, None]:
         """Yield result tables, decoding morsels on the shared worker pool.
 
         With ``num_threads > 1`` (the default is ``os.cpu_count()``) the
@@ -542,7 +543,17 @@ class ScanPlan:
         ``counters`` (or a fresh copy of the plan counters, exposed as
         ``self.last_counters``) — per-morsel counters are merged in the
         consumer, never incremented across threads.
+
+        ``map_fn`` (exclusive with ``batch_size``) transforms each result
+        table *inside the decoding worker* on the parallel path, so
+        CPU-bound per-batch work (e.g. the Query layer's partial
+        group-by aggregation) overlaps with decode; mapped values are
+        yielded in plan order.  Closing the generator early (e.g. a
+        ``limit`` that is already satisfied) cancels not-yet-started
+        morsels, so an abandoned scan stops submitting work.
         """
+        assert not (batch_size is not None and map_fn is not None), \
+            "batch_size and map_fn are mutually exclusive"
         self._build()
         if counters is None:
             counters = dataclasses.replace(self._plan_counters)
@@ -552,12 +563,13 @@ class ScanPlan:
         parallel = self._num_threads > 1 and len(morsels) > 1 \
             and (not self._threads_auto or self._parallel_profitable())
         if parallel:
-            stream = self._execute_parallel(morsels, counters)
+            stream = self._execute_parallel(morsels, counters, map_fn)
         else:
-            def pieces() -> Generator[Table, None, None]:
+            def pieces() -> Generator[Any, None, None]:
                 for frag, rgs in morsels:
-                    yield from self._fragment_tables(frag, counters,
-                                                     row_groups=rgs)
+                    for t in self._fragment_tables(frag, counters,
+                                                   row_groups=rgs):
+                        yield t if map_fn is None else map_fn(t)
             stream = (prefetch(pieces(), self._readahead)
                       if self._use_threads else pieces())
         if batch_size is None:
@@ -619,8 +631,9 @@ class ScanPlan:
             return stored > 0 and compressed * 2 >= stored
         return False
 
-    def _execute_parallel(self, morsels, counters: ScanCounters
-                          ) -> Generator[Table, None, None]:
+    def _execute_parallel(self, morsels, counters: ScanCounters,
+                          map_fn: Optional[Callable[[Table], Any]] = None
+                          ) -> Generator[Any, None, None]:
         """Decode morsels on the shared pool; order-preserving bounded merge.
 
         Up to ``num_threads + fragment_readahead`` morsels are in flight;
@@ -629,14 +642,17 @@ class ScanPlan:
         worker exception propagates to the caller with its original
         traceback (``Future.result`` re-raises), and the ``finally`` block
         cancels not-yet-started morsels so an abandoned scan leaves no
-        queued work behind.
+        queued work behind.  ``map_fn`` (if any) runs inside the worker,
+        right after each table is decoded.
         """
         pool = scan_pool(self._num_threads)
         max_inflight = self._num_threads + max(self._readahead, 1)
 
         def run_morsel(frag: FragmentPlan, rgs: List[int]):
             local = ScanCounters()  # morsel-local: no cross-thread `+=`
-            tables = list(self._fragment_tables(frag, local, row_groups=rgs))
+            tables = [t if map_fn is None else map_fn(t)
+                      for t in self._fragment_tables(frag, local,
+                                                     row_groups=rgs)]
             return tables, local
 
         it = iter(morsels)

@@ -35,12 +35,12 @@ import dataclasses
 import json
 import os
 import threading
-from typing import Any, Dict, Generator, Iterable, List, Optional, Sequence, Union
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
 
 import numpy as np
 
 from . import nested
-from .aggregate import AggregatePlan, AggSpec
+from .aggregate import AggSpec
 from .compaction import (CompactionPolicy, CompactionResult, MaintenanceStats,
                          compact_locked, gather_stats)
 from .dtypes import DType, KIND_STRING
@@ -48,6 +48,7 @@ from .encodings import AUTO, CODEC_ZLIB
 from .expressions import Expr, IsIn, combine_filters, field
 from .fileformat import (DEFAULT_PAGE_ROWS, DEFAULT_ROW_GROUP_ROWS, TPQReader,
                          TPQWriter)
+from .query import Query, _resolve_names
 from .scan import DeltaOverlay, ScanPlan, ScanReport
 from .schema import Field, ID_COLUMN, Schema
 from .table import Column, Table, concat_tables, null_column_of
@@ -168,11 +169,24 @@ class LoadConfig:
 
 
 class Dataset:
-    """Lazy handle returned by ``read(load_format='dataset')``."""
+    """Lazy handle returned by ``read(load_format='dataset')``.
+
+    A Dataset is a **bound Query prefix**: its columns/filter/config are a
+    partial plan, and every method below delegates to the composable
+    :class:`~repro.core.query.Query` it denotes — :meth:`query` hands that
+    Query out so a dataset scan can keep composing
+    (``ds.query().group_by("k").agg({"x": "mean"})``).
+    """
 
     def __init__(self, db: "ParquetDB", columns, filter_expr, load_config):
         self._db, self._columns = db, columns
         self._filter, self._cfg = filter_expr, load_config
+
+    def query(self) -> Query:
+        """This dataset's plan as a composable :class:`Query` prefix."""
+        names = (self._db._resolve_columns(self._columns, True)
+                 if self._columns is not None else None)
+        return self._db._legacy_query(names, self._filter, self._cfg)
 
     @property
     def schema(self) -> Schema:
@@ -182,18 +196,16 @@ class Dataset:
 
     def iter_batches(self, batch_size: Optional[int] = None) -> Iterable[Table]:
         """Stream the scan as Tables of ``batch_size`` rows (lazy)."""
-        yield from self._db._iter_batches(
-            self._columns, self._filter,
-            batch_size or self._cfg.batch_size, self._cfg)
+        yield from self.query().iter_batches(
+            batch_size or self._cfg.batch_size)
 
     def to_table(self) -> Table:
         """Materialize the whole scan into one Table."""
-        return concat_tables(list(self.iter_batches()))
+        return self.query().to_table()
 
     def scan_plan(self) -> ScanPlan:
         """The underlying planner (fresh, over the committed manifest)."""
-        names = self._db._resolve_columns(self._columns, True)
-        return self._db._scan_plan(names, self._filter, self._cfg)
+        return self.query()._compile().plan
 
     def explain(self, execute: bool = False) -> ScanReport:
         """Pruning report for this dataset's scan (see ParquetDB.explain)."""
@@ -205,9 +217,7 @@ class Dataset:
         The dataset's filter applies; its ``LoadConfig`` sizes the morsel
         pool for whatever partial row groups need decoding.
         """
-        plan = self._db._aggregate_plan(spec, self._filter, self._cfg)
-        values = plan.execute()
-        return (values, plan.report()) if explain else values
+        return self.query().agg(spec, explain=explain)
 
 
 class ParquetDB:
@@ -514,21 +524,52 @@ class ParquetDB:
         return ids
 
     # ------------------------------------------------------------------ read
+    def query(self, load_config: Optional[LoadConfig] = None) -> Query:
+        """Start a lazy, composable query over this dataset.
+
+        The fluent alternative to ``read``/``aggregate``/``explain`` —
+        one plan the scan engine optimizes end to end::
+
+            (db.query()
+               .where(field("age") >= 30)
+               .select("name", "age")
+               .order_by("age", desc=True)
+               .limit(10)
+               .to_table())
+
+        Chain ``where`` (fused, pushed to footer statistics), ``select``
+        (projection pushdown + computed columns), ``group_by().agg()``
+        (morsel-parallel hash aggregation), ``order_by``, ``limit`` /
+        ``offset`` (early-terminating scans) and ``distinct``; finish
+        with ``to_table()`` / ``iter_batches()`` / ``to_pylist()`` /
+        ``count()`` / ``agg(spec)`` / ``explain()``.  See
+        :class:`repro.core.query.Query` and docs/QUERY.md.
+        """
+        return Query(self, cfg=load_config or LoadConfig())
+
     def _resolve_columns(self, columns: Optional[Sequence[str]],
                          include_cols: bool) -> List[str]:
         schema = self.schema
         if columns is None:
             return schema.names
-        resolved: List[str] = []
-        for c in columns:
-            kids = nested.children_of(schema.names, c)
-            if not kids:
-                raise KeyError(f"unknown column {c!r}")
-            resolved.extend(kids)
+        resolved = _resolve_names(schema, columns)
         if include_cols:
             return resolved
         drop = set(resolved)
         return [n for n in schema.names if n not in drop]
+
+    def _legacy_query(self, names: Optional[List[str]], expr: Optional[Expr],
+                      cfg, man: Optional[Manifest] = None) -> Query:
+        """One construction point for every legacy shim: an exact
+        projection (``None`` = all columns) plus an optional pre-built
+        filter, bound to ``man`` when a write path plans against its
+        in-flight manifest."""
+        q = Query(self, cfg=cfg, man=man)
+        if expr is not None:
+            q = q.where(expr)
+        if names is not None:
+            q = q._project_exact(names)
+        return q
 
     def _build_filter(self, ids, filters) -> Optional[Expr]:
         parts: List[Expr] = []
@@ -566,6 +607,9 @@ class ParquetDB:
         Reads see the committed manifest snapshot: base files with the
         delta chain (upserts/tombstones) overlaid at read time, so they are
         unaffected by concurrent writers or compaction.
+
+        This is a thin shim over the composable :class:`Query` builder
+        (``db.query()``) — one plan-construction code path for every read.
         """
         cfg = load_config or LoadConfig()
         if batch_size:
@@ -574,15 +618,11 @@ class ParquetDB:
         if rebuild_nested_struct:
             return self._read_nested(columns, expr, rebuild_nested_from_scratch)
         names = self._resolve_columns(columns, include_cols)
+        q = self._legacy_query(names, expr, cfg)
         if load_format == "table":
-            if not self._load_snapshot()[0].files:
-                return Table.empty(self.schema.select(names))
-            parts = list(self._iter_batches(names, expr, None, cfg))
-            if not parts:
-                return Table.empty(self.schema.select(names))
-            return concat_tables(parts)
+            return q.to_table()
         if load_format == "batches":
-            return self._iter_batches(names, expr, cfg.batch_size, cfg)
+            return q.iter_batches(cfg.batch_size)
         if load_format == "dataset":
             return Dataset(self, names, expr, cfg)
         raise ValueError(f"unknown load_format {load_format!r}")
@@ -622,19 +662,16 @@ class ParquetDB:
         delta-merge work (``delta_rows_applied`` upsert substitutions,
         ``rows_shadowed`` tombstone drops).  ``print(report)`` gives a
         human-readable summary; ``report.to_dict()`` a JSON-able one.
+        For the full operator tree of a composed query, use
+        ``db.query()...explain()`` instead.
         """
         expr = self._build_filter(ids, filters)
         names = self._resolve_columns(columns, include_cols)
         cfg = load_config or LoadConfig()
-        return self._scan_plan(names, expr, cfg).explain(execute=execute)
+        return self._legacy_query(names, expr, cfg) \
+                   ._compile().plan.explain(execute=execute)
 
     # ------------------------------------------------------------------ aggregate
-    def _aggregate_plan(self, spec: AggSpec, expr: Optional[Expr],
-                        cfg) -> AggregatePlan:
-        man, schema = self._load_snapshot()
-        return AggregatePlan(man.files, self._reader_of, schema, spec,
-                             filter_expr=expr, cfg=cfg, deltas=man.deltas)
-
     def aggregate(self, spec: AggSpec,
                   ids: Optional[Sequence[int]] = None,
                   filters: Optional[Sequence[Expr]] = None,
@@ -659,18 +696,13 @@ class ParquetDB:
         exists.  With ``explain=True`` returns ``(values, report)`` where
         the report's counters include ``groups_answered_by_stats`` and
         ``bytes_skipped_agg``.
+
+        This is a thin shim over ``db.query().agg(spec)`` (grouped
+        aggregation lives there too: ``db.query().group_by(...).agg(...)``).
         """
         expr = self._build_filter(ids, filters)
-        plan = self._aggregate_plan(spec, expr, load_config or LoadConfig())
-        values = plan.execute()
-        return (values, plan.report()) if explain else values
-
-    def _iter_batches(self, columns, expr: Optional[Expr],
-                      batch_size: Optional[int], cfg: LoadConfig
-                      ) -> Generator[Table, None, None]:
-        names = self._resolve_columns(columns, True)
-        yield from self._scan_plan(names, expr, cfg).execute(
-            batch_size=batch_size)
+        return self._legacy_query(None, expr, load_config or LoadConfig()) \
+                   .agg(spec, explain=explain)
 
     # -- nested rebuild (paper §4.6.1) -------------------------------------------
     def _nested_path(self) -> str:
@@ -756,12 +788,13 @@ class ParquetDB:
             keys_expr = _keys_expr(incoming, keys)
             # fetch the merged current rows that may match (key-pruned scan,
             # full width: upsert rows must carry every column).  The schema
-            # is set on the manifest first so the plan sees `unified`.
+            # is set on the manifest first so the plan sees `unified`; the
+            # probe is the same Query path every read uses, bound to the
+            # in-flight manifest.
             self._set_manifest_schema(man, unified)
-            plan = self._scan_plan(None, keys_expr, LoadConfig(), man=man)
-            parts = list(plan.execute())
-            snap = concat_tables(parts) if parts else Table.empty(unified)
-            if parts:
+            snap = self._legacy_query(None, keys_expr, LoadConfig(),
+                                      man=man).to_table()
+            if snap.num_rows:
                 snap = snap.align_to_schema(unified)
             hit_dst, hit_src = _match_rows(snap, key_of, keys)
             updated = len(hit_dst)
@@ -840,12 +873,10 @@ class ParquetDB:
                 expr = self._build_filter(ids, filters)
                 if expr is None:
                     raise ValueError("delete needs ids, filters, or columns")
-                # merged-view match: collect the ids to tombstone
-                plan = self._scan_plan([ID_COLUMN], expr, LoadConfig(),
-                                       man=man)
-                parts = list(plan.execute())
-                dead = concat_tables(parts) if parts \
-                    else Table.empty(current.select([ID_COLUMN]))
+                # merged-view match via the shared Query path: collect the
+                # ids to tombstone (key-pruned, bound to this manifest)
+                dead = self._legacy_query([ID_COLUMN], expr, LoadConfig(),
+                                          man=man).to_table()
                 removed = dead.num_rows
                 if removed == 0 and normalize_config is None:
                     return 0  # nothing to commit

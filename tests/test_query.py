@@ -1,0 +1,559 @@
+"""Parity oracle + semantics tests for the lazy composable Query API.
+
+The core contract: the legacy surface (``read``/``aggregate``/``explain``)
+is a set of thin shims over ``db.query()``, so for a matrix of
+(filters × projections × deltas × num_threads) the Query path must be
+byte-identical — row order included — to the legacy calls.  Grouped
+aggregation is checked against a pure-python oracle, and ``limit`` must
+demonstrably terminate the scan early (fewer rows decoded per
+``explain(execute=True)`` counters).
+"""
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import LoadConfig, ParquetDB, Query, field
+from repro.core import scan as scan_mod
+from repro.core.expressions import Arith, IsIn, IsNull
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+def _mkdb(path, deltas: bool) -> ParquetDB:
+    """4 files x 8 row groups of 100 rows; x unique ints, y cyclic float
+    with NaN, s strings, opt nullable.  ``deltas=True`` stages an upsert
+    and a tombstone chain on top."""
+    db = ParquetDB(path, row_group_rows=100, page_rows=50,
+                   auto_compact=False)
+    for f in range(4):
+        lo = f * 800
+        db.create([{"x": lo + i,
+                    "y": float("nan") if (lo + i) % 11 == 0
+                    else float((lo + i) % 7),
+                    "s": f"k{(lo + i) % 5}",
+                    "opt": None if (lo + i) % 4 == 0 else (lo + i) % 50}
+                   for i in range(800)])
+    if deltas:
+        db.update([{"id": i, "opt": 99} for i in range(0, 3200, 101)])
+        db.delete(ids=list(range(7, 3200, 97)))
+    return db
+
+
+@pytest.fixture(scope="module", params=[False, True],
+                ids=["plain", "deltas"])
+def db(request, tmp_path_factory):
+    path = tmp_path_factory.mktemp("qdb")
+    return _mkdb(os.path.join(str(path), "db"), request.param)
+
+
+FILTERS = {
+    "none": None,
+    "range": [field("x") >= 400, field("x") < 2500],
+    "eq": [field("s") == "k3"],
+    "isin": [IsIn("opt", [1, 5, 99])],
+    "null": [field("opt").is_null()],
+    "neg": [~(field("y") > 3.0)],
+}
+PROJECTIONS = {
+    "all": None,
+    "two": ["x", "s"],
+    "one": ["opt"],
+}
+THREADS = [None, 1, 4]
+
+
+def assert_tables_equal(a, b):
+    assert a.column_names == b.column_names
+    assert a.num_rows == b.num_rows
+    for n in a.column_names:
+        ca, cb = a.column(n), b.column(n)
+        assert ca.dtype == cb.dtype, n
+        la, lb = ca.to_pylist(), cb.to_pylist()
+        if ca.dtype.kind == "numeric" and ca.dtype.is_float:
+            np.testing.assert_array_equal(np.array(la, float),
+                                          np.array(lb, float))
+        else:
+            assert la == lb, n
+
+
+# ---------------------------------------------------------------------------
+# parity oracle: query vs legacy read
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fname", list(FILTERS))
+@pytest.mark.parametrize("pname", list(PROJECTIONS))
+@pytest.mark.parametrize("nt", THREADS)
+def test_query_matches_read(db, fname, pname, nt):
+    filters, columns = FILTERS[fname], PROJECTIONS[pname]
+    cfg = LoadConfig(num_threads=nt)
+    legacy = db.read(columns=columns, filters=filters, load_config=cfg)
+    q = db.query(load_config=cfg)
+    for f in (filters or []):
+        q = q.where(f)
+    if columns is not None:
+        q = q.select(*columns)
+    assert_tables_equal(legacy, q.to_table())
+
+
+def test_query_on_empty_dataset(tmp_path):
+    db = ParquetDB(os.path.join(str(tmp_path), "empty"))
+    t = db.query().select("id").to_table()
+    assert t.num_rows == 0 and t.column_names == ["id"]
+    assert db.query().count() == 0
+    assert db.query().group_by("id").agg({"*": "count"}).to_table() \
+             .num_rows == 0
+
+
+# ---------------------------------------------------------------------------
+# ungrouped agg parity (footer-stats fast path)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fname", ["none", "range", "eq"])
+def test_agg_matches_aggregate(db, fname):
+    filters = FILTERS[fname]
+    spec = {"*": "count", "x": ["min", "max", "sum", "mean"],
+            "opt": ["count", "sum"], "s": ["min", "max"]}
+    v1, r1 = db.aggregate(spec, filters=filters, explain=True)
+    q = db.query()
+    for f in (filters or []):
+        q = q.where(f)
+    v2, r2 = q.agg(spec, explain=True)
+    assert v1 == v2
+    c1, c2 = r1.counters, r2.counters
+    assert c1.groups_answered_by_stats == c2.groups_answered_by_stats
+    assert c1.bytes_skipped_agg == c2.bytes_skipped_agg
+    assert c1.pages_scanned == c2.pages_scanned
+
+
+def test_dataset_is_a_query_prefix(db):
+    ds = db.read(columns=["x", "s"], filters=[field("x") < 1000],
+                 load_format="dataset")
+    q = ds.query()
+    assert isinstance(q, Query)
+    assert_tables_equal(ds.to_table(), q.to_table())
+    # and it keeps composing
+    g = q.group_by("s").agg({"x": "sum"}).order_by("s").to_table()
+    rows = ds.to_table().to_pylist()
+    want = {}
+    for r in rows:
+        want[r["s"]] = want.get(r["s"], 0) + r["x"]
+    assert {r["s"]: r["x_sum"] for r in g.to_pylist()} == want
+
+
+# ---------------------------------------------------------------------------
+# group_by vs a pure-python oracle
+# ---------------------------------------------------------------------------
+def _group_oracle(rows, keys, col, ops):
+    groups = {}
+    order_probe = []
+    for r in rows:
+        kv = tuple(("NaN" if isinstance(r[k], float) and math.isnan(r[k])
+                    else r[k]) for k in keys)
+        groups.setdefault(kv, []).append(r)
+        order_probe.append(kv)
+    out = {}
+    for kv, rs in groups.items():
+        vals = [r[col] for r in rs if r[col] is not None] if col != "*" else []
+        nn = [v for v in vals
+              if not (isinstance(v, float) and math.isnan(v))]
+        ent = {}
+        for op in ops:
+            if col == "*":
+                ent["count"] = len(rs)
+            elif op == "count":
+                ent["count"] = len(vals)
+            elif not nn:
+                ent[op] = None
+            elif op == "min":
+                ent[op] = min(nn)
+            elif op == "max":
+                ent[op] = max(nn)
+            elif op == "sum":
+                ent[op] = sum(nn)
+            elif op == "mean":
+                ent[op] = sum(nn) / len(nn)
+        out[kv] = ent
+    return out
+
+
+def _norm_key(v):
+    return "NaN" if isinstance(v, float) and math.isnan(v) else v
+
+
+@pytest.mark.parametrize("nt", THREADS)
+@pytest.mark.parametrize("keys,col,ops", [
+    (["s"], "x", ["count", "min", "max", "sum", "mean"]),
+    (["s"], "*", ["count"]),
+    (["opt"], "x", ["sum"]),              # null key group
+    (["y"], "*", ["count"]),              # NaN key group
+    (["s", "opt"], "x", ["min", "max"]),  # multi-key
+])
+def test_group_by_oracle(db, nt, keys, col, ops):
+    rows = db.read().to_pylist()
+    want = _group_oracle(rows, keys, col, ops)
+    spec = {col: list(ops)} if col != "*" else {"*": "count"}
+    t = (db.query(load_config=LoadConfig(num_threads=nt))
+           .group_by(*keys).agg(spec).to_table())
+    assert t.num_rows == len(want)
+    got_rows = t.to_pylist()
+    for r in got_rows:
+        kv = tuple(_norm_key(r[k]) for k in keys)
+        assert kv in want, kv
+        for op in ops:
+            name = "count" if col == "*" else f"{col}_{op}"
+            got, exp = r[name], want[kv][op if col != "*" else "count"]
+            if isinstance(exp, float):
+                assert got == pytest.approx(exp), (kv, op)
+            else:
+                assert got == exp, (kv, op)
+
+
+def test_group_by_string_minmax(db):
+    rows = db.read().to_pylist()
+    want = _group_oracle(rows, ["opt"], "s", ["min", "max", "count"])
+    t = db.query().group_by("opt").agg({"s": ["min", "max", "count"]}) \
+          .to_table()
+    for r in t.to_pylist():
+        kv = (_norm_key(r["opt"]),)
+        assert r["s_min"] == want[kv]["min"]
+        assert r["s_max"] == want[kv]["max"]
+        assert r["s_count"] == want[kv]["count"]
+
+
+def test_group_by_order_limit(db):
+    t = (db.query().group_by("s").agg({"*": "count", "x": "min"})
+           .order_by("count", desc=True).order_by("s").limit(3).to_table())
+    assert t.num_rows == 3
+    counts = [r["count"] for r in t.to_pylist()]
+    assert counts == sorted(counts, reverse=True)
+
+
+def test_global_group(db):
+    """group_by() with no keys = one global group."""
+    t = db.query().group_by().agg({"x": ["sum", "count"]}).to_table()
+    assert t.num_rows == 1
+    agg = db.aggregate({"x": ["sum", "count"]})
+    r = t.to_pylist()[0]
+    assert r["x_sum"] == agg["x"]["sum"]
+    assert r["x_count"] == agg["x"]["count"]
+
+
+# ---------------------------------------------------------------------------
+# where-fusion, computed columns, distinct, order, limit/offset
+# ---------------------------------------------------------------------------
+def test_where_fusion_equals_combined(db):
+    a = db.query().where(field("x") >= 100).where(field("x") < 900) \
+          .select("x").to_table()
+    b = db.read(columns=["x"],
+                filters=[field("x") >= 100, field("x") < 900])
+    assert_tables_equal(a, b)
+    rep = db.query().where(field("x") >= 100).where(field("x") < 900) \
+            .explain()
+    filt = dict(rep.ops)["Filter"]
+    assert "2 predicates fused" in filt and "AND" in filt
+
+
+def test_computed_columns(db):
+    t = (db.query().where(field("x") < 10)
+           .select("x", "opt", double=field("x") * 2,
+                   ratio=field("opt") / 4, shifted=field("x") + 1 - 3)
+           .to_table())
+    for r in t.to_pylist():
+        assert r["double"] == r["x"] * 2
+        assert r["shifted"] == r["x"] - 2
+        if r["opt"] is None:
+            assert r["ratio"] is None  # null propagates
+        else:
+            assert r["ratio"] == pytest.approx(r["opt"] / 4)
+
+
+def test_computed_only_projection_keeps_inputs_out(db):
+    t = db.query().select("x", total=field("x") + field("opt")) \
+          .limit(4).to_table()
+    assert set(t.column_names) == {"x", "total"}  # opt not leaked
+
+
+def test_computed_agg_fallback(db):
+    """agg over a computed column aggregates the materialized output."""
+    q = db.query().where(field("x") < 100).select(d=field("x") * 2)
+    got = q.agg({"d": ["sum", "max"]})
+    rows = db.read(columns=["x"], filters=[field("x") < 100]).to_pylist()
+    assert got["d"]["sum"] == sum(2 * r["x"] for r in rows)
+    assert got["d"]["max"] == max(2 * r["x"] for r in rows)
+
+
+def test_distinct(db):
+    t = db.query().select("s").distinct().to_table()
+    legacy = db.read(columns=["s"]).to_pylist()
+    seen, want = set(), []
+    for r in legacy:
+        if r["s"] not in seen:
+            seen.add(r["s"])
+            want.append(r["s"])
+    assert t["s"].to_pylist() == want  # first occurrence, order kept
+
+
+@pytest.mark.parametrize("desc", [False, True])
+def test_order_by_stable_and_nulls_last(db, desc):
+    t = db.query().select("opt", "x").order_by("opt", desc=desc).to_table()
+    vals = t["opt"].to_pylist()
+    non_null = [v for v in vals if v is not None]
+    assert non_null == sorted(non_null, reverse=desc)
+    assert vals[len(non_null):] == [None] * (len(vals) - len(non_null))
+    # stable: ties keep scan (id) order
+    xs = t["x"].to_pylist()
+    by_val = {}
+    for v, x in zip(vals, xs):
+        by_val.setdefault(v, []).append(x)
+    for v, group in by_val.items():
+        assert group == sorted(group), f"ties for {v!r} reordered"
+
+
+def test_order_with_limit_matches_full_sort(db):
+    full = db.query().select("y", "x").order_by("y").to_table()
+    topk = db.query().select("y", "x").order_by("y").limit(17).offset(3) \
+             .to_table()
+    assert_tables_equal(topk, full.slice(3, 20))
+
+
+@pytest.mark.parametrize("nt", THREADS)
+def test_limit_offset_streaming(db, nt):
+    cfg = LoadConfig(num_threads=nt)
+    full = db.read(load_config=cfg)
+    got = db.query(load_config=cfg).limit(50).offset(25).to_table()
+    assert_tables_equal(got, full.slice(25, 75))
+    assert db.query(load_config=cfg).limit(0).to_table().num_rows == 0
+
+
+def test_offset_past_end_is_empty(db):
+    """Regression: offset beyond the result must not crash var-len slices."""
+    n = db.read().num_rows
+    for q in (db.query().select("s", "x").offset(n + 50),
+              db.query().select("s").order_by("s").offset(n + 50),
+              db.query().group_by("s").agg({"*": "count"}).offset(99)):
+        t = q.to_table()
+        assert t.num_rows == 0
+    assert db.query().select("s").offset(n - 2).to_table().num_rows == 2
+
+
+def test_multikey_group_codes_no_overflow(tmp_path):
+    """Regression: many near-unique keys must not overflow the mixed-radix
+    combination (int64 wrap silently corrupted key tuples)."""
+    db = ParquetDB(os.path.join(str(tmp_path), "wide"))
+    n = 5000
+    rows = [{"a": i, "b": (i * 7919) % n, "c": (i * 104729) % n,
+             "d": (i * 1299709) % n} for i in range(n)]
+    db.create(rows)
+    t = db.query().group_by("a", "b", "c", "d").agg({"*": "count"}) \
+          .to_table()
+    assert t.num_rows == n
+    want = {(r["a"], r["b"], r["c"], r["d"]) for r in rows}
+    got = {(r["a"], r["b"], r["c"], r["d"]) for r in t.to_pylist()}
+    assert got == want
+    assert all(r["count"] == 1 for r in t.to_pylist())
+
+
+def test_agg_projection_consistent_between_paths(db):
+    """A projection never hides physical columns from agg — with or
+    without a limit (fast path vs materialized fallback)."""
+    fast = db.query().select("s").agg({"x": ["min", "max"]})
+    big = db.read().num_rows + 10
+    slow = db.query().select("s").limit(big).agg({"x": ["min", "max"]})
+    assert fast == slow
+    # distinct() restricts the spec to the distinct output columns
+    with pytest.raises(KeyError):
+        db.query().select("s").distinct().agg({"x": "min"})
+
+
+def test_dropped_computed_is_pruned(db):
+    q = db.query().select(c=field("x") + 1).select("s")
+    cp = q._compile()
+    assert cp.computed == [] and "x" not in cp.scan_cols
+    assert q.limit(3).to_table().column_names == ["s"]
+
+
+def test_count(db):
+    n_all = db.read().num_rows
+    assert db.query().count() == n_all
+    expr = field("x") < 500
+    assert db.query().where(expr).count() == \
+        db.read(filters=[expr]).num_rows
+    assert db.query().limit(10).count() == 10
+    assert db.query().offset(n_all - 3).count() == 3
+    assert db.query().select("s").distinct().count() == 5
+
+
+def test_to_pylist_and_iter_batches_terminal(db):
+    q = db.query().where(field("x") < 130).select("x")
+    assert q.to_pylist() == q.to_table().to_pylist()
+    chunks = list(q.iter_batches(batch_size=7))
+    assert all(c.num_rows <= 7 for c in chunks)
+    assert sum(c.num_rows for c in chunks) == q.count()
+
+
+# ---------------------------------------------------------------------------
+# limit pushdown: early-terminating scans (fig7-style needle)
+# ---------------------------------------------------------------------------
+def test_limit_terminates_scan_early(db):
+    cfg = LoadConfig(use_threads=False)  # deterministic decode counters
+    full = db.query(load_config=cfg).select("x").explain(execute=True)
+    lim = db.query(load_config=cfg).select("x").limit(10) \
+            .explain(execute=True)
+    assert lim.counters.rows_scanned < full.counters.rows_scanned / 2
+    assert lim.counters.pages_scanned < full.counters.pages_scanned / 2
+    # the planned read set is identical — only execution stopped early
+    assert lim.counters.row_groups_total == full.counters.row_groups_total
+
+
+def test_needle_limit_decodes_less_than_full_needle_scan(db):
+    """fig7 shape: selective filter; limit(1) stops after the first hit."""
+    cfg = LoadConfig(use_threads=False)
+    expr = field("s") == "k2"  # matches in every row group
+    full = db.query(load_config=cfg).where(expr).select("x") \
+             .explain(execute=True)
+    lim = db.query(load_config=cfg).where(expr).select("x").limit(1) \
+            .explain(execute=True)
+    assert lim.counters.rows_scanned < full.counters.rows_scanned
+    assert lim.executed and str(lim)  # renders
+
+
+# ---------------------------------------------------------------------------
+# plan-build-time validation
+# ---------------------------------------------------------------------------
+def test_unknown_columns_raise_clear_keyerror(db):
+    with pytest.raises(KeyError, match=r"typo.*schema columns"):
+        db.read(columns=["typo"])
+    with pytest.raises(KeyError, match=r"typo.*schema columns"):
+        db.query().select("typo")
+    with pytest.raises(KeyError, match=r"typo.*schema columns"):
+        db.query().where(field("typo") > 1)
+    with pytest.raises(KeyError, match=r"typo.*schema columns"):
+        db.query().group_by("typo")
+    with pytest.raises(KeyError, match="order_by"):
+        db.query().select("x").order_by("y")
+    with pytest.raises(KeyError):
+        db.query().group_by("s").agg({"typo": "sum"})
+
+
+def test_bool_columns_do_integer_arithmetic(tmp_path):
+    db = ParquetDB(os.path.join(str(tmp_path), "b"))
+    db.create([{"p": True, "q": False}, {"p": True, "q": True}])
+    t = db.query().select(s=field("p") + field("q"),
+                          d=field("p") - field("q"),
+                          m=field("p") * 3).to_table()
+    rows = t.to_pylist()
+    assert [r["s"] for r in rows] == [1, 2]
+    assert [r["d"] for r in rows] == [1, 0]
+    assert [r["m"] for r in rows] == [3, 3]
+
+
+def test_where_select_distinct_rejected_after_window(db):
+    with pytest.raises(ValueError, match="before order_by"):
+        db.query().limit(3).where(field("x") > 5)
+    with pytest.raises(ValueError, match="before order_by"):
+        db.query().order_by("x").select("x")
+    with pytest.raises(ValueError, match="before order_by"):
+        db.query().offset(1).distinct()
+
+
+def test_grouped_count_star_scans_id_column(db):
+    cp = (db.query().group_by().agg({"*": "count"}))._compile()
+    assert cp.scan_cols == ["id"]
+
+
+def test_builder_shape_errors(db):
+    with pytest.raises(ValueError, match="precede"):
+        db.query().group_by("s").agg({"*": "count"}).where(field("x") > 1)
+    with pytest.raises(ValueError, match="precede"):
+        db.query().group_by("s").agg({"*": "count"}).select("s")
+    with pytest.raises(ValueError, match="before"):
+        db.query().limit(3).group_by("s")
+    with pytest.raises(TypeError, match="value expression"):
+        db.query().select(bad=field("x") > 1)  # predicate, not value
+    with pytest.raises(TypeError, match="Expr"):
+        db.query().where("x > 1")
+    with pytest.raises(ValueError):
+        db.query().limit(-1)
+
+
+def test_query_is_immutable(db):
+    q = db.query().where(field("x") < 100)
+    q2 = q.select("x")
+    q3 = q.limit(1)
+    assert q._select is None and q._limit is None
+    assert q2._select == ["x"] and q3._limit == 1
+    assert q.count() == db.read(filters=[field("x") < 100]).num_rows
+
+
+# ---------------------------------------------------------------------------
+# SQL-ish Expr reprs (used by ScanReport / Query.explain)
+# ---------------------------------------------------------------------------
+def test_expr_reprs_are_sqlish():
+    e = (field("a") > 1) & ((field("b") == "x") | ~field("c").is_null())
+    assert repr(e) == \
+        "((a > 1) AND ((b == 'x') OR (NOT (c IS NULL))))"
+    assert repr(IsNull("c", negate=True)) == "(c IS NOT NULL)"
+    assert repr(IsIn("k", [1, 2])) == "(k IN (1, 2))"
+    assert repr(field("x") * 2 + 1) == "((x * 2) + 1)"
+    assert isinstance(field("x") + field("y"), Arith)
+
+
+def test_explain_tree_structure(db):
+    rep = (db.query().where(field("x") > 10).select("x", d=field("x") * 2)
+             .order_by("x").limit(5).explain())
+    ops = [o for o, _ in rep.ops]
+    assert ops == ["Limit", "OrderBy", "Project", "Filter"]
+    s = str(rep)
+    assert "ScanPlan" in s and "Limit" in s
+    d = rep.to_dict()
+    assert d["executed"] is False and "scan" in d
+    grep = db.query().group_by("s").agg({"x": "mean"}).explain()
+    assert "Aggregate" in [o for o, _ in grep.ops]
+
+
+# ---------------------------------------------------------------------------
+# Dataset.iter_batches matrix (satellite): batch_size x deltas x threads
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nt", THREADS)
+@pytest.mark.parametrize("batch_size", [1, 64, 100, 333, 10_000])
+def test_dataset_iter_batches_matrix(db, nt, batch_size):
+    cfg = LoadConfig(num_threads=nt)
+    ds = db.read(columns=["x", "opt"], filters=[field("x") >= 0],
+                 load_format="dataset", load_config=cfg)
+    want = ds.to_table()
+    batches = list(ds.iter_batches(batch_size=batch_size))
+    assert all(b.num_rows <= batch_size for b in batches)
+    # exact batch boundaries except the tail
+    assert all(b.num_rows == batch_size for b in batches[:-1])
+    got_x = [v for b in batches for v in b["x"].to_pylist()]
+    # no duplicate/lost rows at morsel boundaries, order preserved
+    assert got_x == want["x"].to_pylist()
+    got_opt = [v for b in batches for v in b["opt"].to_pylist()]
+    assert got_opt == want["opt"].to_pylist()
+
+
+@pytest.mark.parametrize("nt", [None, 2])
+def test_dataset_iter_batches_across_morsel_boundaries(tmp_path, nt,
+                                                       monkeypatch):
+    """Tiny forced morsels: batches must tile the scan exactly."""
+    monkeypatch.setattr(scan_mod, "MORSEL_ROWS", 150)
+    db = _mkdb(os.path.join(str(tmp_path), "m"), deltas=True)
+    cfg = LoadConfig(num_threads=nt)
+    ds = db.read(load_format="dataset", load_config=cfg)
+    want = db.read(load_config=LoadConfig(num_threads=1))
+    for bs in (37, 256):
+        ids = [v for b in ds.iter_batches(batch_size=bs)
+               for v in b["id"].to_pylist()]
+        assert ids == want["id"].to_pylist()
+        assert len(ids) == len(set(ids))
+
+
+def test_query_iter_batches_with_limit_stops_early(db):
+    cfg = LoadConfig(use_threads=False)
+    q = db.query(load_config=cfg).select("x").limit(30)
+    batches = list(q.iter_batches(batch_size=8))
+    assert sum(b.num_rows for b in batches) == 30
+    full = db.query(load_config=cfg).select("x").to_table()
+    got = [v for b in batches for v in b["x"].to_pylist()]
+    assert got == full["x"].to_pylist()[:30]
