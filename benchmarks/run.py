@@ -42,6 +42,9 @@ def write_json_artifact(directory: str, suite: str, scale: str,
         "unit": "us_per_call (median-of-k for read/needle paths)",
         "machine": platform.machine(),
         "python": platform.python_version(),
+        # scaling gates (check_perf SCALING_GATES) only make sense when
+        # the recording box actually had the cores: stamp the count
+        "cpus": os.cpu_count(),
         "generated_unix": int(time.time()),
         "rows": rows,
     }

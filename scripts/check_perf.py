@@ -9,6 +9,12 @@ the headline paths:
 - fig11 agg     (stats-answered aggregates, zero pages decoded)
 - fig11 mtread  (morsel-parallel full read-scan at num_threads=2)
 
+Additionally ``SCALING_GATES`` asserts self-relative scaling laws on the
+current run alone — e.g. ``fig11 mt4-read`` requires mt4 >= 3x mt1 on the
+zlib-compressed (GIL-releasing) fixture — but only when the artifact's
+``cpus`` field says the recording box had enough cores (skipped loudly
+otherwise, so a 2-core runner never fails a 4-core scaling law).
+
 Raw wall-clock is not portable across CI machines, so each ParquetDB timing
 is normalized by the SQLite timing *from the same run* (same machine, same
 load); the gate trips when the normalized ratio regresses more than
@@ -43,22 +49,45 @@ GATES = [
     ("fig11 mtread", "fig11/mt-read/parquetdb/", "fig11/mt-read/sqlite/"),
 ]
 
+# Self-relative scaling gates on the *current* run only:
+# (label, fast row prefix, slow row prefix, required speedup, min cpus).
+# Unlike GATES these don't compare against the baseline — they assert a
+# scaling law that must hold wherever the hardware permits, and are
+# skipped (loudly) when the artifact records fewer than ``min cpus``,
+# because a speedup measured on a starved box is noise, not signal.
+SCALING_GATES = [
+    # fused morsel decode over GIL-releasing zlib inflate: 4 scan workers
+    # must deliver >= 3x over 1 worker on the compressed fixture
+    ("fig11 mt4-read", "fig11/read-scan-zlib-mt4/parquetdb/",
+     "fig11/read-scan-zlib-mt1/parquetdb/", 3.0, 4),
+]
+
 
 def _rows(doc: dict) -> dict:
     return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
 
 
-def _load_rows(path: str) -> dict:
+def _load_rows(path: str) -> tuple:
+    """-> (rows, cpus-or-None) from one BENCH json artifact."""
     with open(path) as fh:
-        return _rows(json.load(fh))
+        doc = json.load(fh)
+    return _rows(doc), doc.get("cpus")
 
 
-def _load_dir(directory: str) -> dict:
+def _load_dir(directory: str) -> tuple:
+    """-> (rows, cpus-or-None) merged over a BENCH_*.json directory.
+
+    ``cpus`` is the minimum recorded across artifacts (they normally come
+    from one run of one machine, so this is just defensive)."""
     rows: dict = {}
+    cpus = None
     for fn in sorted(os.listdir(directory)):
         if fn.startswith("BENCH_") and fn.endswith(".json"):
-            rows.update(_load_rows(os.path.join(directory, fn)))
-    return rows
+            r, c = _load_rows(os.path.join(directory, fn))
+            rows.update(r)
+            if c is not None:
+                cpus = c if cpus is None else min(cpus, c)
+    return rows, cpus
 
 
 def _n_of(name: str) -> int:
@@ -92,9 +121,9 @@ def main(argv=None) -> int:
     ap.add_argument("--factor", type=float, default=2.0)
     args = ap.parse_args(argv)
 
-    base = (_load_dir(args.baseline) if os.path.isdir(args.baseline)
-            else _load_rows(args.baseline))
-    cur = _load_dir(args.current)
+    base, _ = (_load_dir(args.baseline) if os.path.isdir(args.baseline)
+               else _load_rows(args.baseline))
+    cur, cur_cpus = _load_dir(args.current)
     failures = []
     for label, pdb_p, ref_p in GATES:
         n = _common_largest_n(base, cur, pdb_p, ref_p)
@@ -112,6 +141,24 @@ def main(argv=None) -> int:
             failures.append(
                 f"{label}: normalized time {cratio:.3f} exceeds "
                 f"{args.factor:.1f}x baseline {bratio:.3f}")
+    for label, fast_p, slow_p, need, min_cpus in SCALING_GATES:
+        ns = _ns_of(cur, fast_p) & _ns_of(cur, slow_p)
+        if not ns:
+            failures.append(f"{label}: current run has no n with both "
+                            f"{fast_p} and {slow_p} rows")
+            continue
+        n = max(ns)
+        if cur_cpus is None or cur_cpus < min_cpus:
+            print(f"{label:12s} n={n}  SKIPPED (artifact cpus={cur_cpus}, "
+                  f"scaling gate needs >= {min_cpus})")
+            continue
+        got = cur[f"{slow_p}n={n}"] / cur[f"{fast_p}n={n}"]
+        verdict = "OK" if got >= need else "REGRESSED"
+        print(f"{label:12s} n={n}  speedup={got:.2f}x  "
+              f"required>={need:.1f}x  cpus={cur_cpus}  {verdict}")
+        if verdict != "OK":
+            failures.append(f"{label}: mt4 speedup {got:.2f}x is below the "
+                            f"required {need:.1f}x (cpus={cur_cpus})")
     if failures:
         print("PERF GATE FAILED:\n  " + "\n  ".join(failures),
               file=sys.stderr)

@@ -488,19 +488,18 @@ class TPQReader:
                 if (sels is None and len(idxs) > 1
                         and dtype.kind == KIND_NUMERIC
                         and not any("validity" in pages[j] for j in idxs)):
-                    # decode page-by-page into one preallocated chunk array
-                    # (skips the per-page temporaries + concat copy)
-                    be = active_backend()
+                    # fused morsel decode: ONE batched backend dispatch per
+                    # encoding group instead of one Python-level decode per
+                    # page — the GIL-convoy fix for parallel scans (and it
+                    # still skips the per-page temporaries + concat copy)
                     total = sum(pages[j]["rows"] for j in idxs)
                     out = np.empty(total, dtype.np)
-                    pos = 0
+                    specs = []
                     for j in idxs:
                         b = pages[j]["values"]
-                        rows_j = pages[j]["rows"]
-                        be.decode(b["enc"], b.get("meta", {}), self._get(b),
-                                  b["count"], dtype.np,
-                                  out=out[pos:pos + rows_j])
-                        pos += rows_j
+                        specs.append((b["enc"], b.get("meta", {}),
+                                      self._get(b), b["count"]))
+                    active_backend().decode_batch(specs, dtype.np, out=out)
                     return Column(dtype, values=out)
                 pieces = [self._read_column_page(
                     pages[j], dtype,

@@ -43,6 +43,21 @@ lost to a data race.  ``num_threads=1`` (or ``use_threads=False``) falls
 back to the serial path with the classic readahead thread
 (:func:`prefetch`).
 
+**Process executor.**  Threads only overlap while the GIL is released
+(codec decompression); raw and entropy-coded pages decode in pure numpy
+*under* the GIL, where a thread pool convoys.  ``LoadConfig.executor=
+"process"`` decodes morsels on a shared spawn-context
+:class:`~concurrent.futures.ProcessPoolExecutor` instead: workers run the
+*decode half* of a morsel (prune → pushdown → decode) against their own
+stat-validated reader cache and ship results back through one
+shared-memory segment per morsel (:mod:`repro.core.shm`, pickle-5
+out-of-band buffers); the parent runs the *finish half* (overlay,
+residual filter, ``map_fn``) and the same order-preserving bounded merge,
+so output is byte-identical to the serial scan.  The default
+``executor=None`` is AUTO: the footer's codec split picks threads for
+codec-compressed read sets and processes for GIL-bound ones big enough to
+amortize worker spawn (``PROCESS_MIN_ROWS``).
+
 **Merge-on-read deltas.**  A manifest may carry a chain of delta files
 (:class:`repro.core.transactions.DeltaEntry`) — *upsert* files holding
 full-width replacement rows and *tombstone* files holding deleted ids.
@@ -67,15 +82,19 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
+import multiprocessing
 import os
 import queue
 import threading
-from concurrent.futures import ThreadPoolExecutor
+import warnings
+from concurrent.futures import (BrokenExecutor, ProcessPoolExecutor,
+                                ThreadPoolExecutor)
 from typing import (Any, Callable, Dict, Generator, Iterable, List, Optional,
                     Sequence, Tuple)
 
 import numpy as np
 
+from . import shm
 from .expressions import Expr
 from .fileformat import TPQReader, page_codec_split
 from .schema import ID_COLUMN, Schema
@@ -84,7 +103,8 @@ from .transactions import DELTA_TOMBSTONE, DeltaEntry
 
 __all__ = ["ScanCounters", "FragmentPlan", "ScanReport", "ScanPlan",
            "DeltaOverlay", "file_may_match", "prefetch", "scan_pool",
-           "resolve_num_threads", "MORSEL_ROWS"]
+           "process_scan_pool", "resolve_num_threads", "MORSEL_ROWS",
+           "PROCESS_MIN_ROWS"]
 
 # Target rows per morsel: small enough that a handful of fragments yields
 # enough parallelism, large enough that per-task overhead (submit, counter
@@ -93,9 +113,24 @@ __all__ = ["ScanCounters", "FragmentPlan", "ScanReport", "ScanPlan",
 # two-phase decode and selection vectors all operate per row group).
 MORSEL_ROWS = 65_536
 
+# AUTO executor selection sends GIL-bound scans to worker *processes* only
+# past this many planned rows: below it the spawn + result-shipping constant
+# outweighs what the GIL convoy costs.
+PROCESS_MIN_ROWS = 200_000
+
+# multiprocessing start method for the scan workers.  "spawn" by default:
+# fork would duplicate whatever threads/jax state the parent holds (a
+# classic deadlock with the shared thread pool warm); override for
+# experiments via the environment.
+ENV_MP_CONTEXT = "REPRO_SCAN_MP_CONTEXT"
+
 _POOL_LOCK = threading.Lock()
 _POOL: Optional[ThreadPoolExecutor] = None
 _POOL_WORKERS = 0
+
+_PPOOL_LOCK = threading.Lock()
+_PPOOL: Optional[ProcessPoolExecutor] = None
+_PPOOL_WORKERS = 0
 
 
 def resolve_num_threads(cfg) -> int:
@@ -133,6 +168,98 @@ def scan_pool(num_threads: int) -> ThreadPoolExecutor:
                                        thread_name_prefix="tpq-scan")
             _POOL_WORKERS = num_threads
     return _POOL
+
+
+def _ensure_child_import_path() -> None:
+    """Make ``repro`` importable in spawned workers.
+
+    Spawn children resolve :func:`_process_morsel` by qualified name, so the
+    package root must be on *their* ``sys.path``; when the parent imported
+    it off a source tree (tests, benchmarks) rather than site-packages, the
+    child only inherits that via ``PYTHONPATH``.  Prepending is idempotent.
+    """
+    root = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    pp = os.environ.get("PYTHONPATH", "")
+    parts = pp.split(os.pathsep) if pp else []
+    if root not in parts:
+        os.environ["PYTHONPATH"] = os.pathsep.join([root] + parts)
+
+
+def process_scan_pool(num_workers: int) -> ProcessPoolExecutor:
+    """The shared morsel worker *process* pool, grown to >= ``num_workers``.
+
+    Same grow-only contract as :func:`scan_pool` (an in-flight scan that
+    cached a smaller pool keeps it; growth is monotonic so at most a
+    handful ever exist), but workers are spawn-context processes — each
+    decodes with its own GIL, which is the whole point: entropy-coded and
+    raw pages decode in pure Python/numpy and convoy on a thread pool.
+    Workers are started lazily by the executor on first submit and are
+    reaped by ``concurrent.futures``'s atexit hook, so a completed scan
+    leaves idle workers, never orphans.
+    """
+    global _PPOOL, _PPOOL_WORKERS
+    with _PPOOL_LOCK:
+        # a pool whose workers died (BrokenProcessPool) rejects every
+        # future submit — replace it instead of caching the corpse
+        broken = _PPOOL is not None and getattr(_PPOOL, "_broken", False)
+        if _PPOOL is None or broken or _PPOOL_WORKERS < num_workers:
+            _ensure_child_import_path()
+            ctx = multiprocessing.get_context(
+                os.environ.get(ENV_MP_CONTEXT, "spawn"))
+            _PPOOL = ProcessPoolExecutor(max_workers=num_workers,
+                                         mp_context=ctx)
+            _PPOOL_WORKERS = num_workers
+    return _PPOOL
+
+
+def _warn_broken_pool(state: dict) -> None:
+    """Flag a scan as degraded (once) when its process pool dies."""
+    if not state["broken"]:
+        state["broken"] = True
+        warnings.warn(
+            "scan process pool broke mid-scan (worker died — commonly a "
+            "script using executor='process' without an "
+            "`if __name__ == '__main__':` guard under the spawn start "
+            "method); finishing this scan with inline decode",
+            RuntimeWarning, stacklevel=3)
+
+
+# Per-process reader cache for morsel workers, validated by (size,
+# mtime_ns): data files are immutable-by-name within a dataset generation,
+# but a worker can outlive many scans, so stale paths must re-open.
+_WORKER_READERS: Dict[str, tuple] = {}
+_WORKER_READERS_MAX = 64
+
+
+def _worker_reader(path: str) -> TPQReader:
+    st = os.stat(path)
+    sig = (st.st_size, st.st_mtime_ns)
+    hit = _WORKER_READERS.get(path)
+    if hit is None or hit[0] != sig:
+        hit = (sig, TPQReader(path))
+        _WORKER_READERS[path] = hit
+        if len(_WORKER_READERS) > _WORKER_READERS_MAX:
+            _WORKER_READERS.pop(next(iter(_WORKER_READERS)))
+    return hit[1]
+
+
+def _process_morsel(path: str, row_groups: tuple, columns: tuple,
+                    expr: Optional[Expr]) -> shm.Envelope:
+    """Decode one morsel inside a worker process (the *decode half*).
+
+    Runs page pruning, pushdown filtering and decode exactly like a thread
+    worker; overlay substitution, residual filters and ``map_fn`` stay in
+    the parent (closures and overlay state don't cross a pickle boundary).
+    The decoded tables + morsel-local counters ship back through
+    :mod:`repro.core.shm` as one out-of-band envelope.
+    """
+    local = ScanCounters()
+    rd = _worker_reader(path)
+    tables = list(rd.iter_row_group_tables(list(columns), expr,
+                                           row_groups=list(row_groups),
+                                           counters=local))
+    return shm.pack((tables, local))
 
 
 @dataclasses.dataclass
@@ -442,6 +569,10 @@ class ScanPlan:
         self._use_threads = bool(getattr(cfg, "use_threads", True))
         self._readahead = int(getattr(cfg, "fragment_readahead", 4))
         self._num_threads = resolve_num_threads(cfg)
+        self._executor = getattr(cfg, "executor", None)
+        if self._executor not in (None, "thread", "process"):
+            raise ValueError(f"unknown scan executor {self._executor!r} "
+                             "(expected 'thread', 'process' or None)")
         # num_threads=None is "auto": size from cpu_count but only engage
         # the pool when the decode work can actually overlap (see
         # _parallel_profitable); an explicit thread count always engages.
@@ -560,9 +691,10 @@ class ScanPlan:
         self.last_counters = counters
 
         morsels = self._morsels()
-        parallel = self._num_threads > 1 and len(morsels) > 1 \
-            and (not self._threads_auto or self._parallel_profitable())
-        if parallel:
+        mode = self._choose_executor(morsels)
+        if mode == "process":
+            stream = self._execute_process(morsels, counters, map_fn)
+        elif mode == "thread":
             stream = self._execute_parallel(morsels, counters, map_fn)
         else:
             def pieces() -> Generator[Any, None, None]:
@@ -603,6 +735,32 @@ class ScanPlan:
                 out.append((frag, run))
         return out
 
+    def _choose_executor(self, morsels) -> str:
+        """Pick the execution strategy: ``serial`` / ``thread`` / ``process``.
+
+        An explicit ``LoadConfig.executor`` wins.  AUTO consults the
+        footer's codec split (:func:`page_codec_split`): codec-compressed
+        read sets go to the shared *thread* pool (zlib &c release the GIL,
+        so decode genuinely overlaps); GIL-bound read sets (raw or
+        entropy-coded pages, which decode in pure numpy under the GIL and
+        would convoy on threads) go to the *process* pool when the scan is
+        big enough to amortize worker spawn (``PROCESS_MIN_ROWS``).  Either
+        way the output stays byte-identical — only wall-clock changes.
+        """
+        if self._num_threads <= 1 or len(morsels) <= 1:
+            return "serial"
+        if self._executor is not None:
+            return self._executor
+        if self._parallel_profitable():
+            return "thread"
+        rows = 0
+        for frag, rgs in morsels:
+            rd = self._reader_of(frag.file)
+            rows += sum(rd.row_group_num_rows(i) for i in rgs)
+        if rows >= PROCESS_MIN_ROWS:
+            return "process"
+        return "serial" if self._threads_auto else "thread"
+
     def _parallel_profitable(self) -> bool:
         """Footer-only heuristic for auto mode: will threads overlap?
 
@@ -611,8 +769,7 @@ class ScanPlan:
         (zlib/&c release it; raw and entropy-coded buffers decode under
         the GIL, where extra threads just convoy).  Sample the first
         surviving row group's read set: go parallel when at least half of
-        its stored bytes are codec-compressed.  An explicit
-        ``num_threads`` bypasses this entirely.
+        its stored bytes are codec-compressed.
         """
         for frag in self._fragments:
             if not frag.row_groups:
@@ -671,30 +828,130 @@ class ScanPlan:
             for fut in inflight:
                 fut.cancel()
 
-    def _fragment_tables(self, frag: FragmentPlan, counters: ScanCounters,
-                         row_groups: Optional[List[int]] = None
-                         ) -> Generator[Table, None, None]:
+    def _execute_process(self, morsels, counters: ScanCounters,
+                         map_fn: Optional[Callable[[Table], Any]] = None
+                         ) -> Generator[Any, None, None]:
+        """Decode morsels in worker *processes*; finish + merge in the parent.
+
+        Workers run only the decode half (:func:`_process_morsel`); the
+        parent applies the finish half (:meth:`_finish_table`) — overlay
+        substitution, residual filter, ``map_fn`` — and merges counters
+        single-threaded, so results are byte-identical to the serial and
+        thread paths, order included.  Three failure modes are handled:
+
+        - a racing compaction GC'd a base file after planning: the worker's
+          open raises ``FileNotFoundError`` and the parent decodes that
+          morsel inline off its still-cached mapping (same bytes — data
+          files are immutable);
+        - the pool itself breaks mid-scan (``BrokenProcessPool`` — e.g. a
+          spawn child of a ``__main__``-guard-less user script dies
+          bootstrapping, or a worker is OOM-killed): the scan degrades to
+          inline decode for the remaining morsels instead of raising,
+          with a one-line warning (:func:`process_scan_pool` also swaps
+          out a broken cached pool, so the *next* scan gets fresh
+          workers);
+        - early termination (``limit`` satisfied, generator closed): the
+          ``finally`` cancels queued morsels and *drains* already-running
+          ones through :func:`shm.discard`, so no worker is orphaned
+          mid-result and no shared-memory segment outlives the scan
+          (``shm.live_segments()`` stays empty — regression-tested).
+        """
+        pool = process_scan_pool(self._num_threads)
+        max_inflight = self._num_threads + max(self._readahead, 1)
+        state = {"broken": False}
+
+        def submit(frag: FragmentPlan, rgs: List[int]):
+            if not state["broken"]:
+                rd = self._reader_of(frag.file)
+                have = set(rd.schema.names)
+                cols = tuple(n for n in self._read_schema.names if n in have)
+                expr = self._expr if frag.pushdown else None
+                try:
+                    return (pool.submit(_process_morsel, rd.path, tuple(rgs),
+                                        cols, expr), frag, rgs)
+                except BrokenExecutor:
+                    _warn_broken_pool(state)
+            return (None, frag, rgs)  # degraded: decode inline on arrival
+
+        it = iter(morsels)
+        inflight: "collections.deque" = collections.deque(
+            submit(frag, rgs)
+            for frag, rgs in itertools.islice(it, max_inflight))
+        try:
+            while inflight:
+                fut, frag, rgs = inflight.popleft()
+                try:
+                    if fut is None:
+                        raise BrokenExecutor
+                    tables, local = shm.unpack(fut.result())
+                except FileNotFoundError:
+                    local = ScanCounters()
+                    tables = list(self._decode_tables(frag, local, rgs))
+                except BrokenExecutor:
+                    _warn_broken_pool(state)
+                    local = ScanCounters()
+                    tables = list(self._decode_tables(frag, local, rgs))
+                counters.merge_from(local)  # single-threaded merge point
+                nxt = next(it, None)
+                if nxt is not None:
+                    inflight.append(submit(*nxt))
+                for t in tables:
+                    t = self._finish_table(t, frag, counters)
+                    if t is not None:
+                        yield t if map_fn is None else map_fn(t)
+        finally:
+            for fut, _, _ in inflight:
+                if fut is not None and not fut.cancel():
+                    try:
+                        shm.discard(fut.result())
+                    except Exception:
+                        pass
+
+    def _decode_tables(self, frag: FragmentPlan, counters: ScanCounters,
+                       row_groups: Optional[List[int]] = None
+                       ) -> Generator[Table, None, None]:
+        """The decode half: prune, pushdown-filter and decode one morsel.
+
+        Worker-safe given any reader handle — this is exactly what
+        :func:`_process_morsel` runs in a worker process.
+        """
         rd = self._reader_of(frag.file)
         have = set(rd.schema.names)
         cols_here = [n for n in self._read_schema.names if n in have]
         pushdown = self._expr if frag.pushdown else None
-        ov = self._overlay()
         rgs = frag.row_groups if row_groups is None else row_groups
-        for t in rd.iter_row_group_tables(cols_here, pushdown,
-                                          row_groups=rgs,
-                                          counters=counters):
-            t = t.align_to_schema(self._read_schema)
-            if ov is not None and ov.has_work:
-                # merge-on-read: substitute upserts in place, drop dead rows
-                # *before* the residual filter so it sees merged values
-                t = ov.apply(t, counters)
-            if self._expr is not None and pushdown is None:
-                mask = self._expr.evaluate(t)
-                if not mask.all():
-                    t = t.filter_mask(mask)
-            if t.num_rows:
-                counters.rows_matched += t.num_rows
-                yield t.select(self._out_schema.names)
+        return rd.iter_row_group_tables(cols_here, pushdown, row_groups=rgs,
+                                        counters=counters)
+
+    def _finish_table(self, t: Table, frag: FragmentPlan,
+                      counters: ScanCounters) -> Optional[Table]:
+        """The finish half: align, overlay, residual-filter, project.
+
+        Holds all the state that cannot cross a process boundary (the
+        resolved overlay, the residual ``Expr`` against merged values).
+        """
+        t = t.align_to_schema(self._read_schema)
+        ov = self._overlay()
+        if ov is not None and ov.has_work:
+            # merge-on-read: substitute upserts in place, drop dead rows
+            # *before* the residual filter so it sees merged values
+            t = ov.apply(t, counters)
+        if self._expr is not None and not frag.pushdown:
+            mask = self._expr.evaluate(t)
+            if not mask.all():
+                t = t.filter_mask(mask)
+        if t.num_rows:
+            counters.rows_matched += t.num_rows
+            return t.select(self._out_schema.names)
+        return None
+
+    def _fragment_tables(self, frag: FragmentPlan, counters: ScanCounters,
+                         row_groups: Optional[List[int]] = None
+                         ) -> Generator[Table, None, None]:
+        for t in self._decode_tables(frag, counters, row_groups):
+            t = self._finish_table(t, frag, counters)
+            if t is not None:
+                yield t
 
     def _bytes_accounting(self) -> tuple:
         """(bytes_total, bytes_selected) — footer walk, lazy: explain() only.

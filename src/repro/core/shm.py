@@ -1,0 +1,162 @@
+"""Shared-memory result transport for the process-pool scan executor.
+
+A morsel decoded in a worker process has to reach the parent somehow; the
+default ``ProcessPoolExecutor`` path pickles everything through a pipe,
+which re-serializes every decoded buffer byte.  Here the *structure* of the
+result (tables, schemas, counters) still travels the pipe — it is tiny —
+but the decoded column buffers go out-of-band (pickle protocol 5
+``buffer_callback``) into ONE POSIX shared-memory segment per morsel, which
+the parent maps, copies out of, and unlinks.
+
+Ownership protocol (CPython <= 3.12 registers a segment with the process's
+``resource_tracker`` on *attach* as well as on create — bpo-39959 — so both
+sides unregister and lifetime is managed explicitly here):
+
+- the worker creates the segment, unregisters it from the tracker, and
+  closes its mapping: from then on the segment is owned by its *name*,
+  carried in the pickled envelope;
+- the parent attaches (which re-registers — the tracker then doubles as a
+  crash backstop while the parent holds the mapping), copies the buffers
+  out, then closes **and unlinks** — exactly once, in ``unpack`` or
+  ``discard``; stdlib ``unlink()`` itself issues the balancing
+  unregister, so the parent must *not* unregister manually (that would
+  double-remove and crash the tracker's cache bookkeeping);
+- every create/attach is recorded in a per-process registry;
+  :func:`live_segments` exposes it (tests assert emptiness after scans and
+  after early termination) and an ``atexit`` hook unlinks stragglers so an
+  interpreter bug can never leak kernel objects past process exit.
+
+Small results skip shared memory entirely (``REPRO_SHM_MIN_BYTES``, default
+256 KiB: below that the pipe copy is cheaper than two syscalls + mmap).
+"""
+from __future__ import annotations
+
+import atexit
+import os
+import pickle
+import warnings
+from multiprocessing import resource_tracker, shared_memory
+from typing import Any, List, Optional, Tuple
+
+__all__ = ["pack", "unpack", "discard", "live_segments", "shm_min_bytes",
+           "Envelope"]
+
+ENV_MIN_BYTES = "REPRO_SHM_MIN_BYTES"
+_DEFAULT_MIN_BYTES = 256 * 1024
+
+# name -> SharedMemory mappings this process has open and is responsible
+# for; names created here but handed off (worker side) leave the registry
+# at hand-off, so a non-empty registry at exit means a genuine leak.
+_OPEN: dict = {}
+
+
+def shm_min_bytes() -> int:
+    try:
+        return int(os.environ.get(ENV_MIN_BYTES, _DEFAULT_MIN_BYTES))
+    except ValueError:
+        return _DEFAULT_MIN_BYTES
+
+
+def _untrack(seg: shared_memory.SharedMemory) -> None:
+    """Keep this process's resource_tracker out of the segment's lifetime."""
+    try:
+        resource_tracker.unregister(seg._name, "shared_memory")
+    except Exception:  # pragma: no cover - tracker already gone at shutdown
+        pass
+
+
+# (pickle bytes, out-of-band buffers or None, segment name or None)
+Envelope = Tuple[bytes, Optional[List[bytes]], Optional[str]]
+
+
+def pack(obj: Any) -> Envelope:
+    """Worker side: pickle ``obj`` with its big buffers out-of-band.
+
+    Returns an :data:`Envelope` that crosses the pipe cheaply: buffers
+    either ride inline (small results) or live in a named shared-memory
+    segment whose ownership transfers with the envelope.
+    """
+    buffers: List[pickle.PickleBuffer] = []
+    data = pickle.dumps(obj, protocol=5, buffer_callback=buffers.append)
+    raws = [b.raw() for b in buffers]
+    total = sum(len(r) for r in raws)
+    if total == 0 or total < shm_min_bytes():
+        # nothing out-of-band (or below threshold): ride the pipe; a
+        # zero-size segment is not even creatable
+        return data, [bytes(r) for r in raws], None
+    seg = shared_memory.SharedMemory(create=True, size=total)
+    _untrack(seg)
+    sizes = []
+    off = 0
+    for r in raws:
+        seg.buf[off:off + len(r)] = r
+        sizes.append(len(r))
+        off += len(r)
+    name = seg.name
+    seg.close()  # ownership rides in the envelope now
+    return pickle.dumps((data, sizes), protocol=5), None, name
+
+
+def _attach(name: str) -> shared_memory.SharedMemory:
+    # attaching re-registers with this process's tracker (see module
+    # docstring): deliberate — if the parent dies holding the mapping the
+    # tracker unlinks for us; the normal-path unlink() unregisters.
+    seg = shared_memory.SharedMemory(name=name)
+    _OPEN[name] = seg
+    return seg
+
+
+def _release(seg: shared_memory.SharedMemory) -> None:
+    _OPEN.pop(seg.name, None)
+    seg.close()
+    try:
+        seg.unlink()  # also unregisters from the resource tracker
+    except FileNotFoundError:  # pragma: no cover - double-discard raced
+        _untrack(seg)  # unlink() bailed before its unregister
+
+
+def unpack(env: Envelope) -> Any:
+    """Parent side: rebuild the object; copy out of + unlink any segment."""
+    data, bufs, name = env
+    if name is None:
+        return pickle.loads(data, buffers=bufs)
+    seg = _attach(name)
+    try:
+        inner, sizes = pickle.loads(data)
+        out: List[bytearray] = []
+        off = 0
+        for s in sizes:
+            out.append(bytearray(seg.buf[off:off + s]))  # writable copies
+            off += s
+        return pickle.loads(inner, buffers=out)
+    finally:
+        _release(seg)
+
+
+def discard(env: Envelope) -> None:
+    """Release an envelope without deserializing it.
+
+    The early-termination path (``limit()`` satisfied mid-scan) drains
+    in-flight futures through here so abandoned morsels cannot leak their
+    segments.
+    """
+    name = env[2]
+    if name is None:
+        return
+    try:
+        _release(_attach(name))
+    except FileNotFoundError:  # pragma: no cover - worker died pre-create
+        pass
+
+
+def live_segments() -> List[str]:
+    """Names of segments this process still holds open (tests want [])."""
+    return sorted(_OPEN)
+
+
+@atexit.register
+def _sweep() -> None:  # pragma: no cover - exercised only on leak bugs
+    for name in list(_OPEN):
+        warnings.warn(f"leaked scan shared-memory segment {name!r}; "
+                      "unlinking at exit", ResourceWarning)
+        _release(_OPEN[name])

@@ -145,6 +145,7 @@ class NormalizeConfig:
     fragment_readahead: int = 4
     use_threads: bool = True
     num_threads: Optional[int] = None   # morsel workers; None = cpu_count()
+    executor: Optional[str] = None      # "thread" | "process" | None = auto
     max_partitions: int = 1024
     max_open_files: int = 1024
     max_rows_per_file: int = 10_000
@@ -158,14 +159,21 @@ class LoadConfig:
 
     ``num_threads`` sizes the shared morsel pool for this scan: ``None``
     (default) means ``os.cpu_count()``, ``1`` forces the serial path, and
-    ``use_threads=False`` overrides everything back to serial.  Output is
-    byte-identical (order included) at every setting.
+    ``use_threads=False`` overrides everything back to serial.
+
+    ``executor`` picks where morsels decode: ``"thread"`` (shared thread
+    pool — right when codec decompression releases the GIL), ``"process"``
+    (spawn-context worker processes with shared-memory result transport —
+    right when decode is GIL-bound), or ``None`` (default) to let the
+    planner choose from the footer's codec split.  Output is byte-identical
+    (order included) at every setting of every knob here.
     """
     batch_size: int = 131_072
     batch_readahead: int = 16
     fragment_readahead: int = 4
     use_threads: bool = True
     num_threads: Optional[int] = None   # morsel workers; None = cpu_count()
+    executor: Optional[str] = None      # "thread" | "process" | None = auto
 
 
 class Dataset:

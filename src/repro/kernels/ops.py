@@ -22,11 +22,15 @@ from .bss_decode import bss_decode
 from .delta_decode import delta_decode
 from .dict_decode import dict_decode
 from .filter_kernel import filter_range
+from .segmented import (plan_segments, seg_bitunpack, seg_delta_decode,
+                        seg_dict_decode)
 from .stats_kernel import page_minmax
 
 __all__ = ["bitunpack", "bss_decode", "delta_decode", "dict_decode",
            "filter_range", "page_minmax", "decode_on_device",
-           "default_interpret"]
+           "decode_batch_on_device", "default_interpret",
+           "plan_segments", "seg_bitunpack", "seg_dict_decode",
+           "seg_delta_decode"]
 
 
 def default_interpret() -> bool:
@@ -73,6 +77,73 @@ def decode_on_device(encoding: str, meta: dict, payload: bytes, n: int,
         return bss_decode(planes, interpret=interpret)
     # fallback: host decode, then transfer
     return jnp.asarray(enc.decode(encoding, meta, payload, n, dt))
+
+
+def decode_batch_on_device(encoding: str, specs, np_dtype, *,
+                           interpret: bool = True) -> np.ndarray:
+    """ONE fused device dispatch decoding a whole morsel's pages of a single
+    encoding group.
+
+    ``specs`` is ``[(encoding, meta, payload, n), ...]`` with at least two
+    non-empty pages, all the given ``encoding``; the caller
+    (:meth:`JaxDecodeBackend.decode_batch`) has already proven every page
+    32-bit exact.  Returns the concatenated value stream as a host array of
+    ``np_dtype`` — byte-identical to per-page decode by construction.
+    """
+    dt = np.dtype(np_dtype)
+    ns = np.array([n for _, _, _, n in specs], np.int64)
+    ks = np.array([m["bits"] for _, m, _, _ in specs], np.int64)
+    total = int(ns.sum())
+    if encoding == enc.BITPACK:
+        words, w0, sh, mask = plan_segments([p for _, _, p, _ in specs],
+                                            ns, ks)
+        refs = np.zeros(w0.shape[0], np.int32)
+        if dt != np.bool_:
+            refs[:total] = np.repeat(
+                np.array([m["ref"] for _, m, _, _ in specs], np.int64), ns)
+        vals = np.asarray(seg_bitunpack(words, w0, sh, mask, refs,
+                                        interpret=interpret))
+        return vals[:total].astype(dt, copy=False)
+    if encoding == enc.DICT:
+        le = dt.newbyteorder("<")
+        dicts = [np.frombuffer(p[:m["dict_len"]], le)
+                 for _, m, p, _ in specs]
+        words, w0, sh, mask = plan_segments(
+            [memoryview(p)[m["dict_len"]:] for _, m, p, _ in specs], ns, ks)
+        off = np.zeros(len(dicts), np.int64)
+        np.cumsum([len(d) for d in dicts[:-1]], out=off[1:])
+        doff = np.zeros(w0.shape[0], np.int32)
+        doff[:total] = np.repeat(off, ns)
+        # the gather runs in 32-bit device lanes: the caller's gate proved
+        # the dictionary VALUES fit, so the host-side narrow is lossless
+        dcat = np.concatenate(dicts).astype(
+            np.int32 if dt.kind in "iu" else dt)
+        vals = np.asarray(seg_dict_decode(words, w0, sh, mask, dcat, doff,
+                                          interpret=interpret))
+        return vals[:total].astype(dt, copy=False)
+    if encoding == enc.DELTA:
+        # each page packs n-1 zigzag'd deltas; page-start slots are zero in
+        # the scatter so one global cumsum recovers every page (wrap-exact)
+        words, w0, sh, mask = plan_segments([p for _, _, p, _ in specs],
+                                            ns - 1, ks)
+        d_total = int((ns - 1).sum())
+        starts = np.zeros(len(ns), np.int64)
+        np.cumsum(ns[:-1], out=starts[1:])
+        pad_out = 1 << max(total - 1, 0).bit_length()
+        pid = np.zeros(pad_out, np.int32)
+        pid[:total] = np.repeat(np.arange(len(ns), dtype=np.int32), ns)
+        dmask = np.ones(total, bool)
+        dmask[starts] = False
+        # pad slots of dpos point at output slot 0 — a page start, whose
+        # value is forced to zero anyway, so the padded scatter is harmless
+        dpos = np.zeros(w0.shape[0], np.int32)
+        dpos[:d_total] = np.nonzero(dmask)[0]
+        firsts = np.array([m["first"] for _, m, _, _ in specs], np.int32)
+        vals = np.asarray(seg_delta_decode(
+            words, w0, sh, mask, dpos, starts.astype(np.int32), pid, firsts,
+            np.array([d_total], np.int32), interpret=interpret))
+        return vals[:total].astype(dt, copy=False)
+    raise ValueError(f"no segmented kernel for encoding {encoding!r}")
 
 
 def decode_and_filter(encoding: str, meta: dict, payload: bytes, n: int,

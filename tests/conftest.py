@@ -3,3 +3,6 @@ import pytest
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers", "perf_smoke: wall-clock performance assertion; needs an "
+        "unloaded multi-core box (CI runs these in the dedicated perf job)")

@@ -14,10 +14,14 @@ from jax.sharding import PartitionSpec as PS
 
 class TestSpecFor:
     def _mesh(self, shape=(2, 4), axes=("data", "model")):
-        import jax
-        # host platform has 1 device in this process: build an abstract mesh
+        # host platform has 1 device in this process: build an abstract mesh.
+        # jax >= 0.5 takes (axis_sizes, axis_names); 0.4.x wants one
+        # ((name, size), ...) shape tuple — probe the new form first.
         from jax.sharding import AbstractMesh
-        return AbstractMesh(shape, axes)
+        try:
+            return AbstractMesh(shape, axes)
+        except TypeError:
+            return AbstractMesh(tuple(zip(axes, shape)))
 
     def test_dense_weight(self):
         from repro.distributed.sharding import spec_for
