@@ -63,6 +63,10 @@ SECTIONS = [
     (scan.DeltaOverlay, ()),
     (transactions.Manifest, ()),
     (transactions.DeltaEntry, ()),
+    (transactions.Transaction,
+     ["snapshot", "stage", "validate", "publish"]),
+    (transactions.CommitConflict, ()),
+    (transactions.WriteLockTimeout, ()),
 ]
 
 

@@ -16,7 +16,8 @@ from .scan import (DeltaOverlay, FragmentPlan, ScanCounters, ScanPlan,
 from .aggregate import AggregatePlan
 from .query import GroupedQuery, Query, QueryReport
 from .compaction import CompactionPolicy, CompactionResult, MaintenanceStats
-from .transactions import DeltaEntry, Manifest
+from .transactions import (CommitConflict, DeltaEntry, Manifest, Transaction,
+                           WriteLockTimeout)
 from .store import Dataset, LoadConfig, NormalizeConfig, ParquetDB
 
 __all__ = [
@@ -26,6 +27,7 @@ __all__ = [
     "ScanCounters", "ScanPlan", "ScanReport", "AggregatePlan",
     "GroupedQuery", "Query", "QueryReport",
     "CompactionPolicy", "CompactionResult", "MaintenanceStats",
-    "DeltaEntry", "Manifest", "Dataset", "LoadConfig", "NormalizeConfig",
+    "CommitConflict", "DeltaEntry", "Manifest", "Transaction",
+    "WriteLockTimeout", "Dataset", "LoadConfig", "NormalizeConfig",
     "ParquetDB",
 ]

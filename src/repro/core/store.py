@@ -52,8 +52,8 @@ from .query import Query, _resolve_names
 from .scan import DeltaOverlay, ScanPlan, ScanReport
 from .schema import Field, ID_COLUMN, Schema
 from .table import Column, Table, concat_tables, null_column_of
-from .transactions import (DELTA_TOMBSTONE, DELTA_UPSERT, DatasetDir,
-                           DeltaEntry, Manifest)
+from .transactions import (CommitConflict, DELTA_TOMBSTONE, DELTA_UPSERT,
+                           DatasetDir, DeltaEntry, Manifest, Transaction)
 
 TableLike = Union[Table, List[dict], Dict[str, Any]]
 
@@ -281,15 +281,19 @@ class ParquetDB:
         global _EVICT_GEN
         with _READER_CACHE_LOCK:
             _EVICT_GEN += 1
-        # startup recovery: GC files not in the committed manifest (also
-        # collects old generations left behind by a prior compaction).
-        # Best-effort under the writer lock: another process may be mid-
-        # transaction with staged-but-uncommitted files that a lockless
-        # sweep would delete; if a writer is active, skip — a later open
-        # will collect.
+        # startup recovery: repair the manifest pointer if a crash landed
+        # between the generation link and the pointer rewrite, then GC
+        # files not in the committed manifest (also collects old
+        # generations left behind by a prior compaction).  Best-effort
+        # under the writer lock: if a writer is active, skip — a later
+        # open will collect.  Lock-free optimistic writers may be staging
+        # concurrently; their files are protected by the ``_stage-``
+        # naming convention + age grace inside ``DatasetDir.gc``.
         try:
             with self._dir.acquire_lock(timeout=0):
-                self._gc(self._dir.load())
+                man = self._dir.load()
+                self._dir.repair_pointer(man)
+                self._gc(man)
         except TimeoutError:
             pass
         if initial_fields:
@@ -297,7 +301,7 @@ class ParquetDB:
                 man = self._dir.load()
                 schema = self._manifest_schema(man).unify(Schema(initial_fields))
                 self._set_manifest_schema(man, schema)
-                self._dir.commit(man)
+                self._dir.commit(man, op="schema")
 
     # ------------------------------------------------------------------ helpers
     def _gc(self, man: Manifest) -> None:
@@ -384,7 +388,7 @@ class ParquetDB:
         with self._dir.acquire_lock():
             man = self._dir.load()
             man.metadata.setdefault("user", {}).update(metadata)
-            self._dir.commit(man)
+            self._dir.commit(man, op="metadata")
 
     def set_field_metadata(self, name: str, metadata: dict) -> None:
         """Merge ``metadata`` into one field's metadata (committed)."""
@@ -396,7 +400,7 @@ class ParquetDB:
                         {**(f.metadata or {}), **metadata})
             fields = [new if g.name == name else g for g in schema]
             self._set_manifest_schema(man, Schema(fields, schema.metadata))
-            self._dir.commit(man)
+            self._dir.commit(man, op="metadata")
 
     # ------------------------------------------------------------------ ingest
     def _to_table(self, data: TableLike, schema: Optional[Schema],
@@ -523,7 +527,7 @@ class ParquetDB:
             self._set_manifest_schema(man, unified)
             if normalize_dataset:
                 self._normalize_locked(man, normalize_config or NormalizeConfig())
-            self._dir.commit(man)
+            self._dir.commit(man, op="create")
             # GC only when this create orphaned files (realign/normalize
             # rewrite) — a plain append must not sweep old generations a
             # concurrent reader may still hold (see docs/TRANSACTIONS.md)
@@ -751,6 +755,84 @@ class ParquetDB:
             return ndb.read(ids=ids, columns=cols)
 
     # ------------------------------------------------------------------ update
+    def _run_delta_txn(self, build, op: str) -> Optional[int]:
+        """Drive one optimistic delta commit to completion.
+
+        ``build(man, schema)`` stages the operation against a snapshot:
+        it returns ``(kind, table, n)`` (the delta to stage and the row
+        count to report), ``None`` when there is nothing to commit, or
+        raises :class:`_SchemaEvolves` when the operation needs the locked
+        structural path.  The protocol (docs/TRANSACTIONS.md): snapshot →
+        stage (lock-free) → publish (validate + atomic link of the next
+        generation, group-batched).  A :class:`CommitConflict` — another
+        writer committed overlapping rows since our snapshot — aborts the
+        staged file and restarts from a fresh snapshot, bounded by
+        ``_OPTIMISTIC_RETRIES``; persistent conflicts return None and the
+        caller serializes through the write lock instead (livelock-free).
+        """
+        for _ in range(_OPTIMISTIC_RETRIES):
+            d = _DeltaTxn(self, build, op)
+            d.snapshot()
+            try:
+                n = d.stage()
+            except _SchemaEvolves:
+                return None
+            except FileNotFoundError:
+                # a compaction commit + another process's startup GC raced
+                # our snapshot out from under the probe scan: re-snapshot
+                continue
+            if n == 0:
+                return 0
+            try:
+                d.publish()
+                return n
+            except CommitConflict:
+                d.abort()
+                continue
+        return None
+
+    def _upsert_build(self, incoming: Table, keys: List[str]):
+        """Stage-step closure for an optimistic ``update`` (no schema
+        change): probe the merged snapshot for matching keys and build the
+        full-width upsert delta."""
+        def build(man: Manifest, current: Schema):
+            unified = current.unify(incoming.schema)
+            if not unified.equals_names_types(current):
+                raise _SchemaEvolves()  # schema evolution: locked path
+            inc_aligned = incoming.align_to_schema(
+                unified.select([f.name for f in unified
+                                if f.name in incoming.columns]))
+            key_of = _key_index(incoming, keys)
+            keys_expr = _keys_expr(incoming, keys)
+            snap = self._legacy_query(None, keys_expr, LoadConfig(),
+                                      man=man).to_table()
+            if snap.num_rows:
+                snap = snap.align_to_schema(unified)
+            hit_dst, hit_src = _match_rows(snap, key_of, keys)
+            updated = len(hit_dst)
+            if not updated:
+                return None
+            sub = snap.take(hit_dst)
+            upsert = _apply_updates(sub, inc_aligned,
+                                    np.arange(updated, dtype=np.int64),
+                                    hit_src, keys)
+            return DELTA_UPSERT, upsert, updated
+        return build
+
+    def _tombstone_build(self, expr: Expr):
+        """Stage-step closure for an optimistic row ``delete``: evaluate
+        the filter against the merged snapshot and build the tombstone."""
+        def build(man: Manifest, current: Schema):
+            dead = self._legacy_query([ID_COLUMN], expr, LoadConfig(),
+                                      man=man).to_table()
+            if dead.num_rows == 0:
+                return None
+            dead_ids = np.sort(dead.column(ID_COLUMN).values)
+            tomb = Table(current.select([ID_COLUMN]),
+                         {ID_COLUMN: Column.numeric(dead_ids)})
+            return DELTA_TOMBSTONE, tomb, dead.num_rows
+        return build
+
     def update(self, data: TableLike, schema: Optional[Schema] = None,
                metadata: Optional[dict] = None,
                fields_metadata: Optional[Dict[str, dict]] = None,
@@ -769,6 +851,13 @@ class ParquetDB:
         rewritten.  Readers substitute the upsert rows by id at scan time;
         compaction folds them back into base files.
 
+        Concurrency: a plain update (no schema change, metadata, or
+        normalize) commits **optimistically** — it snapshots a generation,
+        stages its upsert lock-free, and validates id overlap at publish
+        time against any generation committed meanwhile, rebasing and
+        retrying on non-overlapping commits (docs/TRANSACTIONS.md).  Only
+        structural updates serialize through the write lock.
+
         ``update_keys`` defaults to ``id``; a list of columns forms a
         composite key.  New columns evolve the schema (old rows read as
         null).  Within one call, the last incoming row wins per key; across
@@ -780,6 +869,14 @@ class ParquetDB:
         for k in keys:
             if k not in incoming:
                 raise ValueError(f"update data must contain key column {k!r}")
+        if metadata is None and fields_metadata is None \
+                and normalize_config is None:
+            n = self._run_delta_txn(self._upsert_build(incoming, keys),
+                                    "update")
+            if n is not None:
+                if n:
+                    self._maybe_autocompact()
+                return n
         with self._dir.acquire_lock():
             man = self._dir.load()
             current = self._manifest_schema(man)
@@ -817,7 +914,10 @@ class ParquetDB:
                 return 0  # nothing to commit
             if normalize_config is not None:
                 self._normalize_locked(man, normalize_config)
-            self._dir.commit(man)
+            # "update" even when normalize rewrote files: concurrent
+            # optimistic transactions must treat this generation's folded
+            # chain as a real data change, not a logical no-op
+            self._dir.commit(man, op="update")
             if normalize_config is not None:  # append-only otherwise: no GC
                 self._gc(man)
         self._maybe_autocompact()
@@ -839,9 +939,23 @@ class ParquetDB:
         Column deletion is a schema change and rewrites base files from the
         merged view, folding any pending delta chain into the same single
         pass.  Returns the number of rows (or columns) removed.
+
+        Concurrency: plain row deletion commits **optimistically** like
+        ``update`` — lock-free staging, id-overlap validation at publish
+        time (docs/TRANSACTIONS.md); column deletion and normalize
+        serialize through the write lock.
         """
         if columns is not None and (ids is not None or filters is not None):
             raise ValueError("row and column deletion are mutually exclusive")
+        if columns is None and normalize_config is None:
+            expr = self._build_filter(ids, filters)
+            if expr is None:
+                raise ValueError("delete needs ids, filters, or columns")
+            n = self._run_delta_txn(self._tombstone_build(expr), "delete")
+            if n is not None:
+                if n:
+                    self._maybe_autocompact()
+                return n
         removed = 0
         with self._dir.acquire_lock():
             man = self._dir.load()
@@ -895,7 +1009,8 @@ class ParquetDB:
                     self._stage_delta(man, DELTA_TOMBSTONE, tomb)
             if normalize_config is not None:
                 self._normalize_locked(man, normalize_config)
-            self._dir.commit(man)
+            self._dir.commit(man, op="delete_columns" if columns is not None
+                             else "delete")
             # row deletion is append-only (a staged tombstone): no GC, so
             # old generations survive for in-flight readers; the rewriting
             # paths (columns / normalize) collect their own orphans
@@ -919,7 +1034,7 @@ class ParquetDB:
         with self._dir.acquire_lock():
             man = self._dir.load()
             self._normalize_locked(man, cfg)
-            self._dir.commit(man)
+            self._dir.commit(man, op="normalize")
             self._gc(man)
 
     def _normalize_locked(self, man: Manifest, cfg: NormalizeConfig) -> None:
@@ -969,7 +1084,7 @@ class ParquetDB:
             result = compact_locked(self._dir, man, schema, self._reader_of,
                                     self._write_file, policy, force=force)
             if result.compacted:
-                self._dir.commit(man)
+                self._dir.commit(man, op="compact")
                 result.generation = man.generation
                 _evict_readers(self._dir.file_path(f)
                                for f in result.dropped_files)
@@ -1022,6 +1137,81 @@ class ParquetDB:
         t = self._maintenance_thread
         if t is not None:
             t.join()
+
+
+# ---------------------------------------------------------------------------
+# optimistic delta transactions
+# ---------------------------------------------------------------------------
+_OPTIMISTIC_RETRIES = 4  # conflict restarts before yielding to the lock
+
+
+class _SchemaEvolves(Exception):
+    """Raised by a stage-step builder when the operation changes the
+    dataset schema and must take the locked structural path."""
+
+
+class _DeltaTxn:
+    """One optimistic merge-on-read commit, split into the four protocol
+    steps — ``snapshot`` → ``stage`` → ``validate`` → ``publish`` — so the
+    deterministic interleaving harness (tests/test_mvcc.py) can schedule
+    concurrent writers through every step ordering.  ``update``/``delete``
+    drive the same object front to back via ``ParquetDB._run_delta_txn``.
+    """
+
+    def __init__(self, db: "ParquetDB", build, op: str):
+        self.db = db
+        self.build = build
+        self.txn = Transaction(db._dir, db._reader_of, op=op)
+        self.man: Optional[Manifest] = None
+        self.schema: Optional[Schema] = None
+        self.staged_paths: List[str] = []
+        self.result: Optional[int] = None
+
+    def snapshot(self) -> Manifest:
+        """Bind to the committed head generation (lock-free)."""
+        self.man = self.txn.snapshot()
+        self.schema = self.db._manifest_schema(self.man)
+        return self.man
+
+    def stage(self) -> int:
+        """Probe the snapshot and write the delta file (lock-free).
+
+        Returns the rows this transaction will affect; 0 means nothing to
+        commit (no file staged).  The staged file gets a collision-free
+        ``_stage-`` name so concurrent writers and the GC never trip over
+        it (see ``DatasetDir.stage_file_name``).
+        """
+        out = self.build(self.man, self.schema)
+        if out is None:
+            self.result = 0
+            return 0
+        kind, table, n = out
+        name = self.db._dir.stage_file_name(kind)
+        path = self.db._dir.file_path(name)
+        self.db._write_file(path, table, file_kind=kind)
+        self.staged_paths.append(path)
+        self.txn.stage(DeltaEntry(name, kind), table.column(ID_COLUMN).values)
+        self.result = n
+        return n
+
+    def validate(self) -> Optional[str]:
+        """Advisory lock-free conflict check against the current head."""
+        return self.txn.validate()
+
+    def publish(self) -> Manifest:
+        """Authoritative validate + atomic generation link (group-batched,
+        under the write lock); raises ``CommitConflict`` on overlap."""
+        return self.txn.publish()
+
+    def abort(self) -> None:
+        """Drop the staged files of a conflicted/abandoned transaction."""
+        _evict_readers(self.staged_paths)
+        for p in self.staged_paths:
+            try:
+                os.remove(p)
+            except OSError:
+                pass
+        self.staged_paths = []
 
 
 # ---------------------------------------------------------------------------

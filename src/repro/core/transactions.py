@@ -1,12 +1,18 @@
-"""Manifest-commit transaction protocol for the dataset directory.
+"""Manifest-log transaction protocol for the dataset directory.
 
 The paper's ParquetDB copies files to a temp dir before modifying and restores
 on error — Atomicity/Consistency/Isolation with "quasi-durability" (manual
 recovery after a crash).  We strengthen this (beyond-paper improvement #1,
-DESIGN.md §7): the committed state of a dataset is *exactly* the file lists in
-``_manifest.json``, which is replaced atomically (tmp + fsync + rename).  A
-crash at any point leaves the previous manifest intact; uncommitted data files
-are garbage-collected on next open.  Recovery is automatic, not manual.
+DESIGN.md §7): the committed state of a dataset is the head of an
+**append-only manifest log**.  Generation *N* is the file
+``_manifest.<N>.json``; committing generation *N+1* is one atomic hard-link
+of a fully-fsynced temp file into that name.  The link either exists or it
+does not — a crash at any point leaves the previous generation intact, and
+two racing committers cannot both create it (the link is the compare-and-
+swap that serializes the log).  ``_manifest.json`` is kept as a *pointer*:
+a copy of the head manifest rewritten after every commit so legacy tooling
+and the stat-memoized read path keep working; the log is canonical and the
+pointer is repaired on open if a crash landed between link and pointer.
 
 A manifest references two kinds of data files (see docs/TRANSACTIONS.md):
 
@@ -23,28 +29,76 @@ consistent snapshot as long as *g*'s files exist on disk (compaction defers
 file deletion to the next open precisely to give in-flight readers that
 grace — see ``DatasetDir.gc``).
 
-Writers take an exclusive lock file (single writer, many readers — same
-concurrency model the paper reports in Table 11).
+Concurrency comes in two flavors:
+
+  - **Structural writers** (create, normalize, compaction, column drops,
+    schema/metadata edits) serialize through the exclusive
+    :class:`WriteLock` as before — they rewrite file lists and cannot be
+    rebased mechanically.
+  - **Delta writers** (upsert/tombstone commits — the hot mutation path)
+    are **optimistic**: a :class:`Transaction` snapshots a generation,
+    stages its delta files lock-free under collision-free ``_stage-`` names,
+    and validates at commit time against every generation committed since
+    its snapshot — id-range overlap first (``ColumnStats.overlaps_range``
+    on the staged footer, no page decoded), exact id intersection to
+    confirm.  Non-overlapping transactions *rebase*: their entries are
+    appended to the current head and published as the next generation.
+    Overlapping transactions raise :class:`CommitConflict` — exactly one of
+    two racing writers to the same rows wins.  Publication itself holds the
+    write lock only for the short validate+link critical section, and a
+    :class:`GroupCommitter` batches every transaction queued behind the
+    same lock into **one** generation (group commit: N small upserts, one
+    fsync+link).
+
+Crash injection for tests: ``PRE_COMMIT_HOOK`` fires after staging, right
+before the atomic link (the classic torn-commit window); ``POST_COMMIT_HOOK``
+fires after the link but before the pointer rewrite (the committed-but-
+stale-pointer window, repaired on next open).
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import errno
 import json
 import os
+import re
+import socket
 import time
-from typing import Callable, List, Optional
+import threading
+import uuid
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-MANIFEST = "_manifest.json"
+import numpy as np
+
+MANIFEST = "_manifest.json"          # pointer: copy of the log head
 LOCKFILE = "_lock"
+
+_GEN_RE = re.compile(r"^_manifest\.(\d{10})\.json$")
+MANIFEST_KEEP = 64      # trailing log generations kept for validation
+# Unreferenced files written under collision-free _stage- names belong to
+# in-flight optimistic writers; GC may only collect them once they are
+# older than this grace (a crashed transaction's leftovers), never while a
+# live writer might still be about to publish them.
+STAGE_MARKER = "_stage-"
+STAGE_GRACE_SECONDS = 600.0
 
 # delta kinds recorded in Manifest.deltas (and in each file's footer flag)
 DELTA_UPSERT = "upsert"
 DELTA_TOMBSTONE = "tombstone"
 
-# test hook: called between staging new files and committing the manifest —
-# crash-injection tests set this to simulate power loss.
+# test hooks: crash-injection tests set these to simulate power loss.
+# PRE_COMMIT_HOOK: between staging and the atomic link of the next
+# generation;  POST_COMMIT_HOOK: after the link, before the pointer rewrite.
 PRE_COMMIT_HOOK: Optional[Callable[[], None]] = None
+POST_COMMIT_HOOK: Optional[Callable[[], None]] = None
+
+
+class CommitConflict(Exception):
+    """Optimistic commit aborted: a generation committed since this
+    transaction's snapshot overlaps its staged rows (or restructured the
+    dataset in a way that cannot be rebased).  The caller may re-run the
+    whole operation against the new head."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,6 +130,14 @@ class Manifest:
         d["deltas"] = [DeltaEntry(**e) for e in d.get("deltas", [])]
         return Manifest(**d)
 
+    def copy(self) -> "Manifest":
+        """Independent mutable copy (lists fresh, metadata deep-copied)."""
+        return Manifest(dataset=self.dataset, generation=self.generation,
+                        next_file_id=self.next_file_id,
+                        next_row_id=self.next_row_id,
+                        files=list(self.files), deltas=list(self.deltas),
+                        metadata=copy.deepcopy(self.metadata))
+
 
 def _fsync_dir(path: str) -> None:
     try:
@@ -98,8 +160,41 @@ def atomic_write_json(path: str, obj: dict) -> None:
     _fsync_dir(os.path.dirname(path) or ".")
 
 
+def _stage_grace() -> float:
+    """Staged-file GC grace in seconds (env-overridable for tests)."""
+    v = os.environ.get("REPRO_STAGE_GC_SECONDS")
+    if v is not None:
+        try:
+            return float(v)
+        except ValueError:
+            pass
+    return STAGE_GRACE_SECONDS
+
+
+_STAGE_PID_RE = re.compile(re.escape(STAGE_MARKER) + r"([0-9a-f]+)-")
+
+
+def _stage_pid_is_dead(name: str) -> bool:
+    """True when a ``_stage-`` file's embedded writer pid is provably dead.
+
+    Conservative: unknown pids (unparseable name, permission errors, pid
+    reuse) count as alive, so a live writer's staging is never collected
+    early — the age grace period remains the backstop.
+    """
+    m = _STAGE_PID_RE.search(name)
+    if not m:
+        return False
+    try:
+        os.kill(int(m.group(1), 16), 0)
+        return False
+    except ProcessLookupError:
+        return True
+    except (OSError, ValueError, OverflowError):
+        return False
+
+
 class DatasetDir:
-    """Owns the manifest + lock + garbage collection for one dataset dir."""
+    """Owns the manifest log + lock + garbage collection for one dataset dir."""
 
     def __init__(self, path: str, dataset: str):
         self.path = path
@@ -107,18 +202,165 @@ class DatasetDir:
         os.makedirs(path, exist_ok=True)
         self._mpath = os.path.join(path, MANIFEST)
 
-    # -- manifest ---------------------------------------------------------------
-    def load(self) -> Manifest:
-        if not os.path.exists(self._mpath):
-            return Manifest(dataset=self.dataset)
-        with open(self._mpath) as fh:
-            return Manifest.from_dict(json.load(fh))
+    # -- manifest log -----------------------------------------------------------
+    def _gen_name(self, gen: int) -> str:
+        return f"_manifest.{gen:010d}.json"
 
-    def commit(self, manifest: Manifest) -> None:
+    def _gen_path(self, gen: int) -> str:
+        return os.path.join(self.path, self._gen_name(gen))
+
+    def log_generations(self) -> List[int]:
+        """Generations present in the manifest log, ascending."""
+        gens = []
+        try:
+            names = os.listdir(self.path)
+        except OSError:
+            return []
+        for fn in names:
+            m = _GEN_RE.match(fn)
+            if m:
+                gens.append(int(m.group(1)))
+        gens.sort()
+        return gens
+
+    def load_generation(self, gen: int) -> Optional[Manifest]:
+        """One specific committed generation, or None if absent/pruned."""
+        try:
+            with open(self._gen_path(gen)) as fh:
+                return Manifest.from_dict(json.load(fh))
+        except (OSError, ValueError):
+            return None
+
+    def _load_pointer(self) -> Optional[Manifest]:
+        try:
+            with open(self._mpath) as fh:
+                return Manifest.from_dict(json.load(fh))
+        except (OSError, ValueError):
+            return None
+
+    def load(self) -> Manifest:
+        """The head of the manifest log (canonical committed state).
+
+        The log is the truth; the ``_manifest.json`` pointer is only
+        trusted when it is at least as new as the newest log file (it is a
+        copy of the head, so serving it is equivalent) — a crash between
+        link and pointer rewrite leaves the pointer one generation behind,
+        and the newest log file wins.
+        """
+        gens = self.log_generations()
+        pointer = self._load_pointer()
+        head = gens[-1] if gens else 0
+        if pointer is not None and pointer.generation >= head:
+            return pointer
+        # the log may be pruned concurrently by another opener; walk back
+        for g in reversed(gens):
+            man = self.load_generation(g)
+            if man is not None:
+                return man
+        if pointer is not None:
+            return pointer
+        return Manifest(dataset=self.dataset)
+
+    def exists(self) -> bool:
+        """True when any committed generation is on disk."""
+        return os.path.exists(self._mpath) or bool(self.log_generations())
+
+    def try_commit(self, manifest: Manifest) -> bool:
+        """Atomically publish ``manifest`` as generation ``generation + 1``.
+
+        The compare-and-swap of the protocol: the fully-fsynced temp file is
+        hard-linked into the generation's log name.  Exactly one committer
+        can create that name — False means another writer won the race and
+        the caller must re-validate against the new head.  On success the
+        ``_manifest.json`` pointer is rewritten (best-effort copy of the
+        head; repaired on next open if a crash lands in between).
+        """
         manifest.generation += 1
         if PRE_COMMIT_HOOK is not None:
             PRE_COMMIT_HOOK()
+        final = self._gen_path(manifest.generation)
+        tmp = os.path.join(
+            self.path,
+            f"{self._gen_name(manifest.generation)}.tmp-{os.getpid():x}-"
+            f"{uuid.uuid4().hex[:8]}")
+        with open(tmp, "w") as fh:
+            json.dump(manifest.to_dict(), fh)
+            fh.flush()
+            os.fsync(fh.fileno())
+        try:
+            os.link(tmp, final)
+        except FileExistsError:
+            os.unlink(tmp)
+            manifest.generation -= 1
+            return False
+        except OSError as e:
+            # filesystem without hard links: fall back to an existence
+            # check + rename (not a true CAS, but these filesystems are
+            # single-host dev setups where the write lock already
+            # serializes publication)
+            if e.errno not in (errno.EPERM, errno.EOPNOTSUPP, errno.ENOSYS):
+                os.unlink(tmp)
+                raise
+            if os.path.exists(final):
+                os.unlink(tmp)
+                manifest.generation -= 1
+                return False
+            os.replace(tmp, final)
+            _fsync_dir(self.path)
+            tmp = None
+        if tmp is not None:
+            os.unlink(tmp)
+            _fsync_dir(self.path)
+        if POST_COMMIT_HOOK is not None:
+            POST_COMMIT_HOOK()
         atomic_write_json(self._mpath, manifest.to_dict())
+        self._prune_log(manifest.generation)
+        return True
+
+    def commit(self, manifest: Manifest, op: Optional[str] = None) -> None:
+        """Publish the next generation; caller must hold the write lock.
+
+        Used by the structural write paths, which serialize through
+        :meth:`acquire_lock` — under the lock no cooperative writer can
+        advance the head, so the CAS cannot fail; if it does, something
+        outside the protocol committed and the operation must not be
+        retried blindly.
+        """
+        if op is not None:
+            manifest.metadata["op"] = op
+        if not self.try_commit(manifest):
+            raise CommitConflict(
+                f"generation {manifest.generation + 1} was committed "
+                f"concurrently (outside the write lock) — dataset "
+                f"{self.dataset!r} at {self.path}")
+
+    def _prune_log(self, head: int) -> None:
+        """Drop log files older than the validation window (never the head).
+
+        A transaction whose snapshot predates the window cannot diff the
+        missing generations and conservatively conflicts (it restarts from
+        a fresh snapshot), so pruning trades worst-case optimism for a
+        bounded directory.
+        """
+        floor = head - MANIFEST_KEEP
+        if floor <= 0:
+            return
+        for g in self.log_generations():
+            if g < floor:
+                try:
+                    os.unlink(self._gen_path(g))
+                except OSError:
+                    pass
+
+    def repair_pointer(self, manifest: Optional[Manifest] = None) -> None:
+        """Rewrite the pointer to the log head (crash between link and
+        pointer leaves it stale; called from startup recovery)."""
+        man = manifest if manifest is not None else self.load()
+        if man.generation == 0 and not self.exists():
+            return
+        pointer = self._load_pointer()
+        if pointer is None or pointer.generation < man.generation:
+            atomic_write_json(self._mpath, man.to_dict())
 
     # -- files --------------------------------------------------------------------
     def file_path(self, name: str) -> str:
@@ -129,15 +371,29 @@ class DatasetDir:
                     DELTA_TOMBSTONE: ".tombstone.tpq"}
 
     def new_file_name(self, manifest: Manifest, kind: str = "base") -> str:
-        """Allocate a fresh, never-reused data-file name.
+        """Allocate a fresh, never-reused data-file name (lock holders only).
 
         Delta files get a kind-specific suffix so a directory listing shows
         the merge-on-read chain at a glance; all three end in ``.tpq`` and
-        share the garbage-collection rule.
+        share the garbage-collection rule.  The counter lives in the
+        manifest, so only writers holding the write lock may use this —
+        lock-free staging uses :meth:`stage_file_name` instead.
         """
         name = f"{self.dataset}_{manifest.next_file_id:06d}{self._KIND_SUFFIX[kind]}"
         manifest.next_file_id += 1
         return name
+
+    def stage_file_name(self, kind: str) -> str:
+        """Collision-free data-file name for lock-free optimistic staging.
+
+        No manifest counter involved: pid + random nonce make concurrent
+        writers' names disjoint.  The ``_stage-`` marker is a contract with
+        :meth:`gc` — unreferenced stage files younger than the grace period
+        are presumed to belong to an in-flight transaction and are never
+        collected (a crashed transaction's leftovers age out).
+        """
+        return (f"{self.dataset}{STAGE_MARKER}{os.getpid():x}-"
+                f"{uuid.uuid4().hex[:10]}{self._KIND_SUFFIX[kind]}")
 
     def gc(self, manifest: Manifest) -> List[str]:
         """Remove data files (base + delta) not referenced by the manifest.
@@ -146,18 +402,55 @@ class DatasetDir:
         files.  Compaction deliberately does **not** call this inline: old
         generations stay on disk until the next open so that readers holding
         a pre-compaction manifest snapshot can finish (snapshot isolation).
+
+        Concurrent-writer safety: counter-named files are only ever staged
+        under the write lock (which every ``gc`` caller holds), so an
+        unreferenced one is always a crash leftover.  ``_stage-`` named
+        files are staged *lock-free* by optimistic writers, so an
+        unreferenced one may belong to a transaction that is about to
+        publish — those are skipped until they are older than the staging
+        grace period (``REPRO_STAGE_GC_SECONDS``) or their embedded writer
+        pid is dead, unless some retained log generation references them
+        (then they were committed and are ordinary orphans, e.g. dropped by
+        compaction).  Crashed commit temp files (``_manifest.*.tmp-*``)
+        age out on the same clock.
         """
         live = set(manifest.files) | {d.name for d in manifest.deltas}
+        committed = set(live)
+        for gen in self.log_generations():
+            if gen == manifest.generation:
+                continue
+            old = self.load_generation(gen)
+            if old is not None:
+                committed.update(old.files)
+                committed.update(d.name for d in old.deltas)
+        grace = _stage_grace()
+        now = time.time()
         removed = []
         for fn in os.listdir(self.path):
-            if not fn.endswith(".tpq"):
-                continue
-            if fn not in live:
+            full = self.file_path(fn)
+            if fn.endswith(".tpq"):
+                if fn in live:
+                    continue
+                if STAGE_MARKER in fn and fn not in committed:
+                    try:
+                        if (now - os.path.getmtime(full) < grace
+                                and not _stage_pid_is_dead(fn)):
+                            continue  # in-flight optimistic staging
+                    except OSError:
+                        continue      # vanished: its writer published/aborted
                 try:
-                    os.remove(self.file_path(fn))
+                    os.remove(full)
                     removed.append(fn)
                 except OSError:
                     pass
+            elif fn.startswith("_manifest.") and ".tmp" in fn:
+                try:
+                    if now - os.path.getmtime(full) >= grace:
+                        os.remove(full)
+                except OSError:
+                    pass
+        self._prune_log(manifest.generation)
         return removed
 
     # -- write lock ----------------------------------------------------------------
@@ -165,8 +458,20 @@ class DatasetDir:
         return WriteLock(os.path.join(self.path, LOCKFILE), timeout)
 
 
+class WriteLockTimeout(TimeoutError):
+    """Write-lock acquisition failed; the message names the holder."""
+
+
 class WriteLock:
-    """Exclusive advisory lock via O_EXCL create; stale locks expire."""
+    """Exclusive advisory lock via O_EXCL create.
+
+    The lock file records ``{pid, host, ts}`` so contention is diagnosable:
+    a holder whose pid is dead (same host) is broken immediately instead of
+    sleeping out the timeout, and a timeout raises :class:`WriteLockTimeout`
+    naming the live holder.  ``timeout=0`` fast-fails on first contention.
+    A very old lock (``STALE_SECONDS``) is broken even when liveness cannot
+    be determined (foreign host, unreadable file).
+    """
 
     STALE_SECONDS = 300.0
 
@@ -175,25 +480,87 @@ class WriteLock:
         self.timeout = timeout
         self._fd: Optional[int] = None
 
+    def _holder(self) -> Optional[dict]:
+        try:
+            with open(self.path) as fh:
+                raw = fh.read()
+        except OSError:
+            return None
+        try:
+            info = json.loads(raw)
+            if isinstance(info, dict):
+                return info
+        except ValueError:
+            pass
+        try:  # pre-log lock format: bare pid
+            return {"pid": int(raw.strip() or -1)}
+        except ValueError:
+            return {}
+
+    def _holder_is_dead(self, info: Optional[dict]) -> bool:
+        """True only when the recorded holder provably cannot be running."""
+        if not info:
+            return False
+        host = info.get("host")
+        if host is not None and host != socket.gethostname():
+            return False  # foreign host: cannot probe, rely on age
+        pid = info.get("pid")
+        if not isinstance(pid, int) or pid <= 0:
+            return False
+        try:
+            os.kill(pid, 0)
+        except ProcessLookupError:
+            return True
+        except PermissionError:
+            return False  # alive, owned by someone else
+        except OSError:
+            return False
+        return False
+
+    def _describe(self, info: Optional[dict], age: float) -> str:
+        if not info:
+            return f"holder unknown (unreadable lock file), age {age:.1f}s"
+        pid = info.get("pid", "?")
+        host = info.get("host", "?")
+        return f"held by pid {pid} on {host} for {age:.1f}s"
+
     def __enter__(self) -> "WriteLock":
         deadline = time.time() + self.timeout
         while True:
             try:
                 self._fd = os.open(self.path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
-                os.write(self._fd, str(os.getpid()).encode())
+                os.write(self._fd, json.dumps(
+                    {"pid": os.getpid(), "host": socket.gethostname(),
+                     "ts": time.time()}).encode())
                 return self
             except OSError as e:
                 if e.errno != errno.EEXIST:
                     raise
+            info = self._holder()
+            if self._holder_is_dead(info):
+                # loud break: a dead writer must not serialize live ones
                 try:
-                    if time.time() - os.path.getmtime(self.path) > self.STALE_SECONDS:
-                        os.remove(self.path)  # stale holder
-                        continue
+                    os.remove(self.path)
                 except OSError:
-                    continue
-                if time.time() > deadline:
-                    raise TimeoutError(f"could not acquire write lock {self.path}")
-                time.sleep(0.02)
+                    pass
+                continue
+            try:
+                age = time.time() - os.path.getmtime(self.path)
+            except OSError:
+                continue  # holder released between probe and stat: retry
+            if age > self.STALE_SECONDS:
+                try:
+                    os.remove(self.path)  # stale beyond doubt-benefit window
+                except OSError:
+                    pass
+                continue
+            if time.time() >= deadline:
+                raise WriteLockTimeout(
+                    f"could not acquire write lock {self.path}: "
+                    f"{self._describe(info, age)}; the holder is alive — "
+                    f"if this persists past {self.STALE_SECONDS:.0f}s the "
+                    f"lock will be considered stale and broken")
+            time.sleep(0.02)
 
     def __exit__(self, *exc):
         if self._fd is not None:
@@ -203,3 +570,279 @@ class WriteLock:
             os.remove(self.path)
         except OSError:
             pass
+
+
+# ---------------------------------------------------------------------------
+# Optimistic multi-writer commit protocol
+# ---------------------------------------------------------------------------
+class Transaction:
+    """One optimistic delta commit: snapshot → stage → validate → publish.
+
+    The writer *snapshots* a committed generation, *stages* upsert/tombstone
+    files lock-free (collision-free ``_stage-`` names), then *publishes*:
+    under the write lock, the staged entries are *validated* against every
+    generation committed since the snapshot and, when no staged id overlaps
+    a concurrently committed delta, appended to the current head and linked
+    in as the next generation (a rebase — the transaction commits on top of
+    work it never saw, which is sound exactly because the id sets are
+    disjoint).  Overlap raises :class:`CommitConflict`: of two writers
+    racing to the same rows, exactly one wins.
+
+    ``reader_of`` maps a data-file name to a ``TPQReader``; validation uses
+    it to consult footer id statistics (``ColumnStats.overlaps_range``) and,
+    only when ranges overlap, to read the small delta id column for an exact
+    intersection check — range misses cost no page decode.
+    """
+
+    def __init__(self, dirobj: DatasetDir, reader_of: Callable,
+                 op: str = "delta"):
+        self.dir = dirobj
+        self.reader_of = reader_of
+        self.op = op
+        self.snapshot_gen: Optional[int] = None
+        self.snapshot_man: Optional[Manifest] = None
+        self.entries: List[DeltaEntry] = []
+        self.entry_ids: List[np.ndarray] = []
+        self.committed: Optional[Manifest] = None
+
+    # -- protocol steps ---------------------------------------------------------
+    def snapshot(self) -> Manifest:
+        """Bind to the current head; returns the snapshot manifest."""
+        man = self.dir.load()
+        self.snapshot_gen = man.generation
+        self.snapshot_man = man
+        return man
+
+    def stage(self, entry: DeltaEntry, ids: Sequence[int]) -> None:
+        """Record one staged delta file and the exact ids it touches."""
+        assert self.snapshot_gen is not None, "stage() before snapshot()"
+        arr = np.unique(np.asarray(ids, dtype=np.int64))
+        self.entries.append(entry)
+        self.entry_ids.append(arr)
+
+    def validate(self, head: Optional[Manifest] = None) -> Optional[str]:
+        """Conflict description vs. generations committed since the
+        snapshot, or None when a rebase onto ``head`` is sound.
+
+        Advisory when called lock-free (the head can move right after);
+        :meth:`publish` re-runs it authoritatively under the lock.
+        """
+        if head is None:
+            head = self.dir.load()
+        return self._validate_against(head)
+
+    def publish(self) -> Manifest:
+        """Validate + commit under the write lock (group-batched).
+
+        Returns the committed manifest; raises :class:`CommitConflict` when
+        a generation committed since the snapshot overlaps the staged rows.
+        All transactions queued behind the same lock are folded into one
+        generation (group commit).
+        """
+        man = group_committer(self.dir).commit(self)
+        self.committed = man
+        return man
+
+    # alias: the ISSUE names the final protocol step after its mechanism
+    commit = publish
+
+    # -- validation internals ---------------------------------------------------
+    def _id_bounds(self) -> Optional[Tuple[int, int]]:
+        los = [int(a[0]) for a in self.entry_ids if len(a)]
+        his = [int(a[-1]) for a in self.entry_ids if len(a)]
+        if not los:
+            return None
+        return min(los), max(his)
+
+    def _overlaps_ids(self, theirs: np.ndarray) -> bool:
+        if not len(theirs):
+            return False
+        for mine in self.entry_ids:
+            if len(mine) and len(np.intersect1d(mine, theirs,
+                                                assume_unique=False)):
+                return True
+        return False
+
+    def _conflict_with_staged(self, other_ids: List[np.ndarray]
+                              ) -> Optional[str]:
+        """Overlap vs. another transaction accepted into the same batch."""
+        for theirs in other_ids:
+            if self._overlaps_ids(theirs):
+                return "staged ids overlap another transaction in the " \
+                       "same commit batch"
+        return None
+
+    def _validate_against(self, head: Manifest) -> Optional[str]:
+        assert self.snapshot_man is not None, "validate() before snapshot()"
+        if head.generation == self.snapshot_gen:
+            return None
+        prev = self.snapshot_man
+        for g in range(self.snapshot_gen + 1, head.generation + 1):
+            cur = head if g == head.generation else self.dir.load_generation(g)
+            if cur is None:
+                return (f"manifest log pruned at generation {g}; snapshot "
+                        f"{self.snapshot_gen} is too old to diff")
+            reason = self._diff_conflict(prev, cur)
+            if reason is not None:
+                return reason
+            prev = cur
+        return None
+
+    def _diff_conflict(self, prev: Manifest, cur: Manifest) -> Optional[str]:
+        """Conflict between this transaction and one committed generation."""
+        op = cur.metadata.get("op", "?")
+        prev_names = [e.name for e in prev.deltas]
+        cur_names = [e.name for e in cur.deltas]
+        if cur_names[:len(prev_names)] != prev_names:
+            # the delta chain was rewritten, not appended to: compaction and
+            # normalize fold it without changing the merged view (logical
+            # no-ops for a rebase); anything else restructured the data
+            if op in ("compact", "normalize"):
+                return None
+            return (f"generation {cur.generation} ({op}) rewrote the delta "
+                    f"chain; cannot rebase")
+        new_entries = cur.deltas[len(prev_names):]
+        if cur.files != prev.files and op not in ("create", "compact",
+                                                  "normalize"):
+            # appends only add rows with fresh (higher) ids and rewrites by
+            # compact/normalize preserve the merged view — anything else
+            # (e.g. a column drop) invalidates staged full-width rows
+            return (f"generation {cur.generation} ({op}) rewrote base "
+                    f"files; cannot rebase")
+        if not new_entries:
+            return None
+        bounds = self._id_bounds()
+        if bounds is None:
+            return None
+        for e in new_entries:
+            rd = self.reader_of(e.name)
+            st = rd.file_stats().get("id")
+            # footer fast path: provably disjoint id ranges need no decode
+            if st is not None and not st.overlaps_range(*bounds):
+                continue
+            theirs = rd.read(columns=["id"]).column("id") \
+                       .values.astype(np.int64, copy=False)
+            if self._overlaps_ids(theirs):
+                return (f"staged ids overlap {e.kind} delta {e.name} "
+                        f"committed in generation {cur.generation}")
+        return None
+
+
+class _Pending:
+    __slots__ = ("txn", "done", "result", "exc")
+
+    def __init__(self, txn: Transaction):
+        self.txn = txn
+        self.done = False
+        self.result: Optional[Manifest] = None
+        self.exc: Optional[BaseException] = None
+
+
+class GroupCommitter:
+    """Batches concurrent optimistic publishes into single generations.
+
+    The first thread to arrive becomes the *leader*: it takes the dataset
+    write lock, drains every transaction queued meanwhile, validates each
+    against the head (and against the batch accepted so far), and links
+    **one** new generation carrying all accepted entries — N small upserts
+    cost one fsync + one link.  Followers just wait for their verdict.
+    Rejected transactions get :class:`CommitConflict`; an infrastructure
+    failure (lock timeout, I/O error) propagates to every batched waiter.
+    """
+
+    LOCK_TIMEOUT = 30.0
+    CAS_RETRIES = 16
+
+    def __init__(self, dirobj: DatasetDir):
+        self.dir = dirobj
+        self._cv = threading.Condition()
+        self._queue: List[_Pending] = []
+        self._leader_active = False
+
+    def commit(self, txn: Transaction) -> Manifest:
+        p = _Pending(txn)
+        with self._cv:
+            self._queue.append(p)
+            while self._leader_active and not p.done:
+                self._cv.wait()
+            if not p.done:
+                self._leader_active = True
+                batch, self._queue = self._queue, []
+        if not p.done:
+            try:
+                self._publish_batch(batch)
+            finally:
+                with self._cv:
+                    self._leader_active = False
+                    for q in batch:
+                        q.done = True
+                    self._cv.notify_all()
+        if p.exc is not None:
+            raise p.exc
+        assert p.result is not None
+        return p.result
+
+    def _publish_batch(self, batch: List[_Pending]) -> None:
+        try:
+            with self.dir.acquire_lock(timeout=self.LOCK_TIMEOUT):
+                # late arrivals queued while we waited for the file lock
+                # ride along in the same generation
+                with self._cv:
+                    if self._queue:
+                        batch.extend(self._queue)
+                        self._queue = []
+                self._publish_locked(batch)
+        except BaseException as e:
+            for p in batch:
+                if p.result is None and p.exc is None:
+                    p.exc = e
+            if not isinstance(e, Exception):
+                raise
+
+    def _publish_locked(self, batch: List[_Pending]) -> None:
+        for attempt in range(self.CAS_RETRIES):
+            head = self.dir.load()
+            accepted: List[_Pending] = []
+            acc_ids: List[np.ndarray] = []
+            rejections: Dict[int, str] = {}
+            for i, p in enumerate(batch):
+                reason = p.txn._validate_against(head) \
+                    or p.txn._conflict_with_staged(acc_ids)
+                if reason is not None:
+                    rejections[i] = reason
+                else:
+                    accepted.append(p)
+                    acc_ids.extend(p.txn.entry_ids)
+            if accepted:
+                new = head.copy()
+                for p in accepted:
+                    new.deltas.extend(p.txn.entries)
+                new.metadata["op"] = "delta"
+                if not self.dir.try_commit(new):
+                    # a committer outside our lock (crashed-lock break or
+                    # foreign process) advanced the head: re-validate
+                    time.sleep(min(0.002 * (attempt + 1), 0.05))
+                    continue
+                for p in accepted:
+                    p.result = new
+            for i, reason in rejections.items():
+                batch[i].exc = CommitConflict(reason)
+            return
+        raise CommitConflict(
+            "could not publish after "
+            f"{self.CAS_RETRIES} compare-and-swap attempts (a writer "
+            "outside the lock keeps advancing the manifest log)")
+
+
+_COMMITTERS: Dict[str, GroupCommitter] = {}
+_COMMITTERS_LOCK = threading.Lock()
+
+
+def group_committer(dirobj: DatasetDir) -> GroupCommitter:
+    """Process-wide committer for one dataset directory (keyed by realpath)."""
+    key = os.path.realpath(dirobj.path)
+    with _COMMITTERS_LOCK:
+        gc = _COMMITTERS.get(key)
+        if gc is None:
+            gc = _COMMITTERS[key] = GroupCommitter(dirobj)
+        return gc

@@ -6,3 +6,6 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "perf_smoke: wall-clock performance assertion; needs an "
         "unloaded multi-core box (CI runs these in the dedicated perf job)")
+    config.addinivalue_line(
+        "markers", "concurrency: multi-process writer stress; needs >= 2 "
+        "cpus and skips loudly on 1-vCPU boxes (CI concurrency job)")

@@ -102,10 +102,74 @@ def test_readers_unaffected_by_writer_lock(db):
         assert db.read().num_rows == 1  # reads need no lock
 
 
+class TestWriteLockDiagnostics:
+    """Stale-lock handling: pid+timestamp in the lock file, dead-holder
+    break, and loud timeouts naming the live holder."""
+
+    def _lock_path(self, db):
+        return os.path.join(db.db_path, tx.LOCKFILE)
+
+    def test_lock_file_records_holder(self, db):
+        import json
+        import socket
+        import time
+        with db._dir.acquire_lock():
+            with open(self._lock_path(db)) as fh:
+                info = json.load(fh)
+            assert info["pid"] == os.getpid()
+            assert info["host"] == socket.gethostname()
+            assert abs(info["ts"] - time.time()) < 30
+        assert not os.path.exists(self._lock_path(db))
+
+    def test_dead_holder_broken_immediately(self, db):
+        import json
+        import multiprocessing
+        import socket
+        import time
+        db.create([{"a": 1}])
+        p = multiprocessing.get_context("spawn").Process(target=int)
+        p.start()
+        p.join()  # p.pid is now certainly dead
+        with open(self._lock_path(db), "w") as fh:
+            json.dump({"pid": p.pid, "host": socket.gethostname(),
+                       "ts": time.time()}, fh)
+        t0 = time.time()
+        with db._dir.acquire_lock(timeout=0):  # no sleeping out a timeout
+            pass
+        assert time.time() - t0 < 5.0
+        db.create([{"a": 2}])  # and writes work again
+        assert db.n_rows == 2
+
+    def test_dead_holder_legacy_bare_pid_format(self, db):
+        import multiprocessing
+        p = multiprocessing.get_context("spawn").Process(target=int)
+        p.start()
+        p.join()
+        with open(self._lock_path(db), "w") as fh:
+            fh.write(str(p.pid))  # pre-log lock format
+        with db._dir.acquire_lock(timeout=0):
+            pass
+
+    def test_live_holder_timeout0_fast_fails_naming_holder(self, db):
+        from repro.core import WriteLockTimeout
+        with db._dir.acquire_lock():
+            with pytest.raises(WriteLockTimeout) as ei:
+                with db._dir.acquire_lock(timeout=0):
+                    pass
+        msg = str(ei.value)
+        assert f"held by pid {os.getpid()}" in msg
+        assert "alive" in msg
+
+    def test_timeout_diagnostic_is_a_timeout_error(self, db):
+        # backward compat: callers catching TimeoutError still work
+        from repro.core import WriteLockTimeout
+        assert issubclass(WriteLockTimeout, TimeoutError)
+
+
 class TestDeltaCrashes:
     """Crash points of the merge-on-read lifecycle (docs/TRANSACTIONS.md)."""
 
-    def test_crash_during_delta_commit_update(self, tmp_path):
+    def test_crash_during_delta_commit_update(self, tmp_path, monkeypatch):
         db = ParquetDB(str(tmp_path / "db"), "db", auto_compact=False)
         db.create([{"a": i} for i in range(20)])
         crash_next_commit()
@@ -115,11 +179,17 @@ class TestDeltaCrashes:
         db2 = ParquetDB(str(tmp_path / "db"), "db", auto_compact=False)
         assert db2.n_delta_files == 0
         assert db2.read(ids=[3], columns=["a"]).to_pydict()["a"] == [3]
-        # orphan GC'd on open: no stray delta files remain
+        # the orphan survives the first reopen: its writer (this pid) looks
+        # alive and it is younger than the staging grace period...
+        assert [f for f in os.listdir(str(tmp_path / "db"))
+                if f.endswith(".upsert.tpq")]
+        # ...but once aged out of the grace window it is GC'd on open
+        monkeypatch.setenv("REPRO_STAGE_GC_SECONDS", "0")
+        ParquetDB(str(tmp_path / "db"), "db", auto_compact=False)
         assert not [f for f in os.listdir(str(tmp_path / "db"))
                     if f.endswith(".upsert.tpq")]
 
-    def test_crash_during_delta_commit_delete(self, tmp_path):
+    def test_crash_during_delta_commit_delete(self, tmp_path, monkeypatch):
         db = ParquetDB(str(tmp_path / "db"), "db", auto_compact=False)
         db.create([{"a": i} for i in range(10)])
         crash_next_commit()
@@ -127,6 +197,8 @@ class TestDeltaCrashes:
             db.delete(ids=[4])
         db2 = ParquetDB(str(tmp_path / "db"), "db", auto_compact=False)
         assert db2.n_rows == 10 and db2.n_delta_files == 0
+        monkeypatch.setenv("REPRO_STAGE_GC_SECONDS", "0")
+        ParquetDB(str(tmp_path / "db"), "db", auto_compact=False)
         assert not [f for f in os.listdir(str(tmp_path / "db"))
                     if f.endswith(".tombstone.tpq")]
 
