@@ -20,7 +20,8 @@ def _tree(n_leaves: int, leaf_elems: int, seed: int = 0):
 
 
 def run(scale: str = "small") -> List[dict]:
-    n_leaves, elems = {"small": (48, 250_000),      # ~48 MB
+    n_leaves, elems = {"quick": (8, 100_000),       # ~3 MB
+                       "small": (48, 250_000),      # ~48 MB
                        "medium": (96, 1_000_000),   # ~384 MB
                        "paper": (96, 4_000_000)}[scale]
     tree = _tree(n_leaves, elems)

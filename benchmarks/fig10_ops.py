@@ -16,7 +16,8 @@ from .common import TmpDir, row, timeit
 
 
 def run(scale: str = "small") -> List[dict]:
-    n = {"small": 5_000, "medium": 50_000, "paper": 1_000_000}[scale]
+    n = {"quick": 1_000, "small": 5_000, "medium": 50_000,
+         "paper": 1_000_000}[scale]
     out: List[dict] = []
     with TmpDir() as tmp:
         db = ParquetDB(os.path.join(tmp, "pdb"), "alexandria")

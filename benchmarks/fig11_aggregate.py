@@ -44,7 +44,8 @@ FILTER_FRACTION = 3  # keep ids >= n // 3 (+7 to land inside a group)
 
 
 def run(scale: str = "small") -> List[dict]:
-    counts = {"small": [10_000, 50_000],
+    counts = {"quick": [5_000, 10_000],
+              "small": [10_000, 50_000],
               "medium": [10_000, 100_000],
               "paper": [100_000, 1_000_000]}[scale]
     out: List[dict] = []

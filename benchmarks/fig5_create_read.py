@@ -23,7 +23,8 @@ from .docdb import DocDB
 
 
 def run(scale: str = "small") -> List[dict]:
-    counts = {"small": [100, 1_000, 10_000],
+    counts = {"quick": [100, 1_000],
+              "small": [100, 1_000, 10_000],
               "medium": [100, 1_000, 10_000, 100_000],
               "paper": [1, 100, 10_000, 100_000, 1_000_000]}[scale]
     out: List[dict] = []

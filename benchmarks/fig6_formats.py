@@ -34,8 +34,10 @@ def _update_payload(n: int, fmt: str):
 
 
 def run(scale: str = "small") -> List[dict]:
-    base_n = {"small": 20_000, "medium": 100_000, "paper": 1_000_000}[scale]
-    upd_counts = {"small": [100, 1_000, 10_000],
+    base_n = {"quick": 2_000, "small": 20_000, "medium": 100_000,
+              "paper": 1_000_000}[scale]
+    upd_counts = {"quick": [100, 500],
+                  "small": [100, 1_000, 10_000],
                   "medium": [100, 10_000, 100_000],
                   "paper": [100, 10_000, 100_000, 1_000_000]}[scale]
     out: List[dict] = []

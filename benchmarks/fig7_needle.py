@@ -25,7 +25,8 @@ NEEDLE = 77_777_777
 
 
 def run(scale: str = "small") -> List[dict]:
-    counts = {"small": [1_000, 10_000, 50_000],
+    counts = {"quick": [1_000, 5_000],
+              "small": [1_000, 10_000, 50_000],
               "medium": [1_000, 10_000, 100_000],
               "paper": [1_000, 10_000, 100_000, 1_000_000]}[scale]
     out: List[dict] = []

@@ -23,8 +23,10 @@ from .docdb import DocDB
 
 
 def run(scale: str = "small") -> List[dict]:
-    base_n = {"small": 20_000, "medium": 200_000, "paper": 1_000_000}[scale]
-    ks = {"small": [10, 1_000, 10_000],
+    base_n = {"quick": 2_000, "small": 20_000, "medium": 200_000,
+              "paper": 1_000_000}[scale]
+    ks = {"quick": [10, 500],
+          "small": [10, 1_000, 10_000],
           "medium": [10, 1_000, 100_000],
           "paper": [10, 1_000, 100_000, 1_000_000]}[scale]
     rows = gen_rows_pylist(base_n)

@@ -1,19 +1,102 @@
-"""Paper Fig. 9: JSON load time vs ParquetDB create time per shard for the
-(synthetic) Alexandria materials dataset."""
+"""Paper Fig. 9: the (synthetic) Alexandria materials dataset, two ways.
+
+Phase 1 (the paper's figure): JSON load time vs ParquetDB create time per
+shard, into one flat dataset.
+
+Phase 2 (this repo's partitioned layout): the same records re-created into
+a hive-partitioned dataset (``part = spg % N_PARTS``), then
+
+- ``fig9/scan-full/n=...``       full materializing read,
+- ``fig9/scan-selective/n=...``  one-partition query — the manifest prunes
+  every other partition before a single footer is opened (the pruning
+  counters ride along in the derived fields), and
+- ``fig9/scan-sharded-w<k>/n=...``  a multi-process shard-per-worker scan:
+  partitions are placed onto worker processes with the mesh-placement
+  rules from :mod:`repro.distributed.sharding` when jax is importable
+  (``NamedSharding.devices_indices_map`` over a 1-D data mesh), falling
+  back to contiguous blocks on jax-free boxes; each worker opens the
+  dataset itself and reads only its partitions.
+
+``scripts/check_perf.py`` gates ``fig9 partition-prune`` on the
+selective-vs-full ratio of this suite's artifact.
+"""
 from __future__ import annotations
 
 import json
+import math
 import os
 from typing import List
 
 from repro.core import ParquetDB
+from repro.core.expressions import IsIn, field
 
 from .alexandria import write_json_shards
-from .common import TmpDir, row, timeit
+from .common import TmpDir, row, timeit, timeit_median
+
+N_PARTS = 16  # hive partitions: part = spg % N_PARTS
+SELECTIVE_PART = 3
+
+
+def _placement(n_parts: int, n_workers: int) -> tuple:
+    """-> (assignment, mode): partition indices per worker.
+
+    Reuses the distributed mesh-placement rules when jax is available: a
+    1-D ``("pod", "data", "model")`` mesh over the host's devices, the
+    ``batch`` logical axis sharded across it, and the partition index
+    range split by ``NamedSharding.devices_indices_map`` — the same
+    placement a data-parallel loader would get.  Jax-free (or too few
+    devices): contiguous blocks, which is what the mesh degenerates to on
+    one host anyway.
+    """
+    try:
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh, NamedSharding
+
+        from repro.distributed.sharding import spec_for
+
+        devs = jax.devices()
+        if len(devs) >= n_workers and n_parts % n_workers == 0:
+            mesh = Mesh(np.array(devs[:n_workers]).reshape(1, n_workers, 1),
+                        ("pod", "data", "model"))
+            spec = spec_for((n_parts,), ("batch",), mesh)
+            imap = NamedSharding(mesh, spec).devices_indices_map((n_parts,))
+            assign = []
+            seen = set()
+            for dev in devs[:n_workers]:
+                sl = imap[dev][0]
+                block = [i for i in range(*sl.indices(n_parts))
+                         if i not in seen]
+                seen.update(block)
+                assign.append(block)
+            if seen == set(range(n_parts)):
+                return assign, "mesh"
+    except Exception:
+        pass
+    step = math.ceil(n_parts / n_workers)
+    return [list(range(i, min(i + step, n_parts)))
+            for i in range(0, n_parts, step)], "blocks"
+
+
+def _scan_shard(args) -> int:
+    """Worker: open the dataset and read only this worker's partitions."""
+    path, parts = args
+    db = ParquetDB(path, "alexandria_part")
+    return db.read(filters=[IsIn("part", parts)]).num_rows
+
+
+def _sharded_scan(path: str, n_workers: int, assign) -> int:
+    import multiprocessing as mp
+    from concurrent.futures import ProcessPoolExecutor
+    ctx = mp.get_context("spawn")
+    with ProcessPoolExecutor(max_workers=n_workers, mp_context=ctx) as ex:
+        return sum(ex.map(_scan_shard,
+                          [(path, parts) for parts in assign if parts]))
 
 
 def run(scale: str = "small") -> List[dict]:
-    n_total, per_file = {"small": (2_000, 500),
+    n_total, per_file = {"quick": (4_000, 2_000),
+                         "small": (2_000, 500),
                          "medium": (20_000, 5_000),
                          "paper": (500_000, 100_000)}[scale]
     out: List[dict] = []
@@ -21,11 +104,15 @@ def run(scale: str = "small") -> List[dict]:
         shards = write_json_shards(os.path.join(tmp, "json"), n_total,
                                    per_file)
         db = ParquetDB(os.path.join(tmp, "pdb"), "alexandria")
+        shard_data = []
         for i, p in enumerate(shards):
             holder = {}
             t_load = timeit(lambda: holder.setdefault(
                 "d", json.load(open(p))))
             data = holder["d"]["entries"]
+            for r in data:
+                r["part"] = r["data"]["spg"] % N_PARTS
+            shard_data.append(data)
             t_create = timeit(lambda: db.create(
                 data, treat_fields_as_ragged=["data.elements"]))
             out.append(row(f"fig9/json_load/shard={i}", t_load,
@@ -33,4 +120,39 @@ def run(scale: str = "small") -> List[dict]:
             out.append(row(f"fig9/create/shard={i}", t_create,
                            rows=len(data)))
         out.append(row("fig9/total_rows", 0.0, rows=db.n_rows))
+
+        # ---- phase 2: the same records, hive-partitioned by spg bucket
+        ppath = os.path.join(tmp, "pdb_part")
+        pdb = ParquetDB(ppath, "alexandria_part", partition_by=["part"])
+
+        def create_part():
+            for data in shard_data:
+                pdb.create(data, treat_fields_as_ragged=["data.elements"])
+        t_create_part = timeit(create_part)
+        out.append(row(f"fig9/create-part/n={n_total}", t_create_part,
+                       rows=n_total, partitions=N_PARTS))
+
+        t_full = timeit_median(lambda: pdb.read(), k=3)
+        sel = field("part") == SELECTIVE_PART
+        t_sel = timeit_median(lambda: pdb.read(filters=[sel]), k=3)
+        rep = pdb.explain(filters=[sel], execute=True)
+        c = rep.counters
+        out.append(row(f"fig9/scan-full/n={n_total}", t_full, rows=n_total))
+        out.append(row(f"fig9/scan-selective/n={n_total}", t_sel,
+                       rows=c.rows_matched,
+                       partitions_total=c.partitions_total,
+                       partitions_pruned=c.partitions_pruned,
+                       partitions_scanned=c.partitions_scanned,
+                       speedup_vs_full=round(t_full / t_sel, 2)))
+
+        n_workers = min(4, os.cpu_count() or 1)
+        if n_workers > 1:
+            assign, mode = _placement(N_PARTS, n_workers)
+            holder = {}
+            t_shard = timeit(lambda: holder.setdefault(
+                "n", _sharded_scan(ppath, n_workers, assign)))
+            assert holder["n"] == n_total, (holder["n"], n_total)
+            out.append(row(f"fig9/scan-sharded-w{n_workers}/n={n_total}",
+                           t_shard, rows=n_total, workers=n_workers,
+                           placement=mode))
     return out

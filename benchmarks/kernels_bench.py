@@ -15,7 +15,8 @@ from .common import row, timeit
 
 
 def run(scale: str = "small") -> List[dict]:
-    n = {"small": 200_000, "medium": 1_000_000, "paper": 10_000_000}[scale]
+    n = {"quick": 50_000, "small": 200_000, "medium": 1_000_000,
+         "paper": 10_000_000}[scale]
     rng = np.random.default_rng(0)
     out: List[dict] = []
     cases = [

@@ -16,8 +16,8 @@ from .common import TmpDir, row, timeit
 
 
 def run(scale: str = "small") -> List[dict]:
-    n_tokens = {"small": 2_000_000, "medium": 20_000_000,
-                "paper": 200_000_000}[scale]
+    n_tokens = {"quick": 500_000, "small": 2_000_000,
+                "medium": 20_000_000, "paper": 200_000_000}[scale]
     seq, vocab = 1024, 151_936
     out: List[dict] = []
     rng = np.random.default_rng(0)

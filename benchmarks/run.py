@@ -57,7 +57,10 @@ def write_json_artifact(directory: str, suite: str, scale: str,
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small",
-                    choices=["small", "medium", "paper"])
+                    choices=["quick", "small", "medium", "paper"])
+    ap.add_argument("--quick", action="store_true",
+                    help="shorthand for --scale quick: tiny-n smoke runs "
+                         "of every suite, the CI regression signal")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite prefixes")
     ap.add_argument("--store", default=None,
@@ -67,18 +70,25 @@ def main(argv=None) -> int:
                     help="write BENCH_<fig>.json artifacts into DIR "
                          "(default: the canonical bench/ directory)")
     args = ap.parse_args(argv)
+    if args.quick:
+        args.scale = "quick"
 
     only = args.only.split(",") if args.only else None
     all_rows = []
+    errors = 0
     print("name,us_per_call,derived")
     for suite in SUITES:
         if only and not any(suite.startswith(o) for o in only):
             continue
-        mod = importlib.import_module(f".{suite}", package=__package__)
         try:
+            # import inside the guard: a suite with an unavailable
+            # accelerator dep reports one ERROR row instead of killing
+            # the whole run
+            mod = importlib.import_module(f".{suite}", package=__package__)
             rows = mod.run(args.scale)
         except Exception as e:
             print(f"{suite}/ERROR,0,\"{e!r}\"")
+            errors += 1
             continue
         for r in rows:
             derived = {k: v for k, v in r.items()
@@ -96,7 +106,9 @@ def main(argv=None) -> int:
         db = ParquetDB(args.store, "bench_results")
         db.create([{k: (float(v) if isinstance(v, (int, float)) else str(v))
                     for k, v in r.items()} for r in all_rows])
-    return 0
+    # ERROR rows keep the other suites running but still fail the exit
+    # code, so CI smoke runs catch a broken suite
+    return 1 if errors else 0
 
 
 if __name__ == "__main__":

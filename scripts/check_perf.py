@@ -11,7 +11,9 @@ the headline paths:
 
 Additionally ``SCALING_GATES`` asserts self-relative scaling laws on the
 current run alone — e.g. ``fig11 mt4-read`` requires mt4 >= 3x mt1 on the
-zlib-compressed (GIL-releasing) fixture — but only when the artifact's
+zlib-compressed (GIL-releasing) fixture, and ``fig9 partition-prune``
+requires a one-partition query over the hive-partitioned Alexandria
+fixture to beat the full scan >= 5x — but only when the artifact's
 ``cpus`` field says the recording box had enough cores (skipped loudly
 otherwise, so a 2-core runner never fails a 4-core scaling law).
 
@@ -60,6 +62,12 @@ SCALING_GATES = [
     # must deliver >= 3x over 1 worker on the compressed fixture
     ("fig11 mt4-read", "fig11/read-scan-zlib-mt4/parquetdb/",
      "fig11/read-scan-zlib-mt1/parquetdb/", 3.0, 4),
+    # hive partition pruning: a one-partition query over the 16-way
+    # partitioned Alexandria fixture must beat the full scan >= 5x —
+    # pruned partitions cost zero footer opens, so this holds even on a
+    # single-core box (min cpus 1)
+    ("fig9 partition-prune", "fig9/scan-selective/",
+     "fig9/scan-full/", 5.0, 1),
 ]
 
 
@@ -157,7 +165,7 @@ def main(argv=None) -> int:
         print(f"{label:12s} n={n}  speedup={got:.2f}x  "
               f"required>={need:.1f}x  cpus={cur_cpus}  {verdict}")
         if verdict != "OK":
-            failures.append(f"{label}: mt4 speedup {got:.2f}x is below the "
+            failures.append(f"{label}: speedup {got:.2f}x is below the "
                             f"required {need:.1f}x (cpus={cur_cpus})")
     if failures:
         print("PERF GATE FAILED:\n  " + "\n  ".join(failures),

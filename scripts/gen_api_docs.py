@@ -19,8 +19,8 @@ import textwrap
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
-from repro.core import (aggregate, compaction, query, scan, store,  # noqa: E402
-                        transactions)
+from repro.core import (aggregate, compaction, partition, query,  # noqa: E402
+                        scan, store, transactions)
 
 OUT = os.path.join(REPO, "docs", "API.md")
 
@@ -53,6 +53,8 @@ SECTIONS = [
                      "scan_plan", "explain", "aggregate"]),
     (store.NormalizeConfig, ()),
     (store.LoadConfig, ()),
+    (partition.PartitionSpec, ()),
+    (partition.Partitioning, ["dir_of", "key_of", "split", "pruner"]),
     (compaction.CompactionPolicy, ()),
     (compaction.MaintenanceStats, ()),
     (compaction.CompactionResult, ()),

@@ -14,6 +14,7 @@ from .fileformat import TPQReader, TPQWriter, read_table, write_table
 from .scan import (DeltaOverlay, FragmentPlan, ScanCounters, ScanPlan,
                    ScanReport)
 from .aggregate import AggregatePlan
+from .partition import PartitionSpec, Partitioning
 from .query import GroupedQuery, Query, QueryReport
 from .compaction import CompactionPolicy, CompactionResult, MaintenanceStats
 from .transactions import (CommitConflict, DeltaEntry, Manifest, Transaction,
@@ -25,6 +26,7 @@ __all__ = [
     "concat_tables", "Arith", "Expr", "field", "TPQReader", "TPQWriter",
     "read_table", "write_table", "DeltaOverlay", "FragmentPlan",
     "ScanCounters", "ScanPlan", "ScanReport", "AggregatePlan",
+    "PartitionSpec", "Partitioning",
     "GroupedQuery", "Query", "QueryReport",
     "CompactionPolicy", "CompactionResult", "MaintenanceStats",
     "CommitConflict", "DeltaEntry", "Manifest", "Transaction",

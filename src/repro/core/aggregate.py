@@ -130,7 +130,8 @@ class AggregatePlan:
                  reader_of: Callable[[str], TPQReader],
                  schema: Schema, spec: AggSpec,
                  filter_expr: Optional[Expr] = None,
-                 cfg=None, deltas: Sequence[DeltaEntry] = ()):
+                 cfg=None, deltas: Sequence[DeltaEntry] = (),
+                 partitioning=None):
         self._reader_of = reader_of
         self._schema = schema
         self._spec = _normalize_spec(spec, schema)
@@ -140,10 +141,13 @@ class AggregatePlan:
         self._deltas = list(deltas)
         self._need = [c for c in self._spec if c != "*"]
         # the decode path needs at least one physical column to carry row
-        # counts for count(*); id is always present
+        # counts for count(*); id is always present.  Aggregation is
+        # order-insensitive, so the plan skips the partition id-merge
+        # (ordered=False) while keeping manifest-level partition pruning.
         scan_cols = self._need or [ID_COLUMN]
         self._plan = ScanPlan(files, reader_of, schema, columns=scan_cols,
-                              filter_expr=filter_expr, cfg=cfg, deltas=deltas)
+                              filter_expr=filter_expr, cfg=cfg, deltas=deltas,
+                              partitioning=partitioning, ordered=False)
         self._counters: Optional[ScanCounters] = None
         self._executed = False
 
@@ -276,6 +280,10 @@ class AggregatePlan:
         restrict: Dict[str, List[int]] = {}
         read_names = self._plan._read_schema.names
         for frag in frags:
+            if frag.partition_pruned:
+                # the filter provably excludes this whole partition:
+                # contributes nothing, and the footer stays unopened
+                continue
             rd = self._reader_of(frag.file)
             cols_here = [n for n in read_names if n in rd.schema]
             for i in frag.row_groups:

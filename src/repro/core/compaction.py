@@ -163,22 +163,24 @@ def gather_stats(man: Manifest, reader_of: Callable[[str], TPQReader],
     return s
 
 
-def _affected_files(man: Manifest, reader_of, policy: CompactionPolicy,
+def _affected_files(files: List[str], reader_of, policy: CompactionPolicy,
                     shadow_ids: np.ndarray, force: bool) -> List[str]:
-    """Base files that must be rewritten, in manifest order.
+    """Base files (of one partition group) that must be rewritten, in order.
 
     A file is affected when a delta can touch it (any shadowed id inside
     its id range — conservative range check via the footer stats, then
     exact against the sorted shadow set) or when it is under-filled and a
-    small-file coalesce is due.  ``force`` selects everything.
+    small-file coalesce is due.  ``force`` selects everything.  On a
+    partitioned dataset this runs once per partition, so the small-file
+    trigger below counts files *within* one partition directory.
     """
     if force:
-        return list(man.files)
+        return list(files)
     small: List[str] = []
     touched: List[str] = []
     lo_hi = (int(shadow_ids[0]), int(shadow_ids[-1])) if len(shadow_ids) \
         else None
-    for fn in man.files:
+    for fn in files:
         rd = reader_of(fn)
         hit = False
         if lo_hi is not None:
@@ -199,7 +201,7 @@ def _affected_files(man: Manifest, reader_of, policy: CompactionPolicy,
     # small files when there are at least two (or they ride along a delta
     # merge anyway)
     if touched or len(small) >= 2:
-        order = {fn: i for i, fn in enumerate(man.files)}
+        order = {fn: i for i, fn in enumerate(files)}
         return sorted(set(touched) | set(small), key=order.__getitem__)
     return touched
 
@@ -208,46 +210,81 @@ def compact_locked(dirobj: DatasetDir, man: Manifest, schema: Schema,
                    reader_of: Callable[[str], TPQReader],
                    write_file: Callable[[str, Table], None],
                    policy: Optional[CompactionPolicy] = None,
-                   force: bool = False) -> CompactionResult:
+                   force: bool = False,
+                   partitioning=None) -> CompactionResult:
     """Merge deltas + small files into sorted base files; mutate ``man``.
 
     Caller must hold the writer lock and commit ``man`` afterwards iff
     ``result.compacted``.  Staged files become garbage (collected on next
     open) if the caller's commit never happens — crash-safe by construction.
+
+    ``partitioning`` (a :class:`~repro.core.partition.Partitioning`) scopes
+    the whole pass to one partition at a time: affected-file selection,
+    the merge scan, the id sort and the rewrite each see only one
+    partition's files, so cost scales with the *touched partitions*, not
+    the dataset — and new files land back in their ``col=value/``
+    directory with the partition map updated.  Sound because partition
+    columns are immutable (a delta row's partition always matches the base
+    row it shadows).
     """
     policy = policy or CompactionPolicy()
     result = CompactionResult(compacted=False, generation=man.generation)
     if not man.files and not man.deltas:
         return result
     # Resolve the chain once: the same overlay drives affected-file
-    # selection here and the merge scan below.  The manifest schema always
+    # selection here and the merge scans below.  The manifest schema always
     # leads with the id column, so it is a valid overlay read schema.
     overlay = DeltaOverlay(man.deltas, reader_of, schema) if man.deltas \
         else None
     shadow = overlay.shadow_ids if overlay is not None \
         else np.empty(0, np.int64)
-    merge = _affected_files(man, reader_of, policy, shadow, force)
-    if overlay is not None and len(overlay.upsert_ids) and not merge:
-        merge = list(man.files)  # never drop an upsert: merge everything
-    if not merge and not man.deltas:
+    if partitioning is None:
+        groups = [(None, list(man.files))]
+    else:
+        by_key: dict = {}
+        for fn in man.files:
+            by_key.setdefault(partitioning.key_of(fn), []).append(fn)
+        groups = sorted(by_key.items(),
+                        key=lambda kv: (kv[0] is None, kv[0] or ""))
+    merge_of = {key: _affected_files(files, reader_of, policy, shadow, force)
+                for key, files in groups}
+    n_merge = sum(len(m) for m in merge_of.values())
+    if overlay is not None and len(overlay.upsert_ids) and not n_merge:
+        # never drop an upsert: merge everything
+        merge_of = {key: list(files) for key, files in groups}
+        n_merge = len(man.files)
+    if not n_merge and not man.deltas:
         return result
     if man.deltas:
         result.reasons.append(f"fold {len(man.deltas)} delta files")
-    if merge:
-        result.reasons.append(f"rewrite {len(merge)} base files")
-    # Merged view of the affected region only: the overlay substitutes
-    # upserts / drops tombstones while streaming; every shadowed base row
-    # lives in an affected file (range check is conservative-inclusive),
-    # so the subset scan observes the complete delta effect.  The scan and
-    # the rewrite below both run on the shared morsel pool
-    # (policy.num_threads), so compaction cost also scales down with cores.
-    plan = ScanPlan(merge, reader_of, schema, deltas=man.deltas,
-                    overlay=overlay, cfg=policy)
-    parts = list(plan.execute())
-    keep = [fn for fn in man.files if fn not in set(merge)]
+    if n_merge:
+        result.reasons.append(f"rewrite {n_merge} base files")
+    merged_set = {fn for m in merge_of.values() for fn in m}
+    keep_all = [fn for fn in man.files if fn not in merged_set]
     new_files: List[str] = []
     rows_written = 0
-    if parts:
+    pieces: List[tuple] = []
+    for key, files in groups:
+        merge = merge_of[key]
+        if not merge:
+            continue
+        vals = partitioning.files.get(merge[0]) \
+            if partitioning is not None else None
+        subdir = partitioning.dir_of(vals) if vals is not None else None
+        # Merged view of this group's affected region only: the overlay
+        # substitutes upserts / drops tombstones while streaming; every
+        # shadowed base row lives in an affected file of its own partition
+        # (range check is conservative-inclusive and partitions are
+        # immutable), so the per-group scans jointly observe the complete
+        # delta effect before the chain is cleared below.
+        plan = ScanPlan(merge, reader_of, schema, deltas=man.deltas,
+                        overlay=overlay, cfg=policy)
+        parts = list(plan.execute())
+        if partitioning is not None:
+            for fn in merge:
+                partitioning.forget(fn)
+        if not parts:
+            continue  # every row of the group tombstoned
         merged = concat_tables(parts)
         ids = merged.column(ID_COLUMN).values
         order = np.argsort(ids, kind="stable")
@@ -255,27 +292,32 @@ def compact_locked(dirobj: DatasetDir, man: Manifest, schema: Schema,
         step = max(int(policy.target_rows_per_file
                        or DEFAULT_ROW_GROUP_ROWS), 1)
         # A kept file may sit *between* merged files in id space; an output
-        # file spanning its range would break global id order (and future
-        # id-range overlap checks).  Cut the sorted merge at every kept
-        # file's min id so output ranges interleave cleanly with kept ones.
-        cut_ids = sorted(_min_id(reader_of(fn)) for fn in keep)
+        # file spanning its range would break per-partition id order (and
+        # future id-range overlap checks).  Cut the sorted merge at every
+        # same-partition kept file's min id so output ranges interleave
+        # cleanly with kept ones.
+        keep_g = [fn for fn in files if fn not in merged_set]
+        cut_ids = sorted(_min_id(reader_of(fn)) for fn in keep_g)
         cuts = np.unique(np.searchsorted(ids[order], cut_ids))
         bounds = [0] + [int(c) for c in cuts if 0 < c < merged.num_rows] \
             + [merged.num_rows]
         # name files serially (new_file_name mutates the manifest), write
-        # them in parallel — outputs are disjoint paths, and a crash mid-
-        # write only leaves uncommitted files for the next open's GC
-        pieces: List[tuple] = []
+        # them in parallel at the end — outputs are disjoint paths, and a
+        # crash mid-write only leaves uncommitted files for the next
+        # open's GC
         for seg_lo, seg_hi in zip(bounds, bounds[1:]):
             for s in range(seg_lo, seg_hi, step):
                 piece = merged.slice(s, min(s + step, seg_hi))
-                nf = dirobj.new_file_name(man)
+                nf = dirobj.new_file_name(man, subdir=subdir)
+                if vals is not None:
+                    partitioning.record(nf, vals)
                 pieces.append((nf, piece))
                 new_files.append(nf)
                 rows_written += piece.num_rows
+    if pieces:
         # write fan-out only on an explicit thread count: encoding under
         # auto mode is usually GIL-bound (same reasoning as the scan's
-        # profitability gate, which the merge ScanPlan above applies)
+        # profitability gate, which the merge ScanPlans above apply)
         nthreads = resolve_num_threads(policy) \
             if policy.num_threads is not None else 1
         if nthreads > 1 and len(pieces) > 1:
@@ -287,12 +329,16 @@ def compact_locked(dirobj: DatasetDir, man: Manifest, schema: Schema,
         else:
             for nf, piece in pieces:
                 write_file(dirobj.file_path(nf), piece)
-    result.dropped_files = merge + [d.name for d in man.deltas]
-    man.files = _sorted_by_min_id(keep + new_files, reader_of)
+    man_order = {fn: i for i, fn in enumerate(man.files)}
+    dropped = sorted(merged_set, key=man_order.__getitem__)
+    result.dropped_files = dropped + [d.name for d in man.deltas]
+    man.files = _sorted_by_min_id(keep_all + new_files, reader_of)
     man.deltas = []
+    if partitioning is not None:
+        partitioning.store(man)
     result.compacted = True
-    result.files_merged = len(merge)
-    result.deltas_merged = len(result.dropped_files) - len(merge)
+    result.files_merged = len(dropped)
+    result.deltas_merged = len(result.dropped_files) - len(dropped)
     result.files_written = len(new_files)
     result.rows_written = rows_written
     return result

@@ -1,0 +1,297 @@
+"""Hive-style partitioning: spec, directory layout, and manifest-level pruning.
+
+A partitioned dataset writes each :meth:`~repro.core.store.ParquetDB.create`
+batch into ``col=value/`` subdirectories (the hive layout), one file per
+partition per create.  The partition *values* of every base file are
+recorded as typed JSON in the manifest metadata — never parsed back out of
+directory names — which is what lets :class:`~repro.core.scan.ScanPlan`
+prune whole partitions **before touching any footer**: a pruned partition
+costs zero ``open()``/``stat()`` calls, not just zero decoded pages.
+
+Two modes:
+
+``value``
+    One directory per distinct tuple of partition-column values,
+    ``a=1/b=x/``; ``None`` maps to ``__HIVE_DEFAULT_PARTITION__`` (the
+    hive convention).  Pruning synthesizes a single-value
+    :class:`~repro.core.statistics.ColumnStats` per partition column and
+    reuses ``Expr.prune`` — so every filter shape the row-group pruner
+    understands prunes partitions too, conservatively.
+
+``hash``
+    ``buckets`` directories ``bucket=<i>``, ``i = crc32(encoded values)
+    % buckets``.  Only equality shapes (``==`` / ``isin`` on a
+    single-column spec) are prunable; everything else scans every bucket.
+
+Soundness notes (enforced by the store):
+
+- Partition columns are **immutable** per row: ``update`` rejects writes
+  to them and ``delete(columns=...)`` cannot drop them.  That makes a
+  row's partition a function of its id, which is what makes both
+  partition-disjoint MVCC commits and per-partition compaction sound.
+- Upsert deltas carry *new* column values that the partition values
+  cannot bound for non-partition columns, so the scan planner disables
+  partition pruning while any upsert delta is pending (compaction
+  restores it).  Tombstones are fine: dropping rows commutes with
+  filtering.
+"""
+from __future__ import annotations
+
+import dataclasses
+import urllib.parse
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .dtypes import KIND_NUMERIC
+from .expressions import And, Comparison, Expr, FieldRef, IsIn, Or
+from .statistics import ColumnStats
+from .table import Table
+
+__all__ = ["PartitionSpec", "Partitioning", "HIVE_NULL",
+           "PARTITION_META_KEY", "hash_bucket"]
+
+# manifest.metadata key holding {"by", "mode", "buckets", "files"}
+PARTITION_META_KEY = "partitioning"
+# hive's spelling for a null partition value
+HIVE_NULL = "__HIVE_DEFAULT_PARTITION__"
+MODES = ("value", "hash")
+
+
+def _encode_value(v: Any) -> str:
+    """Deterministic, filesystem-safe spelling of one partition value.
+
+    Integral floats normalize to their int spelling and bools to 0/1 so
+    that ``hash_bucket`` agrees between a column's storage dtype and the
+    literal a filter happens to use (``f('k') == 5`` vs a float column).
+    """
+    if v is None:
+        return HIVE_NULL
+    if isinstance(v, (bool, np.bool_)):
+        return str(int(v))
+    if isinstance(v, (float, np.floating)) and float(v).is_integer():
+        return str(int(v))
+    return urllib.parse.quote(str(v), safe="")
+
+
+def hash_bucket(values: Sequence[Any], buckets: int) -> int:
+    """Stable bucket of one partition-value tuple (crc32, process-stable)."""
+    key = "/".join(_encode_value(v) for v in values)
+    return zlib.crc32(key.encode("utf-8")) % buckets
+
+
+def _json_value(v: Any) -> Any:
+    """Typed JSON spelling of a partition value (numpy scalars unwrapped)."""
+    return v.item() if isinstance(v, np.generic) else v
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """What a dataset is partitioned by: columns + mode (+ bucket count)."""
+    by: Tuple[str, ...]
+    mode: str = "value"
+    buckets: int = 16
+
+    def __post_init__(self):
+        if not self.by:
+            raise ValueError("partition_by is empty")
+        if self.mode not in MODES:
+            raise ValueError(f"partition mode {self.mode!r} "
+                             f"(expected one of {MODES})")
+        if self.mode == "hash" and self.buckets < 1:
+            raise ValueError("partition_buckets must be >= 1")
+
+    def to_dict(self) -> dict:
+        return {"by": list(self.by), "mode": self.mode,
+                "buckets": int(self.buckets)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PartitionSpec":
+        return cls(by=tuple(d["by"]), mode=d.get("mode", "value"),
+                   buckets=int(d.get("buckets", 16)))
+
+
+def _group_indices(inv: np.ndarray, k: int) -> List[np.ndarray]:
+    """Row indices per group code, original order preserved within a group."""
+    order = np.argsort(inv, kind="stable")
+    bounds = np.searchsorted(inv[order], np.arange(k + 1))
+    return [order[bounds[i]:bounds[i + 1]] for i in range(k)]
+
+
+def _candidate_buckets(expr: Expr, spec: PartitionSpec) -> Optional[set]:
+    """Upper bound on the hash buckets ``expr`` can match, or None.
+
+    Only single-column hash specs are decidable (a multi-column bucket
+    needs every component pinned); only ``==``/``isin`` shapes pin a
+    value.  ``None`` means "any bucket" — no pruning.
+    """
+    if len(spec.by) != 1:
+        return None
+    col = spec.by[0]
+
+    def cand(e: Expr) -> Optional[set]:
+        if isinstance(e, And):
+            a, b = cand(e.a), cand(e.b)
+            if a is None:
+                return b
+            return a if b is None else (a & b)
+        if isinstance(e, Or):
+            a, b = cand(e.a), cand(e.b)
+            return None if (a is None or b is None) else (a | b)
+        if isinstance(e, Comparison) and e.op == "==" and e.name == col \
+                and not isinstance(e.value, FieldRef):
+            return {hash_bucket((e.value,), spec.buckets)}
+        if isinstance(e, IsIn) and e.name == col:
+            return {hash_bucket((v,), spec.buckets) for v in e.values}
+        return None
+
+    return cand(expr)
+
+
+class Partitioning:
+    """A :class:`PartitionSpec` plus the per-file partition values.
+
+    Persisted inside ``Manifest.metadata["partitioning"]`` as::
+
+        {"by": [...], "mode": "value"|"hash", "buckets": N,
+         "files": {file_name: [typed values...]}}   # hash mode: [bucket]
+
+    Files absent from the map (e.g. written before the spec existed) are
+    treated as unpartitioned: never pruned, always scanned.
+    """
+
+    def __init__(self, spec: PartitionSpec,
+                 files: Optional[Dict[str, list]] = None):
+        self.spec = spec
+        self.files: Dict[str, list] = dict(files or {})
+
+    # ------------------------------------------------------------ persistence
+    @classmethod
+    def from_manifest(cls, man) -> Optional["Partitioning"]:
+        meta = (man.metadata or {}).get(PARTITION_META_KEY)
+        if not meta:
+            return None
+        return cls(PartitionSpec.from_dict(meta),
+                   {k: list(v) for k, v in meta.get("files", {}).items()})
+
+    def store(self, man) -> None:
+        d = self.spec.to_dict()
+        d["files"] = {k: list(v) for k, v in self.files.items()}
+        man.metadata[PARTITION_META_KEY] = d
+
+    # ------------------------------------------------------------ layout
+    def dir_of(self, values: Sequence[Any]) -> str:
+        """Relative partition directory ("a=1/b=x" or "bucket=3")."""
+        if self.spec.mode == "hash":
+            return f"bucket={int(values[0])}"
+        return "/".join(f"{urllib.parse.quote(str(c), safe='')}"
+                        f"={_encode_value(v)}"
+                        for c, v in zip(self.spec.by, values))
+
+    def key_of(self, name: str) -> Optional[str]:
+        """Canonical partition key of a base file, None when unknown."""
+        vals = self.files.get(name)
+        return None if vals is None else self.dir_of(vals)
+
+    def record(self, name: str, values: Sequence[Any]) -> None:
+        self.files[name] = [_json_value(v) for v in values]
+
+    def forget(self, name: str) -> None:
+        self.files.pop(name, None)
+
+    def rename(self, old: str, new: str) -> None:
+        if old in self.files:
+            self.files[new] = self.files.pop(old)
+
+    # ------------------------------------------------------------ splitting
+    def split(self, table: Table) -> List[Tuple[list, np.ndarray]]:
+        """Group a table's rows by partition.
+
+        Returns ``[(values, row_indices), ...]`` sorted by partition
+        directory; row order is preserved within each group (ids stay
+        ascending per partition file).  ``values`` is the JSON-typed
+        value list recorded in the manifest ([bucket] in hash mode).
+        """
+        for c in self.spec.by:
+            if c not in table:
+                raise KeyError(f"partition column {c!r} missing from batch")
+        cols = [table.column(c) for c in self.spec.by]
+        n = table.num_rows
+        if n == 0:
+            return []
+        if self.spec.mode == "hash":
+            rows = zip(*[c.to_pylist() for c in cols])
+            codes = np.fromiter(
+                (hash_bucket(tup, self.spec.buckets) for tup in rows),
+                np.int64, count=n)
+            uniq, inv = np.unique(codes, return_inverse=True)
+            groups = _group_indices(inv, len(uniq))
+            return [([int(u)], idx) for u, idx in zip(uniq, groups)]
+        c0 = cols[0]
+        if len(cols) == 1 and c0.dtype.kind == KIND_NUMERIC \
+                and c0.validity is None and not c0.dtype.is_float:
+            # fast path: single non-null integer column, fully vectorized
+            uniq, inv = np.unique(c0.values, return_inverse=True)
+            groups = _group_indices(inv, len(uniq))
+            return [([u.item()], idx) for u, idx in zip(uniq, groups)]
+        seen: Dict[tuple, int] = {}
+        vals_out: List[list] = []
+        inv = np.empty(n, np.int64)
+        for i, tup in enumerate(zip(*[c.to_pylist() for c in cols])):
+            code = seen.get(tup)
+            if code is None:
+                code = len(seen)
+                seen[tup] = code
+                vals_out.append([_json_value(v) for v in tup])
+            inv[i] = code
+        groups = _group_indices(inv, len(seen))
+        out = list(zip(vals_out, groups))
+        out.sort(key=lambda g: self.dir_of(g[0]))
+        return out
+
+    def keys_of_table(self, table: Table) -> List[str]:
+        """Distinct partition keys a (full-width) staged batch touches."""
+        return sorted({self.dir_of(v) for v, _ in self.split(table)})
+
+    # ------------------------------------------------------------ pruning
+    def _may_match_values(self, values: Sequence[Any], expr: Expr) -> bool:
+        stats: Dict[str, ColumnStats] = {}
+        for col, v in zip(self.spec.by, values):
+            if v is None:
+                stats[col] = ColumnStats(num_values=1, null_count=1)
+            else:
+                stats[col] = ColumnStats(num_values=1, min=v, max=v)
+        return expr.prune(stats)
+
+    def pruner(self, expr: Optional[Expr]) -> Callable[[str], bool]:
+        """Per-plan closure: ``may_scan(file_name) -> bool``.
+
+        False only when the file's recorded partition values *prove* no
+        row can match ``expr``; unknown files always scan.  Candidate
+        buckets (hash mode) and per-tuple verdicts (value mode) are
+        computed once per plan, not per file.
+        """
+        if expr is None:
+            return lambda name: True
+        if self.spec.mode == "hash":
+            cand = _candidate_buckets(expr, self.spec)
+            if cand is None:
+                return lambda name: True
+
+            def may_hash(name: str) -> bool:
+                vals = self.files.get(name)
+                return vals is None or int(vals[0]) in cand
+            return may_hash
+        memo: Dict[tuple, bool] = {}
+
+        def may_value(name: str) -> bool:
+            vals = self.files.get(name)
+            if vals is None:
+                return True
+            key = tuple(vals)
+            v = memo.get(key)
+            if v is None:
+                v = memo[key] = self._may_match_values(vals, expr)
+            return v
+        return may_value

@@ -756,7 +756,8 @@ class Query:
                                f"columns are {avail}")
         plan = ScanPlan(man.files, self._db._reader_of, schema,
                         columns=scan_cols, filter_expr=self._where,
-                        cfg=self._cfg, deltas=man.deltas)
+                        cfg=self._cfg, deltas=man.deltas,
+                        partitioning=self._db._partitioning_of(man))
         return _Compiled(man, schema, plan, scan_cols, out_pre, computed)
 
     # ------------------------------------------------------------ execution
@@ -922,7 +923,8 @@ class Query:
             man, schema = self._snapshot()
             plan = AggregatePlan(man.files, self._db._reader_of, schema,
                                  {"*": "count"}, filter_expr=self._where,
-                                 cfg=self._cfg, deltas=man.deltas)
+                                 cfg=self._cfg, deltas=man.deltas,
+                                 partitioning=self._db._partitioning_of(man))
             total = plan.execute()["*"]["count"]
             total = max(0, total - self._offset)
             return total if self._limit is None else min(total, self._limit)
@@ -958,7 +960,8 @@ class Query:
             _normalize_spec(spec, schema)  # plan-build-time validation
             plan = AggregatePlan(man.files, self._db._reader_of, schema,
                                  spec, filter_expr=self._where,
-                                 cfg=self._cfg, deltas=man.deltas)
+                                 cfg=self._cfg, deltas=man.deltas,
+                                 partitioning=self._db._partitioning_of(man))
             values = plan.execute()
             return (values, plan.report()) if explain else values
         q = self

@@ -274,6 +274,15 @@ class ScanCounters:
     files_total: int = 0
     files_scanned: int = 0
     files_skipped: int = 0
+    # hive partitioning (planning fills these from manifest metadata):
+    # a *pruned* partition was eliminated before any footer was opened —
+    # partition-pruned files count into files_skipped but their row groups
+    # are unknown (footer never read) and excluded from row_groups_total.
+    # A partition whose every file was pruned by footer stats instead
+    # counts in neither pruned nor scanned.
+    partitions_total: int = 0
+    partitions_scanned: int = 0
+    partitions_pruned: int = 0
     row_groups_total: int = 0
     row_groups_scanned: int = 0
     row_groups_skipped: int = 0
@@ -327,6 +336,10 @@ class FragmentPlan:
     pushdown: bool              # filter evaluated inside the reader
     pruned: bool                # whole file eliminated by stats
     delta_overlap: bool = False  # may hold upserted rows: full decode
+    partition: Optional[str] = None   # hive partition key ("a=1/b=x")
+    # eliminated from manifest metadata alone — footer never opened, so
+    # num_row_groups is 0 (unknown) and byte accounting skips the file
+    partition_pruned: bool = False
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -366,6 +379,12 @@ class ScanReport:
             f"  bytes:      {c.bytes_selected} selected "
             f"of {c.bytes_total} stored",
         ]
+        if c.partitions_total:
+            lines.append(
+                f"  partitions: {c.partitions_scanned} scanned, "
+                f"{c.partitions_pruned} pruned from manifest metadata "
+                f"(of {c.partitions_total})")
+            lines.extend(self._partition_tree())
         if c.delta_files:
             d = (f"  deltas:     {c.delta_files} files "
                  f"({c.delta_upsert_rows} upsert rows, "
@@ -393,6 +412,31 @@ class ScanReport:
             lines.append("  (planned only — pass execute=True for decode "
                          "counters)")
         return "\n".join(lines)
+
+    _TREE_MAX = 12  # partition-tree lines rendered before eliding
+
+    def _partition_tree(self) -> List[str]:
+        """One line per partition: files scanned / pruned, pruning source."""
+        parts: Dict[str, List[FragmentPlan]] = {}
+        for f in self.fragments:
+            if f.partition is not None:
+                parts.setdefault(f.partition, []).append(f)
+        out = []
+        for key in sorted(parts):
+            fs = parts[key]
+            if all(f.partition_pruned for f in fs):
+                verdict = "pruned (manifest, 0 footers opened)"
+            elif not any(f.row_groups for f in fs):
+                verdict = "pruned (footer stats)"
+            else:
+                scanned = sum(1 for f in fs if f.row_groups)
+                verdict = f"{scanned}/{len(fs)} files scanned"
+            out.append(f"    {key}/  {verdict}")
+            if len(out) == self._TREE_MAX and len(parts) > self._TREE_MAX:
+                out.append(f"    … and {len(parts) - self._TREE_MAX} "
+                           f"more partitions")
+                break
+        return out
 
 
 class DeltaOverlay:
@@ -549,6 +593,22 @@ class ScanPlan:
                  (files absent from the map scan nothing).  The aggregate
                  layer uses it to decode only the *partial* row groups
                  that footer statistics could not answer.
+    partitioning: the dataset's :class:`~repro.core.partition.Partitioning`
+                 (or None).  Enables manifest-level partition pruning —
+                 whole partitions eliminated *before any footer is
+                 opened* — and, when several partitions survive, the
+                 order-preserving id merge that keeps the output
+                 byte-identical to an unpartitioned scan (each create
+                 splits one ascending id range across partitions, so
+                 partition streams must be re-interleaved by id).
+                 Partition pruning is disabled while the chain holds
+                 upsert deltas: an upsert carries *new* non-partition
+                 values the recorded partition values cannot bound
+                 (tombstones are fine — dropping commutes with
+                 filtering).  Compaction folds the chain and restores it.
+    ordered:     set False when the caller does not need globally
+                 id-ordered output (aggregation): skips the merge and the
+                 implied id-column read.
     """
 
     def __init__(self, files: Sequence[str],
@@ -559,7 +619,8 @@ class ScanPlan:
                  cfg=None, prune: bool = True,
                  deltas: Sequence[DeltaEntry] = (),
                  overlay: Optional[DeltaOverlay] = None,
-                 restrict: Optional[Dict[str, Sequence[int]]] = None):
+                 restrict: Optional[Dict[str, Sequence[int]]] = None,
+                 partitioning=None, ordered: bool = True):
         self._files = list(files)
         self._reader_of = reader_of
         self._schema = schema
@@ -587,6 +648,20 @@ class ScanPlan:
                                   if c in schema and c not in out_names]
         if self._deltas and ID_COLUMN not in read_names:
             read_names.append(ID_COLUMN)  # overlay needs row identity
+        self._partitioning = partitioning
+        # the ordered merge engages only when >1 partition stream can
+        # actually appear in this plan (and row identity is available)
+        self._merge_parts = False
+        if partitioning is not None and ordered and ID_COLUMN in schema:
+            keys = {partitioning.key_of(f) for f in self._files}
+            self._merge_parts = len(keys) > 1
+        if self._merge_parts and ID_COLUMN not in read_names:
+            read_names.append(ID_COLUMN)  # merge needs row identity
+        # what _finish_table emits: output columns, plus id while an
+        # ordered merge still needs it (stripped again after the merge)
+        self._emit_names = list(out_names)
+        if self._merge_parts and ID_COLUMN not in out_names:
+            self._emit_names.append(ID_COLUMN)
         self._read_schema = schema.select(read_names)
         self._fragments: Optional[List[FragmentPlan]] = None
         self._plan_counters: Optional[ScanCounters] = None
@@ -623,7 +698,25 @@ class ScanPlan:
             c.delta_upsert_rows = ov.upsert_rows_total
             c.delta_tombstone_rows = ov.tombstone_rows_total
         frags: List[FragmentPlan] = []
+        # manifest-level partition pruning: sound only when no upsert delta
+        # is pending (an upsert's new values are unbounded by the recorded
+        # partition values for non-partition columns; tombstones commute
+        # with filtering).  A pruned partition opens zero footers.
+        part = self._partitioning
+        may_scan = None
+        if part is not None and self._prune and self._expr is not None \
+                and (ov is None or not len(ov.upsert_ids)):
+            may_scan = part.pruner(self._expr)
         for fn in self._files:
+            pk = part.key_of(fn) if part is not None else None
+            if may_scan is not None and pk is not None \
+                    and not may_scan(fn):
+                c.files_total += 1
+                c.files_skipped += 1
+                frags.append(FragmentPlan(fn, 0, [], False, pruned=True,
+                                          partition=pk,
+                                          partition_pruned=True))
+                continue
             rd = self._reader_of(fn)
             n = rd.num_row_groups
             have = set(rd.schema.names)
@@ -657,7 +750,20 @@ class ScanPlan:
                 c.files_skipped += 1
             frags.append(FragmentPlan(fn, n, selected, pushdown,
                                       pruned=not selected,
-                                      delta_overlap=overlap))
+                                      delta_overlap=overlap,
+                                      partition=pk))
+        if part is not None:
+            by_key: Dict[str, List[FragmentPlan]] = {}
+            for f in frags:
+                if f.partition is not None:
+                    by_key.setdefault(f.partition, []).append(f)
+            c.partitions_total = len(by_key)
+            c.partitions_pruned = sum(
+                1 for fs in by_key.values()
+                if all(f.partition_pruned for f in fs))
+            c.partitions_scanned = sum(
+                1 for fs in by_key.values()
+                if any(f.row_groups for f in fs))
         self._fragments, self._plan_counters = frags, c
 
     # --------------------------------------------------------------- execute
@@ -691,23 +797,122 @@ class ScanPlan:
         self.last_counters = counters
 
         morsels = self._morsels()
-        mode = self._choose_executor(morsels)
-        if mode == "process":
-            stream = self._execute_process(morsels, counters, map_fn)
-        elif mode == "thread":
-            stream = self._execute_parallel(morsels, counters, map_fn)
+        # the ordered partition merge applies to table output only; mapped
+        # values (grouped partial aggregation) are order-insensitive and
+        # consumed in (deterministic) submission order
+        merge = self._merge_parts and map_fn is None \
+            and len({m[0].partition for m in morsels}) > 1
+        tagged = self._execute_stream(morsels, counters, map_fn)
+        if merge:
+            stream = self._merge_streams(tagged, morsels)
         else:
-            def pieces() -> Generator[Any, None, None]:
-                for frag, rgs in morsels:
-                    for t in self._fragment_tables(frag, counters,
-                                                   row_groups=rgs):
-                        yield t if map_fn is None else map_fn(t)
-            stream = (prefetch(pieces(), self._readahead)
-                      if self._use_threads else pieces())
+            def flat() -> Generator[Any, None, None]:
+                for _frag, vals in tagged:
+                    yield from vals
+            stream = flat()
+        if map_fn is None and self._emit_names != self._out_schema.names:
+            out_names = self._out_schema.names
+            inner = stream
+
+            def strip() -> Generator[Table, None, None]:
+                for t in inner:
+                    yield t.select(out_names)
+            stream = strip()
         if batch_size is None:
             yield from stream
         else:
             yield from rechunk(stream, batch_size)
+
+    def _execute_stream(self, morsels, counters: ScanCounters,
+                        map_fn: Optional[Callable[[Table], Any]] = None
+                        ) -> Generator[Any, None, None]:
+        """Run the chosen executor; yields ``(frag, [values])`` per morsel
+        in submission order (empty morsels included, so a merge consumer
+        can account stream progress exactly)."""
+        mode = self._choose_executor(morsels)
+        if mode == "process":
+            return self._execute_process(morsels, counters, map_fn)
+        if mode == "thread":
+            return self._execute_parallel(morsels, counters, map_fn)
+
+        def pieces() -> Generator[Any, None, None]:
+            for frag, rgs in morsels:
+                vals = [t if map_fn is None else map_fn(t)
+                        for t in self._fragment_tables(frag, counters,
+                                                       row_groups=rgs)]
+                yield frag, vals
+        return (prefetch(pieces(), self._readahead)
+                if self._use_threads else pieces())
+
+    def _merge_streams(self, tagged, morsels
+                       ) -> Generator[Table, None, None]:
+        """K-way watermark merge: re-interleave partition streams by id.
+
+        Every partition's files (manifest order) form an ascending id
+        stream — one ``create`` splits its ascending id range across
+        partitions, so reconstructing the unpartitioned row order is
+        exactly a merge of those streams.  Tables buffer per stream; rows
+        up to the *watermark* (the smallest last-buffered id among
+        streams that may still produce rows) are provably complete and
+        are emitted sorted.  Round-robin morsel submission (see
+        :meth:`_morsels`) keeps every stream advancing together, so
+        buffers stay ~morsel-sized.
+        """
+        remaining: Dict[Optional[str], int] = {}
+        for frag, _rgs in morsels:
+            remaining[frag.partition] = remaining.get(frag.partition, 0) + 1
+        bufs: Dict[Optional[str], List[Table]] = \
+            {k: [] for k in remaining}
+
+        def flush(final: bool) -> Optional[Table]:
+            if final:
+                wm = None
+            else:
+                wm_ids = []
+                for k, rem in remaining.items():
+                    if not bufs[k]:
+                        if rem > 0:
+                            return None  # stream not bounded yet
+                        continue
+                    last = bufs[k][-1].column(ID_COLUMN).values
+                    if rem > 0:
+                        wm_ids.append(int(last[-1]))
+                if not wm_ids:
+                    wm = None  # every live stream exhausted: emit all
+                else:
+                    wm = min(wm_ids)
+            parts: List[Table] = []
+            for k in bufs:
+                keep: List[Table] = []
+                for t in bufs[k]:
+                    ids = t.column(ID_COLUMN).values
+                    if wm is None or ids[-1] <= wm:
+                        parts.append(t)
+                    else:
+                        cut = int(np.searchsorted(ids, wm, "right"))
+                        if cut:
+                            parts.append(t.slice(0, cut))
+                            keep.append(t.slice(cut, t.num_rows))
+                        else:
+                            keep.append(t)
+                bufs[k] = keep
+            if not parts:
+                return None
+            merged = concat_tables(parts)
+            order = np.argsort(
+                merged.column(ID_COLUMN).values, kind="stable")
+            return merged.take(order)
+
+        for frag, tables in tagged:
+            key = frag.partition
+            bufs[key].extend(t for t in tables if t.num_rows)
+            remaining[key] -= 1
+            out = flush(final=False)
+            if out is not None and out.num_rows:
+                yield out
+        out = flush(final=True)
+        if out is not None and out.num_rows:
+            yield out
 
     # ------------------------------------------------------- morsel dispatch
     def _morsels(self) -> List[Tuple[FragmentPlan, List[int]]]:
@@ -733,6 +938,16 @@ class ScanPlan:
                     run, rows = [], 0
             if run:
                 out.append((frag, run))
+        if self._merge_parts:
+            # round-robin across partition streams: every stream advances
+            # together, so the ordered merge's buffers stay morsel-sized
+            # instead of holding whole partitions
+            streams: Dict[Optional[str], List] = {}
+            for m in out:
+                streams.setdefault(m[0].partition, []).append(m)
+            if len(streams) > 1:
+                out = [m for tup in itertools.zip_longest(*streams.values())
+                       for m in tup if m is not None]
         return out
 
     def _choose_executor(self, morsels) -> str:
@@ -814,18 +1029,19 @@ class ScanPlan:
 
         it = iter(morsels)
         inflight: "collections.deque" = collections.deque(
-            pool.submit(run_morsel, frag, rgs)
+            (pool.submit(run_morsel, frag, rgs), frag)
             for frag, rgs in itertools.islice(it, max_inflight))
         try:
             while inflight:
-                tables, local = inflight.popleft().result()
+                fut, frag = inflight.popleft()
+                tables, local = fut.result()
                 counters.merge_from(local)  # single-threaded merge point
                 nxt = next(it, None)
                 if nxt is not None:
-                    inflight.append(pool.submit(run_morsel, *nxt))
-                yield from tables
+                    inflight.append((pool.submit(run_morsel, *nxt), nxt[0]))
+                yield frag, tables
         finally:
-            for fut in inflight:
+            for fut, _ in inflight:
                 fut.cancel()
 
     def _execute_process(self, morsels, counters: ScanCounters,
@@ -895,10 +1111,12 @@ class ScanPlan:
                 nxt = next(it, None)
                 if nxt is not None:
                     inflight.append(submit(*nxt))
+                done = []
                 for t in tables:
                     t = self._finish_table(t, frag, counters)
                     if t is not None:
-                        yield t if map_fn is None else map_fn(t)
+                        done.append(t if map_fn is None else map_fn(t))
+                yield frag, done
         finally:
             for fut, _, _ in inflight:
                 if fut is not None and not fut.cancel():
@@ -942,7 +1160,9 @@ class ScanPlan:
                 t = t.filter_mask(mask)
         if t.num_rows:
             counters.rows_matched += t.num_rows
-            return t.select(self._out_schema.names)
+            # _emit_names keeps the id column while an ordered partition
+            # merge still needs it; execute() strips it after merging
+            return t.select(self._emit_names)
         return None
 
     def _fragment_tables(self, frag: FragmentPlan, counters: ScanCounters,
@@ -962,6 +1182,8 @@ class ScanPlan:
             self._build()
             total = selected = 0
             for frag in self._fragments:
+                if frag.partition_pruned:
+                    continue  # footer never opened: bytes unknown
                 rd = self._reader_of(frag.file)
                 have = set(rd.schema.names)
                 cols_here = [x for x in self._read_schema.names if x in have]

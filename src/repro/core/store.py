@@ -48,6 +48,7 @@ from .encodings import AUTO, CODEC_ZLIB
 from .expressions import Expr, IsIn, combine_filters, field
 from .fileformat import (DEFAULT_PAGE_ROWS, DEFAULT_ROW_GROUP_ROWS, TPQReader,
                          TPQWriter)
+from .partition import PartitionSpec, Partitioning
 from .query import Query, _resolve_names
 from .scan import DeltaOverlay, ScanPlan, ScanReport
 from .schema import Field, ID_COLUMN, Schema
@@ -244,6 +245,22 @@ class ParquetDB:
                        :meth:`wait_for_maintenance`).
     compaction_policy: thresholds for that trigger and for the rewrite chunk
                        size — see :class:`repro.core.compaction.CompactionPolicy`.
+    partition_by:      hive-partition the dataset by these columns: every
+                       ``create`` splits the batch into ``col=value/``
+                       subdirectories and records the partition values in
+                       the manifest, which lets selective scans prune whole
+                       partitions before opening a single footer
+                       (docs/ARCHITECTURE.md "Partitioned layout").
+                       Partition columns are immutable per row: ``update``
+                       rejects writes to them and ``delete`` cannot drop
+                       them.  Must be declared before the first create; the
+                       spec is persisted, so reopening without it adopts
+                       the committed spec (a *conflicting* spec raises).
+    partition_mode:    ``"value"`` (default, one directory per distinct
+                       value tuple) or ``"hash"`` (``partition_buckets``
+                       directories ``bucket=<i>`` by crc32 of the values —
+                       bounded directory count for high-cardinality keys;
+                       only ``==``/``isin`` filters prune).
     """
 
     def __init__(self, db_path: str, dataset_name: Optional[str] = None,
@@ -258,7 +275,10 @@ class ParquetDB:
                  page_rows: int = DEFAULT_PAGE_ROWS,
                  row_group_rows: int = DEFAULT_ROW_GROUP_ROWS,
                  auto_compact: bool = True,
-                 compaction_policy: Optional[CompactionPolicy] = None):
+                 compaction_policy: Optional[CompactionPolicy] = None,
+                 partition_by: Optional[Sequence[str]] = None,
+                 partition_mode: str = "value",
+                 partition_buckets: int = 16):
         self.db_path = db_path
         self.dataset_name = dataset_name or os.path.basename(os.path.normpath(db_path))
         self._dir = DatasetDir(db_path, self.dataset_name)
@@ -296,14 +316,46 @@ class ParquetDB:
                 self._gc(man)
         except TimeoutError:
             pass
-        if initial_fields:
+        requested = (PartitionSpec(tuple(partition_by), partition_mode,
+                                   partition_buckets)
+                     if partition_by else None)
+        if initial_fields or requested is not None:
             with self._dir.acquire_lock():
                 man = self._dir.load()
-                schema = self._manifest_schema(man).unify(Schema(initial_fields))
-                self._set_manifest_schema(man, schema)
-                self._dir.commit(man, op="schema")
+                changed = False
+                if initial_fields:
+                    schema = self._manifest_schema(man) \
+                                 .unify(Schema(initial_fields))
+                    self._set_manifest_schema(man, schema)
+                    changed = True
+                if requested is not None:
+                    existing = Partitioning.from_manifest(man)
+                    if existing is None:
+                        if man.files or man.deltas:
+                            raise ValueError(
+                                "cannot partition a dataset that already "
+                                "has data; declare partition_by before the "
+                                "first create")
+                        Partitioning(requested).store(man)
+                        changed = True
+                    elif existing.spec != requested:
+                        raise ValueError(
+                            f"dataset is partitioned by {existing.spec}; "
+                            f"conflicting spec {requested} requested")
+                if changed:
+                    self._dir.commit(man, op="schema")
 
     # ------------------------------------------------------------------ helpers
+    def _partitioning_of(self, man: Manifest) -> Optional[Partitioning]:
+        """The manifest's committed partition layout, or None."""
+        return Partitioning.from_manifest(man)
+
+    @property
+    def partition_spec(self) -> Optional[PartitionSpec]:
+        """Committed :class:`~repro.core.partition.PartitionSpec`, or None."""
+        part = self._partitioning_of(self._load_snapshot()[0])
+        return part.spec if part is not None else None
+
     def _gc(self, man: Manifest) -> None:
         """Collect unreferenced data files and evict their cached footers."""
         removed = self._dir.gc(man)
@@ -461,6 +513,7 @@ class ParquetDB:
                     file_kind: str = "base") -> None:
         row_group_rows = row_group_rows or self.row_group_rows
         page_rows = page_rows or self.page_rows
+        os.makedirs(os.path.dirname(path), exist_ok=True)  # col=value/ dirs
         with TPQWriter(path, codec=self.codec, level=self.level,
                        encoding=self.encoding, page_rows=page_rows,
                        row_group_rows=row_group_rows, with_bloom=self.with_bloom,
@@ -469,11 +522,18 @@ class ParquetDB:
                        file_kind=file_kind) as w:
             w.write_table(table)
 
-    def _stage_delta(self, man: Manifest, kind: str, table: Table) -> None:
-        """Write one delta file and append its manifest entry (pre-commit)."""
+    def _stage_delta(self, man: Manifest, kind: str, table: Table,
+                     partitions: Optional[tuple] = None) -> None:
+        """Write one delta file and append its manifest entry (pre-commit).
+
+        ``partitions`` records the partition keys the delta's rows belong
+        to (None = unknown/unpartitioned) — concurrent writers staging
+        provably disjoint partitions then commit without the id-overlap
+        walk (see :class:`~repro.core.transactions.DeltaEntry`).
+        """
         name = self._dir.new_file_name(man, kind=kind)
         self._write_file(self._dir.file_path(name), table, file_kind=kind)
-        man.deltas.append(DeltaEntry(name, kind))
+        man.deltas.append(DeltaEntry(name, kind, partitions))
 
     # ------------------------------------------------------------------ create
     def create(self, data: TableLike, schema: Optional[Schema] = None,
@@ -510,19 +570,39 @@ class ParquetDB:
             if fields_metadata:
                 unified = _apply_fields_metadata(unified, fields_metadata)
             schema_changed = not unified.equals_names_types(current) and man.files
+            part = self._partitioning_of(man)
             new_files = list(man.files)
             if schema_changed and self.eager_schema_align:
                 # paper: "Existing data is rewritten to align with the new schema"
                 new_files = []
                 for fn in man.files:
                     t = _get_reader(self._dir.file_path(fn)).read().align_to_schema(unified)
-                    nf = self._dir.new_file_name(man)
+                    vals = part.files.get(fn) if part is not None else None
+                    nf = self._dir.new_file_name(
+                        man, subdir=part.dir_of(vals)
+                        if vals is not None else None)
                     self._write_file(self._dir.file_path(nf), t)
+                    if part is not None:
+                        part.rename(fn, nf)
                     new_files.append(nf)
-            out = self._dir.new_file_name(man)
-            self._write_file(self._dir.file_path(out),
-                             incoming.align_to_schema(unified))
-            new_files.append(out)
+            aligned = incoming.align_to_schema(unified)
+            if part is None:
+                out = self._dir.new_file_name(man)
+                self._write_file(self._dir.file_path(out), aligned)
+                new_files.append(out)
+            else:
+                # hive split: one file per partition this batch touches,
+                # under its col=value/ directory; ids stay ascending within
+                # each file (split preserves row order per group).  An
+                # empty batch stages no file but still commits the schema.
+                for values, idx in part.split(aligned):
+                    out = self._dir.new_file_name(
+                        man, subdir=part.dir_of(values))
+                    self._write_file(self._dir.file_path(out),
+                                     aligned.take(idx))
+                    part.record(out, values)
+                    new_files.append(out)
+                part.store(man)
             man.files = new_files
             self._set_manifest_schema(man, unified)
             if normalize_dataset:
@@ -657,7 +737,8 @@ class ParquetDB:
             schema = self._manifest_schema(man)
         return ScanPlan(man.files, self._reader_of, schema, columns=names,
                         filter_expr=expr, cfg=cfg, prune=prune,
-                        deltas=man.deltas)
+                        deltas=man.deltas,
+                        partitioning=self._partitioning_of(man))
 
     def explain(self, ids: Optional[Sequence[int]] = None,
                 columns: Optional[Sequence[str]] = None,
@@ -770,8 +851,12 @@ class ParquetDB:
         ``_OPTIMISTIC_RETRIES``; persistent conflicts return None and the
         caller serializes through the write lock instead (livelock-free).
         """
-        for _ in range(_OPTIMISTIC_RETRIES):
+        for attempt in range(_OPTIMISTIC_RETRIES):
             d = _DeltaTxn(self, build, op)
+            # published as generation metadata ``txn_retries`` so tests
+            # (and operators) can assert partition-disjoint writers never
+            # had to restart optimistically
+            d.txn.retries = attempt
             d.snapshot()
             try:
                 n = d.stage()
@@ -816,21 +901,44 @@ class ParquetDB:
             upsert = _apply_updates(sub, inc_aligned,
                                     np.arange(updated, dtype=np.int64),
                                     hit_src, keys)
-            return DELTA_UPSERT, upsert, updated
+            return (DELTA_UPSERT, upsert, updated,
+                    self._delta_partitions(man, upsert))
         return build
+
+    def _delta_partitions(self, man: Manifest,
+                          table: Table) -> Optional[tuple]:
+        """Partition keys of a staged delta's rows (None = unpartitioned,
+        or the table lacks a partition column — conservative)."""
+        part = self._partitioning_of(man)
+        if part is None or any(c not in table for c in part.spec.by):
+            return None
+        return tuple(part.keys_of_table(table))
+
+    def _tombstone_probe_names(self, man: Manifest) -> List[str]:
+        """Projection for the delete probe: id plus the partition columns
+        (when present in the schema) so the tombstone's partition keys can
+        be derived without a second scan."""
+        names = [ID_COLUMN]
+        part = self._partitioning_of(man)
+        if part is not None:
+            schema = self._manifest_schema(man)
+            names += [c for c in part.spec.by
+                      if c in schema and c != ID_COLUMN]
+        return names
 
     def _tombstone_build(self, expr: Expr):
         """Stage-step closure for an optimistic row ``delete``: evaluate
         the filter against the merged snapshot and build the tombstone."""
         def build(man: Manifest, current: Schema):
-            dead = self._legacy_query([ID_COLUMN], expr, LoadConfig(),
-                                      man=man).to_table()
+            dead = self._legacy_query(self._tombstone_probe_names(man), expr,
+                                      LoadConfig(), man=man).to_table()
             if dead.num_rows == 0:
                 return None
             dead_ids = np.sort(dead.column(ID_COLUMN).values)
             tomb = Table(current.select([ID_COLUMN]),
                          {ID_COLUMN: Column.numeric(dead_ids)})
-            return DELTA_TOMBSTONE, tomb, dead.num_rows
+            return (DELTA_TOMBSTONE, tomb, dead.num_rows,
+                    self._delta_partitions(man, dead))
         return build
 
     def update(self, data: TableLike, schema: Optional[Schema] = None,
@@ -869,6 +977,13 @@ class ParquetDB:
         for k in keys:
             if k not in incoming:
                 raise ValueError(f"update data must contain key column {k!r}")
+        spec = self.partition_spec
+        if spec is not None:
+            bad = [c for c in spec.by if c in incoming and c not in keys]
+            if bad:
+                raise ValueError(
+                    f"cannot update partition column(s) {bad}: a row's "
+                    "partition is immutable (delete and re-create instead)")
         if metadata is None and fields_metadata is None \
                 and normalize_config is None:
             n = self._run_delta_txn(self._upsert_build(incoming, keys),
@@ -908,7 +1023,9 @@ class ParquetDB:
                 upsert = _apply_updates(sub, inc_aligned,
                                         np.arange(updated, dtype=np.int64),
                                         hit_src, keys)
-                self._stage_delta(man, DELTA_UPSERT, upsert)
+                self._stage_delta(man, DELTA_UPSERT, upsert,
+                                  partitions=self._delta_partitions(man,
+                                                                    upsert))
             elif not schema_changed and metadata is None \
                     and fields_metadata is None:
                 return 0  # nothing to commit
@@ -969,6 +1086,13 @@ class ParquetDB:
                 missing = [c for c in cols if c not in current]
                 if missing:
                     raise KeyError(f"unknown columns {missing}")
+                part = self._partitioning_of(man)
+                if part is not None:
+                    pc = [c for c in cols if c in part.spec.by]
+                    if pc:
+                        raise ValueError(
+                            f"cannot delete partition column(s) {pc}: the "
+                            "dataset layout depends on them")
                 # one pass: each base file is rewritten from the *merged*
                 # view projected to the surviving columns, folding any
                 # pending delta chain into the same rewrite
@@ -982,11 +1106,21 @@ class ParquetDB:
                                     overlay=ov)
                     parts = list(plan.execute())
                     if not parts:
-                        continue  # every row tombstoned: drop the file
-                    nf = self._dir.new_file_name(man)
+                        # every row tombstoned: drop the file
+                        if part is not None:
+                            part.forget(fn)
+                        continue
+                    vals = part.files.get(fn) if part is not None else None
+                    nf = self._dir.new_file_name(
+                        man, subdir=part.dir_of(vals)
+                        if vals is not None else None)
                     self._write_file(self._dir.file_path(nf),
                                      concat_tables(parts))
+                    if part is not None:
+                        part.rename(fn, nf)
                     new_files.append(nf)
+                if part is not None:
+                    part.store(man)
                 man.files = new_files
                 man.deltas = []
                 self._set_manifest_schema(man, keep_schema)
@@ -997,7 +1131,8 @@ class ParquetDB:
                     raise ValueError("delete needs ids, filters, or columns")
                 # merged-view match via the shared Query path: collect the
                 # ids to tombstone (key-pruned, bound to this manifest)
-                dead = self._legacy_query([ID_COLUMN], expr, LoadConfig(),
+                dead = self._legacy_query(self._tombstone_probe_names(man),
+                                          expr, LoadConfig(),
                                           man=man).to_table()
                 removed = dead.num_rows
                 if removed == 0 and normalize_config is None:
@@ -1006,7 +1141,9 @@ class ParquetDB:
                     dead_ids = np.sort(dead.column(ID_COLUMN).values)
                     tomb = Table(current.select([ID_COLUMN]),
                                  {ID_COLUMN: Column.numeric(dead_ids)})
-                    self._stage_delta(man, DELTA_TOMBSTONE, tomb)
+                    self._stage_delta(man, DELTA_TOMBSTONE, tomb,
+                                      partitions=self._delta_partitions(
+                                          man, dead))
             if normalize_config is not None:
                 self._normalize_locked(man, normalize_config)
             self._dir.commit(man, op="delete_columns" if columns is not None
@@ -1043,20 +1180,43 @@ class ParquetDB:
         # per cfg); the delta chain is folded into the rewritten files
         plan = ScanPlan(man.files, self._reader_of, schema, cfg=cfg,
                         deltas=man.deltas)
+        part = self._partitioning_of(man)
         batches = list(plan.execute())
         if not batches:
             man.files, man.deltas = [], []
+            if part is not None:
+                part.files = {}
+                part.store(man)
             return
         full = concat_tables(batches)
         new_files = []
         rg = max(int(cfg.max_rows_per_group), 1)
         page = max(min(DEFAULT_PAGE_ROWS, rg), 1)
-        for s in range(0, full.num_rows, max(cfg.max_rows_per_file, 1)):
-            piece = full.slice(s, s + cfg.max_rows_per_file)
-            nf = self._dir.new_file_name(man)
-            self._write_file(self._dir.file_path(nf), piece,
-                             row_group_rows=rg, page_rows=page)
-            new_files.append(nf)
+        step = max(cfg.max_rows_per_file, 1)
+        if part is not None:
+            # canonical order first (scan order interleaves partitions),
+            # then regroup into one chunked run per partition directory
+            order = np.argsort(full.column(ID_COLUMN).values, kind="stable")
+            full = full.take(order)
+            part.files = {}
+            for values, idx in part.split(full):
+                run = full.take(idx)
+                for s in range(0, run.num_rows, step):
+                    piece = run.slice(s, s + step)
+                    nf = self._dir.new_file_name(
+                        man, subdir=part.dir_of(values))
+                    self._write_file(self._dir.file_path(nf), piece,
+                                     row_group_rows=rg, page_rows=page)
+                    part.record(nf, values)
+                    new_files.append(nf)
+            part.store(man)
+        else:
+            for s in range(0, full.num_rows, step):
+                piece = full.slice(s, s + step)
+                nf = self._dir.new_file_name(man)
+                self._write_file(self._dir.file_path(nf), piece,
+                                 row_group_rows=rg, page_rows=page)
+                new_files.append(nf)
         man.files = new_files
         man.deltas = []
 
@@ -1082,7 +1242,8 @@ class ParquetDB:
             man = self._dir.load()
             schema = self._manifest_schema(man)
             result = compact_locked(self._dir, man, schema, self._reader_of,
-                                    self._write_file, policy, force=force)
+                                    self._write_file, policy, force=force,
+                                    partitioning=self._partitioning_of(man))
             if result.compacted:
                 self._dir.commit(man, op="compact")
                 result.generation = man.generation
@@ -1185,12 +1346,13 @@ class _DeltaTxn:
         if out is None:
             self.result = 0
             return 0
-        kind, table, n = out
+        kind, table, n, partitions = out
         name = self.db._dir.stage_file_name(kind)
         path = self.db._dir.file_path(name)
         self.db._write_file(path, table, file_kind=kind)
         self.staged_paths.append(path)
-        self.txn.stage(DeltaEntry(name, kind), table.column(ID_COLUMN).values)
+        self.txn.stage(DeltaEntry(name, kind, partitions),
+                       table.column(ID_COLUMN).values)
         self.result = n
         return n
 

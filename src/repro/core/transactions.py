@@ -103,12 +103,24 @@ class CommitConflict(Exception):
 
 @dataclasses.dataclass(frozen=True)
 class DeltaEntry:
-    """One link of the merge-on-read chain: a staged delta file + its kind."""
+    """One link of the merge-on-read chain: a staged delta file + its kind.
+
+    ``partitions`` (optional) lists the hive partition keys the delta's
+    rows touch — recorded when the dataset is partitioned so conflict
+    validation can skip the id-intersection walk entirely for writers on
+    disjoint partitions (partition columns are immutable per row, so two
+    deltas in disjoint partitions cannot share an id by construction).
+    ``None`` means unknown: always checked the exact way.
+    """
     name: str
     kind: str  # DELTA_UPSERT | DELTA_TOMBSTONE
+    partitions: Optional[Tuple[str, ...]] = None
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = {"name": self.name, "kind": self.kind}
+        if self.partitions is not None:
+            d["partitions"] = list(self.partitions)
+        return d
 
 
 @dataclasses.dataclass
@@ -127,7 +139,11 @@ class Manifest:
     @staticmethod
     def from_dict(d: dict) -> "Manifest":
         d = dict(d)
-        d["deltas"] = [DeltaEntry(**e) for e in d.get("deltas", [])]
+        d["deltas"] = [
+            DeltaEntry(e["name"], e["kind"],
+                       tuple(e["partitions"]) if e.get("partitions")
+                       is not None else None)
+            for e in d.get("deltas", [])]
         return Manifest(**d)
 
     def copy(self) -> "Manifest":
@@ -328,6 +344,9 @@ class DatasetDir:
         """
         if op is not None:
             manifest.metadata["op"] = op
+            # txn_retries describes the delta batch that wrote it; a
+            # structural commit inheriting head metadata must not carry it
+            manifest.metadata.pop("txn_retries", None)
         if not self.try_commit(manifest):
             raise CommitConflict(
                 f"generation {manifest.generation + 1} was committed "
@@ -370,7 +389,8 @@ class DatasetDir:
                     DELTA_UPSERT: ".upsert.tpq",
                     DELTA_TOMBSTONE: ".tombstone.tpq"}
 
-    def new_file_name(self, manifest: Manifest, kind: str = "base") -> str:
+    def new_file_name(self, manifest: Manifest, kind: str = "base",
+                      subdir: Optional[str] = None) -> str:
         """Allocate a fresh, never-reused data-file name (lock holders only).
 
         Delta files get a kind-specific suffix so a directory listing shows
@@ -378,10 +398,14 @@ class DatasetDir:
         share the garbage-collection rule.  The counter lives in the
         manifest, so only writers holding the write lock may use this —
         lock-free staging uses :meth:`stage_file_name` instead.
+
+        ``subdir`` prefixes the name with a hive partition directory
+        (``"year=2024"`` → ``"year=2024/<dataset>_000007.tpq"``); manifest
+        file names are always "/"-relative to the dataset directory.
         """
         name = f"{self.dataset}_{manifest.next_file_id:06d}{self._KIND_SUFFIX[kind]}"
         manifest.next_file_id += 1
-        return name
+        return f"{subdir}/{name}" if subdir else name
 
     def stage_file_name(self, kind: str) -> str:
         """Collision-free data-file name for lock-free optimistic staging.
@@ -427,7 +451,15 @@ class DatasetDir:
         grace = _stage_grace()
         now = time.time()
         removed = []
-        for fn in os.listdir(self.path):
+        # walk partition subdirectories too (hive layout); names in the
+        # manifest — and therefore in live/committed — are "/"-relative
+        names = []
+        for root, _dirs, fns in os.walk(self.path):
+            rel = os.path.relpath(root, self.path)
+            for f in fns:
+                names.append(f if rel == "." else
+                             f"{rel.replace(os.sep, '/')}/{f}")
+        for fn in names:
             full = self.file_path(fn)
             if fn.endswith(".tpq"):
                 if fn in live:
@@ -604,6 +636,9 @@ class Transaction:
         self.entries: List[DeltaEntry] = []
         self.entry_ids: List[np.ndarray] = []
         self.committed: Optional[Manifest] = None
+        # optimistic attempt index of the operation that staged this txn
+        # (0 = first try); published as commit metadata ``txn_retries``
+        self.retries: int = 0
 
     # -- protocol steps ---------------------------------------------------------
     def snapshot(self) -> Manifest:
@@ -663,6 +698,16 @@ class Transaction:
                 return True
         return False
 
+    def _staged_partitions(self) -> Optional[frozenset]:
+        """Union of partition keys staged by this transaction, or None
+        when any entry's partitions are unknown (→ no disjointness skip)."""
+        parts: set = set()
+        for e in self.entries:
+            if e.partitions is None:
+                return None
+            parts.update(e.partitions)
+        return frozenset(parts)
+
     def _conflict_with_staged(self, other_ids: List[np.ndarray]
                               ) -> Optional[str]:
         """Overlap vs. another transaction accepted into the same batch."""
@@ -670,6 +715,25 @@ class Transaction:
             if self._overlaps_ids(theirs):
                 return "staged ids overlap another transaction in the " \
                        "same commit batch"
+        return None
+
+    def _conflict_with_batch(self, others: List["Transaction"]
+                             ) -> Optional[str]:
+        """Overlap vs. the transactions already accepted into this batch.
+
+        Partition fast path first: two transactions whose staged partition
+        sets are disjoint cannot share an id (partition columns are
+        immutable per row), so the id intersection is skipped entirely.
+        """
+        mine = self._staged_partitions()
+        for o in others:
+            if mine is not None:
+                theirs_p = o._staged_partitions()
+                if theirs_p is not None and not (mine & theirs_p):
+                    continue  # disjoint partitions: conflict-free
+            reason = self._conflict_with_staged(o.entry_ids)
+            if reason is not None:
+                return reason
         return None
 
     def _validate_against(self, head: Manifest) -> Optional[str]:
@@ -714,7 +778,14 @@ class Transaction:
         bounds = self._id_bounds()
         if bounds is None:
             return None
+        mine = self._staged_partitions()
         for e in new_entries:
+            # partition fast path: a committed delta whose partitions are
+            # provably disjoint from everything staged here cannot share an
+            # id (partition columns are immutable per row) — no footer read
+            if mine is not None and e.partitions is not None \
+                    and not (mine & set(e.partitions)):
+                continue
             rd = self.reader_of(e.name)
             st = rd.file_stats().get("id")
             # footer fast path: provably disjoint id ranges need no decode
@@ -803,21 +874,25 @@ class GroupCommitter:
         for attempt in range(self.CAS_RETRIES):
             head = self.dir.load()
             accepted: List[_Pending] = []
-            acc_ids: List[np.ndarray] = []
             rejections: Dict[int, str] = {}
             for i, p in enumerate(batch):
                 reason = p.txn._validate_against(head) \
-                    or p.txn._conflict_with_staged(acc_ids)
+                    or p.txn._conflict_with_batch(
+                        [q.txn for q in accepted])
                 if reason is not None:
                     rejections[i] = reason
                 else:
                     accepted.append(p)
-                    acc_ids.extend(p.txn.entry_ids)
             if accepted:
                 new = head.copy()
                 for p in accepted:
                     new.deltas.extend(p.txn.entries)
                 new.metadata["op"] = "delta"
+                # observability for the disjoint-writer guarantee: the max
+                # optimistic attempt index across the batch (0 = every
+                # writer in this generation committed first-try)
+                new.metadata["txn_retries"] = max(
+                    p.txn.retries for p in accepted)
                 if not self.dir.try_commit(new):
                     # a committer outside our lock (crashed-lock break or
                     # foreign process) advanced the head: re-validate

@@ -1,0 +1,369 @@
+"""Hive-partitioned datasets: layout, pruning, parity, maintenance, MVCC.
+
+The contract under test: ``partition_by=[col, ...]`` writes ``col=value/``
+subdirectories and records each file's partition values in the manifest, a
+selective query prunes whole partitions from manifest metadata *before any
+footer is opened* (asserted by counting ``reader_of`` calls), and every
+read stays byte-identical — order included — to the same dataset stored
+unpartitioned, across thread counts and both scan executors.  Maintenance
+(compaction, normalize) stays within partitions, and the MVCC fast path
+commits partition-disjoint writers without an optimistic restart.
+"""
+import json
+import multiprocessing
+import os
+
+import pytest
+
+from repro.core import LoadConfig, ParquetDB, field
+from repro.core import transactions as tx
+from repro.core.expressions import IsIn
+from repro.core.partition import (HIVE_NULL, PartitionSpec, Partitioning,
+                                  hash_bucket)
+from repro.core.schema import ID_COLUMN
+from repro.core.table import concat_tables
+
+N = 1_200
+N_PARTS = 4
+
+
+def _rows(n=N, parts=N_PARTS):
+    return [{"p": i % parts, "x": i, "s": f"s{i % 7}"} for i in range(n)]
+
+
+def _part_db(tmp_path, name="pdb", rows=None, **kw):
+    kw.setdefault("row_group_rows", 100)
+    kw.setdefault("page_rows", 50)
+    db = ParquetDB(os.path.join(str(tmp_path), name), partition_by=["p"],
+                   **kw)
+    db.create(rows if rows is not None else _rows())
+    return db
+
+
+def _flat_db(tmp_path, name="flat", rows=None, **kw):
+    kw.setdefault("row_group_rows", 100)
+    kw.setdefault("page_rows", 50)
+    db = ParquetDB(os.path.join(str(tmp_path), name), **kw)
+    db.create(rows if rows is not None else _rows())
+    return db
+
+
+def _tables_equal(a, b):
+    assert a.column_names == b.column_names
+    assert a.num_rows == b.num_rows
+    for c in a.column_names:
+        assert a[c].to_pylist() == b[c].to_pylist(), c
+
+
+def _count_footers(db):
+    """Wrap ``db._reader_of`` to record which files get a footer open."""
+    opened = []
+    orig = type(db)._reader_of
+
+    def counting(fn):
+        opened.append(fn)
+        return orig(db, fn)
+    db._reader_of = counting
+    return opened
+
+
+class TestLayoutAndSpec:
+    def test_create_writes_hive_subdirs(self, tmp_path):
+        db = _part_db(tmp_path)
+        man = db._dir.load()
+        part = Partitioning.from_manifest(man)
+        assert part is not None and part.spec.by == ("p",)
+        assert set(man.files) == set(part.files)
+        for fn, values in part.files.items():
+            assert fn.startswith(f"p={values[0]}/"), fn
+            assert os.path.exists(os.path.join(db.db_path, fn))
+        assert {v[0] for v in part.files.values()} == set(range(N_PARTS))
+
+    def test_spec_persists_and_reopen_adopts(self, tmp_path):
+        db = _part_db(tmp_path)
+        again = ParquetDB(db.db_path, db.dataset_name)
+        assert again.partition_spec == PartitionSpec(("p",), "value", 16)
+        same = ParquetDB(db.db_path, db.dataset_name, partition_by=["p"])
+        assert same.partition_spec == db.partition_spec
+
+    def test_conflicting_spec_rejected(self, tmp_path):
+        db = _part_db(tmp_path)
+        with pytest.raises(ValueError, match="partitioned by"):
+            ParquetDB(db.db_path, db.dataset_name, partition_by=["s"])
+        with pytest.raises(ValueError, match="partitioned by"):
+            ParquetDB(db.db_path, db.dataset_name, partition_by=["p"],
+                      partition_mode="hash")
+
+    def test_cannot_partition_existing_data(self, tmp_path):
+        db = _flat_db(tmp_path)
+        with pytest.raises(ValueError, match="before the first create"):
+            ParquetDB(db.db_path, db.dataset_name, partition_by=["p"])
+
+    def test_empty_then_first_create_partitions(self, tmp_path):
+        path = os.path.join(str(tmp_path), "empty")
+        db = ParquetDB(path, partition_by=["p"])
+        assert db.read().num_rows == 0
+        db.create(_rows(40))
+        part = Partitioning.from_manifest(db._dir.load())
+        assert len({v[0] for v in part.files.values()}) == N_PARTS
+
+    def test_null_partition_value(self, tmp_path):
+        db = ParquetDB(os.path.join(str(tmp_path), "n"), partition_by=["p"])
+        db.create([{"p": None, "x": 1}, {"p": 2, "x": 2}])
+        part = Partitioning.from_manifest(db._dir.load())
+        dirs = {fn.split("/", 1)[0] for fn in part.files}
+        assert f"p={HIVE_NULL}" in dirs and "p=2" in dirs
+        got = db.read(filters=[field("p").is_null()])
+        assert got["x"].to_pylist() == [1]
+
+
+class TestPruning:
+    def test_selective_query_opens_no_pruned_footers(self, tmp_path):
+        db = _part_db(tmp_path)
+        man = db._dir.load()
+        part = Partitioning.from_manifest(man)
+        pruned_files = {fn for fn, v in part.files.items() if v[0] != 2}
+        opened = _count_footers(db)
+        rep = db.explain(filters=[field("p") == 2], execute=True)
+        c = rep.counters
+        assert c.partitions_total == N_PARTS
+        assert c.partitions_pruned == N_PARTS - 1
+        assert c.partitions_scanned == 1
+        assert c.rows_matched == N // N_PARTS
+        # the load-bearing claim: pruning happened from manifest metadata,
+        # so no footer in a pruned partition was ever opened
+        assert not (set(opened) & pruned_files)
+        assert "partitions: 1 scanned" in str(rep)
+
+    def test_pruned_partitions_count_as_skipped_files(self, tmp_path):
+        db = _part_db(tmp_path)
+        c = db.explain(filters=[field("p") == 0]).counters
+        assert c.files_skipped >= c.partitions_pruned
+        assert c.files_total == c.files_scanned + c.files_skipped
+
+    def test_isin_and_conjunction_prune(self, tmp_path):
+        db = _part_db(tmp_path)
+        c = db.explain(filters=[IsIn("p", [0, 3])]).counters
+        assert c.partitions_scanned == 2 and c.partitions_pruned == 2
+        c = db.explain(
+            filters=[(field("p") == 1) & (field("x") >= 0)]).counters
+        assert c.partitions_scanned == 1
+
+    def test_hash_mode_prunes_on_equality(self, tmp_path):
+        db = ParquetDB(os.path.join(str(tmp_path), "h"), partition_by=["s"],
+                       partition_mode="hash", partition_buckets=8)
+        db.create(_rows(400))
+        c = db.explain(filters=[field("s") == "s3"]).counters
+        assert c.partitions_scanned == 1
+        assert c.partitions_pruned == c.partitions_total - 1
+        got = db.read(filters=[field("s") == "s3"])
+        assert got.num_rows == len([r for r in _rows(400)
+                                    if r["s"] == "s3"])
+        # range predicates cannot prune hash buckets
+        c = db.explain(filters=[field("s") > "s3"]).counters
+        assert c.partitions_pruned == 0
+
+    def test_hash_bucket_stability(self):
+        # the layout on disk depends on this function never changing
+        assert hash_bucket(("s3",), 8) == hash_bucket(("s3",), 8)
+        assert 0 <= hash_bucket(("anything", 42), 8) < 8
+
+    def test_live_upsert_disables_partition_pruning(self, tmp_path):
+        db = _part_db(tmp_path, auto_compact=False)
+        db.update([{"id": 0, "x": -1}])
+        c = db.explain(filters=[field("p") == 2]).counters
+        assert c.partitions_pruned == 0
+        # the merged view is still correct
+        got = db.read(filters=[field("p") == 2])
+        assert got.num_rows == N // N_PARTS
+        db.compact(force=True)
+        c = db.explain(filters=[field("p") == 2]).counters
+        assert c.partitions_pruned == N_PARTS - 1
+
+    def test_aggregate_skips_pruned_partitions(self, tmp_path):
+        db = _part_db(tmp_path)
+        opened = _count_footers(db)
+        assert db.query().where(field("p") == 1).count() == N // N_PARTS
+        part = Partitioning.from_manifest(db._dir.load())
+        pruned_files = {fn for fn, v in part.files.items() if v[0] != 1}
+        assert not (set(opened) & pruned_files)
+
+
+class TestParity:
+    """Partitioned read() is byte-identical to the unpartitioned dataset."""
+
+    @pytest.mark.parametrize("executor", ["thread", "process"])
+    def test_read_identical_across_threads_and_executors(
+            self, tmp_path, executor):
+        part = _part_db(tmp_path)
+        flat = _flat_db(tmp_path)
+        ref = flat.read(load_config=LoadConfig(num_threads=1))
+        for nt in (1, 2, 4):
+            cfg = LoadConfig(num_threads=nt,
+                             executor=executor if nt > 1 else None)
+            _tables_equal(ref, part.read(load_config=cfg))
+
+    def test_filtered_and_projected_parity(self, tmp_path):
+        part = _part_db(tmp_path)
+        flat = _flat_db(tmp_path)
+        for filters in (None, [field("x") >= 600], [field("p") == 3],
+                        [(field("p") == 1) & (field("s") == "s1")]):
+            for columns in (None, ["x"], ["s", "p"]):
+                _tables_equal(flat.read(columns=columns, filters=filters),
+                              part.read(columns=columns, filters=filters))
+
+    def test_parity_with_deltas(self, tmp_path):
+        part = _part_db(tmp_path, auto_compact=False)
+        flat = _flat_db(tmp_path, auto_compact=False)
+        for db in (part, flat):
+            db.update([{"id": i, "x": -i} for i in range(0, N, 7)])
+            db.delete(ids=list(range(0, N, 11)))
+        _tables_equal(flat.read(), part.read())
+
+    def test_counters_identical_across_executors(self, tmp_path):
+        """Satellite: per-partition counter merge is exact, not sampled."""
+        db = _part_db(tmp_path)
+        expr = [field("p") == 2]
+        serial = db.explain(filters=expr, execute=True,
+                            load_config=LoadConfig(num_threads=1)).counters
+        for cfg in (LoadConfig(num_threads=4),
+                    LoadConfig(num_threads=2, executor="process")):
+            par = db.explain(filters=expr, execute=True,
+                             load_config=cfg).counters
+            assert par == serial
+
+
+class TestImmutablePartitionColumns:
+    def test_update_of_partition_column_rejected(self, tmp_path):
+        db = _part_db(tmp_path)
+        with pytest.raises(ValueError, match="partition is immutable"):
+            db.update([{"id": 0, "p": 3}])
+        # updating other columns of the same row is fine
+        assert db.update([{"id": 0, "x": 777}]) == 1
+
+    def test_dropping_partition_column_rejected(self, tmp_path):
+        db = _part_db(tmp_path)
+        with pytest.raises(ValueError, match="layout depends"):
+            db.delete(columns=["p"])
+        # other columns still droppable; files stay inside their subdirs
+        db.delete(columns=["s"])
+        part = Partitioning.from_manifest(db._dir.load())
+        for fn, values in part.files.items():
+            assert fn.startswith(f"p={values[0]}/")
+
+
+class TestMaintenance:
+    def test_compact_stays_within_partitions(self, tmp_path):
+        db = _part_db(tmp_path, auto_compact=False)
+        db.create(_rows(400))          # second wave: small files per part
+        db.update([{"id": i, "x": -1} for i in range(0, 100)])
+        res = db.compact(force=True)
+        assert res.compacted
+        man = db._dir.load()
+        part = Partitioning.from_manifest(man)
+        assert set(man.files) == set(part.files)
+        by_part = {}
+        for fn, values in part.files.items():
+            assert fn.startswith(f"p={values[0]}/")
+            by_part.setdefault(values[0], []).append(fn)
+        assert set(by_part) == set(range(N_PARTS))
+        got = db.read(filters=[field("p") == 2])
+        assert set(got[ID_COLUMN].to_pylist()) == \
+            {i for i in range(N + 400) if (i % N_PARTS if i < N else
+                                           (i - N) % N_PARTS) == 2}
+
+    def test_normalize_regroups_per_partition(self, tmp_path):
+        db = _part_db(tmp_path)
+        before = db.read()
+        db.normalize()
+        part = Partitioning.from_manifest(db._dir.load())
+        for fn, values in part.files.items():
+            assert fn.startswith(f"p={values[0]}/")
+        _tables_equal(before, db.read())
+
+
+class TestManifestLogPruning:
+    def test_keep_window_vs_long_lived_snapshot(self, tmp_path, monkeypatch):
+        """Satellite: MANIFEST_KEEP prunes old log generations while a
+        reader holding a pre-prune snapshot of the partitioned table keeps
+        reading — delta commits never unlink data files, only log files."""
+        monkeypatch.setattr(tx, "MANIFEST_KEEP", 4)
+        db = _part_db(tmp_path, auto_compact=False, rows=_rows(200))
+        snap_man = db._dir.load()        # long-lived reader's snapshot
+        snap_gen = snap_man.generation
+        expect = db.read()
+        for k in range(12):              # push the head past the window
+            db.update([{"id": 0, "x": 1000 + k}])
+        head = db._dir.load().generation
+        gens = db._dir.log_generations()
+        assert min(gens) >= head - 4
+        assert snap_gen not in gens      # the snapshot's log file is gone
+        # the held manifest still reads: every file it references is live
+        plan = db._scan_plan(None, None, LoadConfig(), man=snap_man)
+        _tables_equal(expect, concat_tables(list(plan.execute())))
+        # and a fresh open sees the newest value
+        got = db.read(filters=[field("x") >= 1000])
+        assert got["x"].to_pylist() == [1011]
+
+
+def _disjoint_writer(path, part_value, q):
+    try:
+        db = ParquetDB(path, "pdb", auto_compact=False)
+        n = db.update([{"id": i, "x": -part_value}
+                       for i in range(part_value, 400, N_PARTS)])
+        q.put((part_value, n, None))
+    except BaseException as e:  # pragma: no cover - failure reporting
+        q.put((part_value, -1, repr(e)))
+
+
+@pytest.mark.concurrency
+def test_disjoint_partition_writers_commit_without_retry(tmp_path):
+    """Satellite: two writers touching disjoint partitions both commit,
+    and the published ``txn_retries`` metadata stays 0 — the partition
+    fast path never forced an optimistic restart."""
+    if (os.cpu_count() or 1) < 2 and not os.environ.get(
+            "REPRO_FORCE_CONCURRENCY"):
+        pytest.skip("SKIPPED (loud): needs >= 2 cpus; this box has "
+                    f"{os.cpu_count()} — run the CI concurrency job, or "
+                    "set REPRO_FORCE_CONCURRENCY=1")
+    path = os.path.join(str(tmp_path), "pdb")
+    db = ParquetDB(path, "pdb", partition_by=["p"], auto_compact=False)
+    db.create([{"p": i % N_PARTS, "x": i} for i in range(400)])
+    ctx = multiprocessing.get_context("spawn")
+    q = ctx.Queue()
+    procs = [ctx.Process(target=_disjoint_writer, args=(path, pv, q))
+             for pv in (1, 3)]
+    for p in procs:
+        p.start()
+    results = [q.get(timeout=120) for _ in procs]
+    for p in procs:
+        p.join(timeout=60)
+        assert p.exitcode == 0
+    for pv, n, err in results:
+        assert err is None, f"writer p={pv}: {err}"
+        assert n == 100
+    man = db._dir.load()
+    assert man.metadata.get("op") == "delta"
+    assert man.metadata.get("txn_retries") == 0
+    got = db.read(filters=[IsIn("p", [1, 3])])
+    assert set(got["x"].to_pylist()) == {-1, -3}
+
+
+class TestDeltaEntryPartitions:
+    def test_staged_deltas_record_partitions(self, tmp_path):
+        db = _part_db(tmp_path, auto_compact=False)
+        db.update([{"id": 1, "x": -1}])          # row 1 lives in p=1
+        db.delete(ids=[2])                       # row 2 lives in p=2
+        man = db._dir.load()
+        kinds = {d.kind: d.partitions for d in man.deltas}
+        assert kinds[tx.DELTA_UPSERT] == ("p=1",)
+        assert kinds[tx.DELTA_TOMBSTONE] == ("p=2",)
+
+    def test_manifest_roundtrip_preserves_partitions(self, tmp_path):
+        db = _part_db(tmp_path, auto_compact=False)
+        db.update([{"id": 1, "x": -1}])
+        man = db._dir.load()
+        doc = json.loads(json.dumps(man.to_dict()))
+        back = type(man).from_dict(doc)
+        assert [d.partitions for d in back.deltas] == \
+            [d.partitions for d in man.deltas]
