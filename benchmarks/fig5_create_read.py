@@ -43,6 +43,19 @@ def run(scale: str = "small") -> List[dict]:
             out.append(row(f"fig5/read-scan/parquetdb/n={n}", t_scan, rows=n))
             out.append(row(f"fig5/read-materialize/parquetdb/n={n}", t_mat,
                            rows=n))
+            # --- page-checksum verification cost on the scan path: crc32
+            # over stored bytes already in cache; check_perf gates the
+            # overhead at < 10% (verify="page" is the default, so this IS
+            # the cost every reader pays for end-to-end integrity)
+            t_voff = timeit_median(lambda: db.read(
+                load_config=LoadConfig(verify="off")), k=5)
+            t_vpage = timeit_median(lambda: db.read(
+                load_config=LoadConfig(verify="page")), k=5)
+            out.append(row(f"fig5/read-scan-verify-off/parquetdb/n={n}",
+                           t_voff, rows=n))
+            out.append(row(f"fig5/read-scan-verify-page/parquetdb/n={n}",
+                           t_vpage, rows=n,
+                           overhead_vs_off=t_vpage / t_voff))
             # --- parallel read-scan: multi-fragment layout, 1 vs 4 morsel
             # workers (a single-file dataset is one morsel — nothing to
             # parallelize — so re-partition like a grown database first)

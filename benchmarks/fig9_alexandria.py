@@ -94,6 +94,11 @@ def _sharded_scan(path: str, n_workers: int, assign) -> int:
                           [(path, parts) for parts in assign if parts]))
 
 
+def _assert_verified(pdb) -> None:
+    report = pdb.verify(deep=True)
+    assert report.ok, f"integrity scrub failed:\n{report}"
+
+
 def run(scale: str = "small") -> List[dict]:
     n_total, per_file = {"quick": (4_000, 2_000),
                          "small": (2_000, 500),
@@ -144,6 +149,13 @@ def run(scale: str = "small") -> List[dict]:
                        partitions_pruned=c.partitions_pruned,
                        partitions_scanned=c.partitions_scanned,
                        speedup_vs_full=round(t_full / t_sel, 2)))
+
+        # ---- integrity scrub of the real-data fixture: every committed
+        # file's footer + page checksums must hold (the --quick CI smoke
+        # runs this, so a writer bug that commits damaged bytes trips here)
+        t_verify = timeit(lambda: _assert_verified(pdb))
+        out.append(row(f"fig9/verify-deep/n={n_total}", t_verify,
+                       rows=n_total))
 
         n_workers = min(4, os.cpu_count() or 1)
         if n_workers > 1:

@@ -97,5 +97,14 @@ print("files scanned for age>200 after compact:",
 db.normalize(NormalizeConfig(max_rows_per_file=500))
 print("files after normalize:", db.n_files, "rows:", db.n_rows)
 
+# verify(): scrub every committed file — footer checksums, then every
+# page's crc32 (deep=True).  Every TPQ file carries checksums, so bit rot
+# or torn writes surface as typed errors with exact coordinates instead of
+# silently wrong rows.  (Scans verify pages inline too: LoadConfig(verify=)
+# with "page" as the default.)
+report = db.verify(deep=True)
+print(report)
+assert report.ok
+
 shutil.rmtree(workdir)
 print("OK")

@@ -70,6 +70,17 @@ SCALING_GATES = [
      "fig9/scan-full/", 5.0, 1),
 ]
 
+# Overhead gates on the *current* run only:
+# (label, measured row prefix, reference row prefix, max ratio).
+# The measured path must cost at most ``max ratio`` x the reference path
+# from the same run — e.g. page-checksum verification (the LoadConfig
+# default) must stay under 10% on the read-scan path, or the integrity
+# layer has started costing more than it is worth.
+OVERHEAD_GATES = [
+    ("fig5 verify-page", "fig5/read-scan-verify-page/parquetdb/",
+     "fig5/read-scan-verify-off/parquetdb/", 1.10),
+]
+
 
 def _rows(doc: dict) -> dict:
     return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
@@ -167,6 +178,20 @@ def main(argv=None) -> int:
         if verdict != "OK":
             failures.append(f"{label}: speedup {got:.2f}x is below the "
                             f"required {need:.1f}x (cpus={cur_cpus})")
+    for label, over_p, ref_p, max_ratio in OVERHEAD_GATES:
+        ns = _ns_of(cur, over_p) & _ns_of(cur, ref_p)
+        if not ns:
+            failures.append(f"{label}: current run has no n with both "
+                            f"{over_p} and {ref_p} rows")
+            continue
+        n = max(ns)
+        got = cur[f"{over_p}n={n}"] / cur[f"{ref_p}n={n}"]
+        verdict = "OK" if got <= max_ratio else "REGRESSED"
+        print(f"{label:12s} n={n}  overhead={got:.3f}x  "
+              f"allowed<={max_ratio:.2f}x  {verdict}")
+        if verdict != "OK":
+            failures.append(f"{label}: overhead {got:.3f}x exceeds the "
+                            f"allowed {max_ratio:.2f}x")
     if failures:
         print("PERF GATE FAILED:\n  " + "\n  ".join(failures),
               file=sys.stderr)

@@ -19,8 +19,8 @@ import textwrap
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
-from repro.core import (aggregate, compaction, partition, query,  # noqa: E402
-                        scan, store, transactions)
+from repro.core import (aggregate, compaction, integrity,  # noqa: E402
+                        partition, query, scan, store, transactions)
 
 OUT = os.path.join(REPO, "docs", "API.md")
 
@@ -41,7 +41,7 @@ lifecycle.
 SECTIONS = [
     (store.ParquetDB,
      ["create", "query", "read", "aggregate", "update", "delete",
-      "normalize", "compact", "maintenance_stats", "explain",
+      "normalize", "compact", "verify", "maintenance_stats", "explain",
       "wait_for_maintenance", "set_metadata", "set_field_metadata"]),
     (query.Query,
      ["where", "select", "group_by", "order_by", "limit", "offset",
@@ -63,6 +63,12 @@ SECTIONS = [
     (scan.ScanCounters, ()),
     (scan.ScanReport, ()),
     (scan.DeltaOverlay, ()),
+    (integrity.IntegrityError, ()),
+    (integrity.TruncatedFileError, ()),
+    (integrity.CorruptFooterError, ()),
+    (integrity.CorruptPageError, ()),
+    (integrity.IntegrityReport, ()),
+    (integrity.FileCheck, ()),
     (transactions.Manifest, ()),
     (transactions.DeltaEntry, ()),
     (transactions.Transaction,

@@ -11,6 +11,9 @@ from .schema import Field, ID_COLUMN, Schema
 from .table import Column, Table, concat_tables
 from .expressions import Arith, Expr, field
 from .fileformat import TPQReader, TPQWriter, read_table, write_table
+from .integrity import (CorruptFooterError, CorruptPageError, FileCheck,
+                        IntegrityError, IntegrityReport, TruncatedFileError,
+                        verify_file)
 from .scan import (DeltaOverlay, FragmentPlan, ScanCounters, ScanPlan,
                    ScanReport)
 from .aggregate import AggregatePlan
@@ -24,7 +27,10 @@ from .store import Dataset, LoadConfig, NormalizeConfig, ParquetDB
 __all__ = [
     "DType", "Field", "ID_COLUMN", "Schema", "Column", "Table",
     "concat_tables", "Arith", "Expr", "field", "TPQReader", "TPQWriter",
-    "read_table", "write_table", "DeltaOverlay", "FragmentPlan",
+    "read_table", "write_table",
+    "IntegrityError", "TruncatedFileError", "CorruptFooterError",
+    "CorruptPageError", "FileCheck", "IntegrityReport", "verify_file",
+    "DeltaOverlay", "FragmentPlan",
     "ScanCounters", "ScanPlan", "ScanReport", "AggregatePlan",
     "PartitionSpec", "Partitioning",
     "GroupedQuery", "Query", "QueryReport",

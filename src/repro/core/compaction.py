@@ -31,6 +31,7 @@ orphans (docs/TRANSACTIONS.md covers the full lifecycle).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable, List, Optional
 
 import numpy as np
@@ -320,15 +321,35 @@ def compact_locked(dirobj: DatasetDir, man: Manifest, schema: Schema,
         # profitability gate, which the merge ScanPlans above apply)
         nthreads = resolve_num_threads(policy) \
             if policy.num_threads is not None else 1
+        first_err: Optional[OSError] = None
         if nthreads > 1 and len(pieces) > 1:
             futs = [scan_pool(nthreads).submit(
                 write_file, dirobj.file_path(nf), piece)
                 for nf, piece in pieces]
             for f in futs:
-                f.result()  # re-raise the first failure with its traceback
+                try:
+                    f.result()  # re-raises with the worker traceback
+                except OSError as e:
+                    first_err = first_err or e
         else:
             for nf, piece in pieces:
-                write_file(dirobj.file_path(nf), piece)
+                try:
+                    write_file(dirobj.file_path(nf), piece)
+                except OSError as e:
+                    first_err = e
+                    break
+        if first_err is not None:
+            # a write fault (ENOSPC/EIO) aborts the whole pass: the
+            # manifest is never committed, so eagerly remove every piece
+            # already written instead of leaving them for the next
+            # open's GC — a failed compaction must not consume the very
+            # disk space it was asked to reclaim
+            for nf, _piece in pieces:
+                try:
+                    os.unlink(dirobj.file_path(nf))
+                except OSError:
+                    pass
+            raise first_err
     man_order = {fn: i for i, fn in enumerate(man.files)}
     dropped = sorted(merged_set, key=man_order.__getitem__)
     result.dropped_files = dropped + [d.name for d in man.deltas]

@@ -1,11 +1,21 @@
 """TPQ file format — the repo's Parquet analogue, from scratch.
 
-Layout (paper §4.1 / SI §1):
+Layout (paper §4.1 / SI §1), format v2:
 
     b"TPQ1"
     <data section: concatenated encoded buffers>
     <footer: zlib-compressed JSON>
-    <uint64 LE footer length> b"TPQ1"
+    <uint32 LE crc32 of footer blob> <uint64 LE footer length> b"TPQ2"
+
+Format v1 files (no checksums) end with ``<uint64 LE footer length> b"TPQ1"``
+instead; the reader dispatches on the trailing magic and reads them as
+"unchecksummed" (``TPQReader.checksummed`` is False).  v2 additionally
+records a crc32 per stored buffer (``"crc"`` in each buffer dict, hashed
+over the on-disk — possibly compressed — bytes, so verification is a single
+pass before decompression).  Verification failures raise the typed errors
+from :mod:`repro.core.integrity` (``TruncatedFileError`` /
+``CorruptFooterError`` / ``CorruptPageError`` with file/row-group/page
+coordinates) instead of cryptic ``struct``/``zlib``/``json`` errors.
 
 A file holds *row groups* (horizontal partitions); each row group holds one
 *column chunk* per field; each chunk is split into *pages* whose row boundaries
@@ -32,7 +42,10 @@ from typing import Any, Dict, Iterator, List, Optional, Sequence
 import numpy as np
 
 from . import encodings as enc
+from . import integrity
 from .backend import active_backend
+from .integrity import (CorruptFooterError, CorruptPageError,
+                        TruncatedFileError)
 from .dtypes import (DType, KIND_BINARY, KIND_LIST, KIND_NULL, KIND_NUMERIC,
                      KIND_STRING, KIND_TENSOR)
 from .expressions import Expr
@@ -49,8 +62,9 @@ def _payload_nbytes(p) -> int:
     return memoryview(p).nbytes
 
 MAGIC = b"TPQ1"
-VERSION = 1
-CREATED_BY = "repro-tpq 0.1"
+TRAILER_V2 = b"TPQ2"  # trailing magic of checksummed (v2) files
+VERSION = 2
+CREATED_BY = "repro-tpq 0.2"
 
 DEFAULT_PAGE_ROWS = 8192
 DEFAULT_ROW_GROUP_ROWS = 131072
@@ -66,11 +80,17 @@ class TPQWriter:
                  with_bloom: bool = True,
                  field_encodings: Optional[Dict[str, str]] = None,
                  field_codecs: Optional[Dict[str, str]] = None,
-                 file_kind: str = "base"):
+                 file_kind: str = "base",
+                 checksums: bool = True):
         # file_kind: "base" | "upsert" | "tombstone" — a footer flag marking
         # merge-on-read delta files, so an orphaned .tpq is self-describing
         # even without the manifest (crash forensics, external tools).
+        # checksums=False writes the exact legacy v1 layout (no crcs, TPQ1
+        # trailer) — kept for back-compat tests and external v1 consumers.
         self.file_kind = file_kind
+        self.path = path
+        self.checksums = checksums
+        self._fault(len(MAGIC))
         self._fh = open(path, "wb")
         self._fh.write(MAGIC)
         self._off = len(MAGIC)
@@ -83,6 +103,12 @@ class TPQWriter:
         self._schema: Optional[Schema] = None
         self._num_rows = 0
         self._closed = False
+
+    def _fault(self, nbytes: int) -> None:
+        # IO fault injection point (ENOSPC/EIO harness): called before every
+        # disk write so tests can make the "disk" fill after K bytes
+        if integrity.WRITE_FAULT_HOOK is not None:
+            integrity.WRITE_FAULT_HOOK(self.path, nbytes)
 
     # -- buffers ---------------------------------------------------------------
     def _put(self, payload, encoding: str, meta: dict, codec: str,
@@ -98,8 +124,13 @@ class TPQWriter:
             clen = len(comp)
         d = {"off": self._off, "len": clen, "enc": encoding,
              "codec": codec, "count": count}
+        if self.checksums:
+            # hash the *stored* bytes: verification is then one crc pass
+            # over the raw page slice, before any decompression or decode
+            d["crc"] = zlib.crc32(comp) & 0xFFFFFFFF
         if meta:
             d["meta"] = meta
+        self._fault(clen)
         self._fh.write(comp)
         self._off += clen
         return d
@@ -199,7 +230,7 @@ class TPQWriter:
         if self._closed:
             return
         footer = {
-            "version": VERSION,
+            "version": VERSION if self.checksums else 1,
             "created_by": CREATED_BY,
             "num_rows": self._num_rows,
             "schema": (self._schema or Schema([])).to_dict(),
@@ -208,18 +239,39 @@ class TPQWriter:
         if self.file_kind != "base":
             footer["kind"] = self.file_kind
         blob = zlib.compress(json.dumps(footer).encode("utf-8"), 6)
+        if self.checksums:
+            trailer = struct.pack("<I", zlib.crc32(blob) & 0xFFFFFFFF) \
+                + struct.pack("<Q", len(blob)) + TRAILER_V2
+        else:
+            trailer = struct.pack("<Q", len(blob)) + MAGIC
+        self._fault(len(blob) + len(trailer))
         self._fh.write(blob)
-        self._fh.write(struct.pack("<Q", len(blob)))
-        self._fh.write(MAGIC)
+        self._fh.write(trailer)
         self._fh.flush()
         self._fh.close()
         self._closed = True
 
+    def abort(self) -> None:
+        """Close the handle *without* writing a footer.
+
+        Used on write faults (ENOSPC/EIO mid-file): the partial file is left
+        footer-less — structurally truncated, so any later open fails typed
+        — and the caller unlinks it.  Idempotent with :meth:`close`.
+        """
+        if not self._closed:
+            self._fh.close()
+            self._closed = True
+
     def __enter__(self):
         return self
 
-    def __exit__(self, *exc):
-        self.close()
+    def __exit__(self, exc_type, *exc):
+        # a failed write must NOT be sealed with a valid footer: the file
+        # is incomplete, and a footer would make it open cleanly
+        if exc_type is not None:
+            self.abort()
+        else:
+            self.close()
 
 
 def write_table(path: str, table: Table, **kw) -> None:
@@ -255,19 +307,52 @@ class TPQReader:
                 fh.seek(0)
                 self._buf = memoryview(fh.read())
         buf = self._buf
+        if len(buf) < 16:
+            raise TruncatedFileError(
+                path, f"file too short ({len(buf)} bytes) — torn write?")
         if bytes(buf[:4]) != MAGIC:
-            raise IOError(f"{path}: bad magic {bytes(buf[:4])!r}")
-        if len(buf) < 16 or bytes(buf[-4:]) != MAGIC:
-            raise IOError(f"{path}: truncated (bad trailing magic)")
-        (flen,) = struct.unpack("<Q", buf[-12:-4])
-        if flen > len(buf) - 16:
-            raise IOError(f"{path}: truncated (bad trailing magic)")
-        footer = json.loads(zlib.decompress(buf[-(12 + flen):-12]))
-        self.footer = footer
-        self.schema = Schema.from_dict(footer["schema"])
-        self.file_kind: str = footer.get("kind", "base")
-        self.num_rows: int = footer["num_rows"]
-        self.row_groups: List[dict] = footer["row_groups"]
+            raise CorruptFooterError(
+                path, f"bad magic {bytes(buf[:4])!r} (not a TPQ file)")
+        trailer = bytes(buf[-4:])
+        if trailer == TRAILER_V2:
+            # v2: ... <crc32 of blob> <footer len> TPQ2
+            self.checksummed = True
+            (flen,) = struct.unpack("<Q", buf[-12:-4])
+            if len(buf) < 20 or flen > len(buf) - 20:
+                raise TruncatedFileError(
+                    path, f"footer length {flen} exceeds file size "
+                    f"{len(buf)} — truncated")
+            blob = buf[-(16 + flen):-16]
+            (want,) = struct.unpack("<I", buf[-16:-12])
+            got = zlib.crc32(blob) & 0xFFFFFFFF
+            if got != want:
+                raise CorruptFooterError(
+                    path, f"footer checksum mismatch "
+                    f"(crc32 {got:#010x} != recorded {want:#010x})")
+        elif trailer == MAGIC:
+            # legacy v1: no checksums anywhere in the file
+            self.checksummed = False
+            (flen,) = struct.unpack("<Q", buf[-12:-4])
+            if flen > len(buf) - 16:
+                raise TruncatedFileError(
+                    path, f"footer length {flen} exceeds file size "
+                    f"{len(buf)} — truncated")
+            blob = buf[-(12 + flen):-12]
+        else:
+            raise TruncatedFileError(
+                path, f"bad trailing magic {trailer!r} — truncated or "
+                "torn footer")
+        try:
+            footer = json.loads(zlib.decompress(blob))
+            self.footer = footer
+            self.schema = Schema.from_dict(footer["schema"])
+            self.file_kind: str = footer.get("kind", "base")
+            self.num_rows: int = footer["num_rows"]
+            self.row_groups: List[dict] = footer["row_groups"]
+        except (zlib.error, ValueError, KeyError, TypeError) as e:
+            # garbage blob, broken JSON, or parsed-but-wrong-shape footer
+            raise CorruptFooterError(
+                path, f"footer unreadable: {type(e).__name__}: {e}") from e
         self._file_stats: Optional[Dict[str, ColumnStats]] = None
         self._rg_stats: List[Optional[Dict[str, ColumnStats]]] = \
             [None] * len(self.row_groups)
@@ -287,6 +372,7 @@ class TPQReader:
         other._buf = self._buf
         other.footer = self.footer
         other.schema = self.schema
+        other.checksummed = self.checksummed
         other.file_kind = self.file_kind
         other.num_rows = self.num_rows
         other.row_groups = self.row_groups
@@ -326,22 +412,78 @@ class TPQReader:
                 for p in self.row_groups[rg]["columns"][name]["pages"]]
 
     # -- page reads ----------------------------------------------------------------
-    def _get(self, buf: dict):
+    def _get(self, buf: dict, verify: bool = False, ctx: tuple = ()):
         """Raw (decompressed) buffer bytes — a zero-copy slice of the file
-        mapping when the buffer is stored uncompressed."""
+        mapping when the buffer is stored uncompressed.
+
+        ``verify=True`` checks the buffer's recorded crc32 (hashed over the
+        stored bytes, so this is one pass before decompression) and raises
+        :class:`CorruptPageError` on mismatch; ``ctx`` is the
+        ``(row_group, column, page)`` coordinates carried by the error.
+        Legacy buffers without a ``"crc"`` key skip the check.
+        """
         raw = self._buf[buf["off"]:buf["off"] + buf["len"]]
+        if verify and "crc" in buf \
+                and zlib.crc32(raw) & 0xFFFFFFFF != buf["crc"]:
+            raise CorruptPageError(self.path, "page checksum mismatch",
+                                   **_ctx_kw(ctx))
         if buf["codec"] == enc.CODEC_NONE:
             return raw
-        return enc.decompress(raw, buf["codec"])
+        try:
+            return enc.decompress(raw, buf["codec"])
+        except Exception as e:
+            # without checksums a flipped bit usually lands here; with
+            # them, only when verification was explicitly switched off
+            raise CorruptPageError(
+                self.path, f"page decompress failed: {e}",
+                **_ctx_kw(ctx)) from e
 
-    def _read_values(self, buf: dict, np_dtype) -> np.ndarray:
-        payload = self._get(buf)
+    def _read_values(self, buf: dict, np_dtype, verify: bool = False,
+                     ctx: tuple = ()) -> np.ndarray:
+        payload = self._get(buf, verify=verify, ctx=ctx)
         return active_backend().decode(buf["enc"], buf.get("meta", {}),
                                        payload, buf["count"], np_dtype)
 
+    # -- scrubbing ---------------------------------------------------------------
+    def iter_page_buffers(self) -> Iterator[tuple]:
+        """Yield ``(row_group, column, page, key, buf)`` for every stored
+        buffer — validity/values/lengths/blob plus list children.  Used by
+        the scrubber (:meth:`verify_pages`) and the fault-injection harness
+        (which needs every page's byte extent to corrupt)."""
+        for i, rg in enumerate(self.row_groups):
+            for name, chunk in rg["columns"].items():
+                for j, page in enumerate(chunk["pages"]):
+                    stack = [page]
+                    while stack:
+                        p = stack.pop()
+                        for k in ("validity", "values", "lengths", "blob"):
+                            if k in p:
+                                yield (i, name, j, k, p[k])
+                        if "child" in p:
+                            stack.append(p["child"])
+
+    def verify_pages(self) -> int:
+        """Crc-check every stored buffer (no decompression, no decode).
+
+        Returns the number of buffers verified; raises
+        :class:`CorruptPageError` with coordinates at the first mismatch.
+        Legacy (v1) buffers carry no crc and count as unverified.
+        """
+        n = 0
+        for i, name, j, _k, buf in self.iter_page_buffers():
+            if "crc" not in buf:
+                continue
+            raw = self._buf[buf["off"]:buf["off"] + buf["len"]]
+            if zlib.crc32(raw) & 0xFFFFFFFF != buf["crc"]:
+                raise CorruptPageError(self.path, "page checksum mismatch",
+                                       row_group=i, column=name, page=j)
+            n += 1
+        return n
+
     def _read_column_page(self, page: dict, dtype: DType,
                           sel: Optional[np.ndarray] = None,
-                          counters=None) -> Column:
+                          counters=None, verify: bool = False,
+                          ctx: tuple = ()) -> Column:
         """Decode one column page, optionally late-materialized.
 
         ``sel`` is a selection vector (sorted row indices within the page,
@@ -354,20 +496,22 @@ class TPQReader:
         rows = page["rows"]
         validity = None
         if "validity" in page:
-            raw = self._get(page["validity"])
+            raw = self._get(page["validity"], verify=verify, ctx=ctx)
             validity = np.unpackbits(np.frombuffer(raw, np.uint8), count=rows,
                                      bitorder="little").astype(bool)
             if sel is not None:
                 validity = validity[sel]
         k = dtype.kind
         if k == KIND_NUMERIC:
-            vals = self._read_values(page["values"], dtype.np)
+            vals = self._read_values(page["values"], dtype.np,
+                                     verify=verify, ctx=ctx)
             if sel is not None:
                 vals = vals[sel]
                 _late_saved(counters, (rows - len(sel)) * vals.dtype.itemsize)
             return Column(dtype, values=vals, validity=validity)
         if k == KIND_TENSOR:
-            flat = self._read_values(page["values"], dtype.np)
+            flat = self._read_values(page["values"], dtype.np,
+                                     verify=verify, ctx=ctx)
             vals = flat.reshape(rows, *dtype.shape)
             if sel is not None:
                 vals = vals[sel]
@@ -375,10 +519,12 @@ class TPQReader:
                             * int(np.prod(dtype.shape)))
             return Column(dtype, values=vals, validity=validity)
         if k in (KIND_STRING, KIND_BINARY):
-            lens = self._read_values(page["lengths"], np.int64)
+            lens = self._read_values(page["lengths"], np.int64,
+                                     verify=verify, ctx=ctx)
             offsets = np.zeros(rows + 1, np.int64)
             np.cumsum(lens, out=offsets[1:])
-            blob = np.frombuffer(self._get(page["blob"]), np.uint8)
+            blob = np.frombuffer(
+                self._get(page["blob"], verify=verify, ctx=ctx), np.uint8)
             if sel is not None:
                 new_off, gather = _ragged_gather_index(offsets, sel)
                 _late_saved(counters, int(offsets[-1]) - len(gather))
@@ -386,18 +532,21 @@ class TPQReader:
                               validity=validity)
             return Column(dtype, offsets=offsets, blob=blob, validity=validity)
         if k == KIND_LIST:
-            lens = self._read_values(page["lengths"], np.int64)
+            lens = self._read_values(page["lengths"], np.int64,
+                                     verify=verify, ctx=ctx)
             offsets = np.zeros(rows + 1, np.int64)
             np.cumsum(lens, out=offsets[1:])
             if sel is not None:
                 new_off, child_sel = _ragged_gather_index(offsets, sel)
                 child = self._read_column_page(page["child"], dtype.child,
                                                sel=child_sel,
-                                               counters=counters)
+                                               counters=counters,
+                                               verify=verify, ctx=ctx)
                 return Column(dtype, offsets=new_off, child=child,
                               validity=validity)
             child = self._read_column_page(page["child"], dtype.child,
-                                           counters=counters)
+                                           counters=counters,
+                                           verify=verify, ctx=ctx)
             return Column(dtype, offsets=offsets, child=child,
                           validity=validity)
         return Column.nulls(rows if sel is None else len(sel))
@@ -418,10 +567,11 @@ class TPQReader:
     def read(self, columns: Optional[Sequence[str]] = None,
              filter_expr: Optional[Expr] = None,
              row_groups: Optional[Sequence[int]] = None,
-             prune_pages: bool = True, counters=None) -> Table:
+             prune_pages: bool = True, counters=None,
+             verify: Optional[str] = None) -> Table:
         parts = list(self.iter_row_group_tables(
             columns, filter_expr, row_groups, prune_pages=prune_pages,
-            counters=counters))
+            counters=counters, verify=verify))
         names = self._project(columns, filter_expr)
         keep = list(columns) if columns is not None else names
         if not parts:
@@ -432,7 +582,8 @@ class TPQReader:
 
     def iter_row_group_tables(self, columns=None, filter_expr=None,
                               row_groups=None, prune_pages: bool = True,
-                              counters=None) -> Iterator[Table]:
+                              counters=None,
+                              verify: Optional[str] = None) -> Iterator[Table]:
         """Yield one (filtered, projected) Table per surviving row group.
 
         ``counters``, when given, is a duck-typed observer (in practice a
@@ -441,10 +592,16 @@ class TPQReader:
         ``rows_scanned`` and ``bytes_decoded`` attributes are incremented as
         the reader prunes and decodes.
 
+        ``verify`` is ``"page"`` (default — crc-check every stored buffer
+        before decoding it, raising :class:`CorruptPageError` with
+        coordinates), or ``"footer"``/``"off"`` to skip the per-page check
+        (the footer checksum was already validated at open).
+
         An explicit ``row_groups`` selection is treated as authoritative at
         row-group granularity (the caller — normally the scan planner — has
         already consulted the stats); page-level pruning still applies.
         """
+        vp = verify is None or verify == "page"
         names = self._project(columns, filter_expr)
         sub_schema = self.schema.select(names)
         filter_cols = ([c for c in dict.fromkeys(filter_expr.columns())
@@ -498,13 +655,16 @@ class TPQReader:
                     for j in idxs:
                         b = pages[j]["values"]
                         specs.append((b["enc"], b.get("meta", {}),
-                                      self._get(b), b["count"]))
+                                      self._get(b, verify=vp,
+                                                ctx=(i, name, j)),
+                                      b["count"]))
                     active_backend().decode_batch(specs, dtype.np, out=out)
                     return Column(dtype, values=out)
                 pieces = [self._read_column_page(
                     pages[j], dtype,
                     sel=None if sels is None else sels[jj],
-                    counters=counters) for jj, j in enumerate(idxs)]
+                    counters=counters, verify=vp,
+                    ctx=(i, name, j)) for jj, j in enumerate(idxs)]
                 return (concat_columns(pieces) if len(pieces) != 1
                         else pieces[0])
 
@@ -634,6 +794,13 @@ def _inclusive_bounds(rng, np_dtype):
     except (OverflowError, ValueError):
         pass
     return None
+
+
+def _ctx_kw(ctx: tuple) -> dict:
+    """(row_group, column, page) coordinates → CorruptPageError kwargs."""
+    if not ctx:
+        return {}
+    return {"row_group": ctx[0], "column": ctx[1], "page": ctx[2]}
 
 
 def _late_saved(counters, nbytes: int) -> None:

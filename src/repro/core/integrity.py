@@ -1,0 +1,244 @@
+"""End-to-end data integrity: typed corruption errors, scrub reports, fault hooks.
+
+TPQ files carry crc32 checksums (format v2, :mod:`repro.core.fileformat`):
+one per stored page payload and one over the compressed footer blob.  This
+module owns the pieces every layer shares:
+
+- the **typed error hierarchy** raised when verification fails.  All of them
+  subclass :class:`IOError` (so pre-existing ``except IOError`` handling and
+  tests keep working) and carry coordinates — file path, and for page errors
+  the row group / column / page indices — so a corrupt byte is reported as
+  *where*, not as a cryptic ``zlib.error`` or ``struct.error``;
+- the **scrub report** types returned by ``db.verify()``
+  (:class:`IntegrityReport` / :class:`FileCheck`);
+- the **fault-injection hooks** the test harness uses to provoke ENOSPC
+  mid-write and transient EIO on read (mirroring the PR 7 commit crash
+  hooks in :mod:`repro.core.transactions`), plus the bounded-backoff read
+  retry helper built on them.
+
+Nothing here imports the rest of the package at module scope, so any layer
+(writer, reader, scan, store) can import it without cycles.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+# ---------------------------------------------------------------------------
+# Typed corruption errors
+# ---------------------------------------------------------------------------
+class IntegrityError(IOError):
+    """A TPQ file failed verification.
+
+    Carries the file ``path``, a human ``detail``, and — for page-level
+    failures — the ``row_group`` / ``column`` / ``page`` coordinates of the
+    corrupt buffer.  Subclasses :class:`IOError` so callers that guard file
+    reads with ``except (IOError, OSError)`` already catch it.
+    """
+
+    def __init__(self, path: str, detail: str, *,
+                 row_group: Optional[int] = None,
+                 column: Optional[str] = None,
+                 page: Optional[int] = None):
+        self.path = path
+        self.detail = detail
+        self.row_group = row_group
+        self.column = column
+        self.page = page
+        where = path
+        if row_group is not None:
+            where += f" rg={row_group}"
+        if column is not None:
+            where += f" col={column}"
+        if page is not None:
+            where += f" page={page}"
+        super().__init__(f"{where}: {detail}")
+
+    def __reduce__(self):
+        # survive pickling across process-pool workers with coordinates
+        # intact (IOError's default reduce would re-init with errno args)
+        return (_rebuild_error, (self.__class__, self.path, self.detail,
+                                 self.row_group, self.column, self.page))
+
+
+def _rebuild_error(cls, path, detail, row_group, column, page):
+    # pickle helper (module-level so it resolves in pool workers)
+    return cls(path, detail, row_group=row_group, column=column, page=page)
+
+
+class TruncatedFileError(IntegrityError):
+    """File is shorter than its own framing claims (torn write, cut copy)."""
+
+
+class CorruptFooterError(IntegrityError):
+    """Footer blob failed its checksum or cannot be parsed (bad magic,
+    garbage JSON, zlib error, wrong shape)."""
+
+
+class CorruptPageError(IntegrityError):
+    """A page payload failed its checksum or could not be decompressed."""
+
+
+# ---------------------------------------------------------------------------
+# Scrub report (what db.verify() returns)
+# ---------------------------------------------------------------------------
+@dataclass
+class FileCheck:
+    """Verification outcome for one file of a dataset snapshot."""
+    name: str                    # manifest-relative file name
+    kind: str = "base"           # base | upsert | tombstone
+    status: str = "ok"           # ok | corrupt | missing
+    checksummed: bool = True     # False for legacy (v1) files
+    rows: int = 0
+    pages_verified: int = 0
+    error: Optional[str] = None  # str(first IntegrityError) when corrupt
+    exc: Optional[BaseException] = None  # the typed error, coordinates intact
+
+    def __str__(self) -> str:
+        tag = self.status if self.checksummed else f"{self.status} (legacy)"
+        s = f"{self.name} [{self.kind}] {tag}"
+        if self.status == "ok":
+            s += f" rows={self.rows} pages_verified={self.pages_verified}"
+        elif self.error:
+            s += f" — {self.error}"
+        return s
+
+
+@dataclass
+class IntegrityReport:
+    """Structured result of ``db.verify()`` — the dataset scrubber.
+
+    Walks manifest → partitions → files → footers → pages.  ``ok`` is True
+    iff every referenced file opened, parsed, and (when ``deep``) every page
+    passed its checksum.  ``first_error`` keeps the first typed error (with
+    its file/row-group/page coordinates) for direct triage.
+    """
+    dataset: str = ""
+    generation: int = 0
+    deep: bool = False
+    files: List[FileCheck] = field(default_factory=list)
+    files_ok: int = 0
+    files_corrupt: int = 0
+    files_missing: int = 0
+    files_legacy: int = 0        # readable but unchecksummed (format v1)
+    pages_verified: int = 0
+    first_error: Optional[BaseException] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.files_corrupt == 0 and self.files_missing == 0
+
+    def add(self, check: FileCheck) -> None:
+        self.files.append(check)
+        if check.status == "ok":
+            self.files_ok += 1
+        elif check.status == "missing":
+            self.files_missing += 1
+        else:
+            self.files_corrupt += 1
+        if not check.checksummed:
+            self.files_legacy += 1
+        self.pages_verified += check.pages_verified
+        if check.exc is not None and self.first_error is None:
+            self.first_error = check.exc
+
+    def __str__(self) -> str:
+        mode = "deep" if self.deep else "shallow"
+        head = (f"IntegrityReport({self.dataset!r} gen={self.generation} "
+                f"{mode}): {'OK' if self.ok else 'CORRUPT'} — "
+                f"{self.files_ok} ok, {self.files_corrupt} corrupt, "
+                f"{self.files_missing} missing / {len(self.files)} files; "
+                f"{self.pages_verified} pages verified")
+        if self.files_legacy:
+            head += f"; {self.files_legacy} legacy unchecksummed"
+        lines = [head]
+        for c in self.files:
+            if c.status != "ok":
+                lines.append(f"  ! {c}")
+        if self.first_error is not None:
+            lines.append(f"  first error: {self.first_error}")
+        return "\n".join(lines)
+
+
+def verify_file(path: str, name: str = "", deep: bool = True) -> FileCheck:
+    """Scrub one TPQ file: open (footer checksum + parse), then page sweep.
+
+    ``deep`` checks every page payload's crc without decoding; legacy files
+    (no checksums) are instead fully decoded so corruption still surfaces as
+    a decode failure rather than passing silently.  Never raises for
+    corruption — the outcome lands in the returned :class:`FileCheck`.
+    """
+    from .fileformat import TPQReader  # lazy: avoid import cycle
+    check = FileCheck(name=name or path)
+    try:
+        rd = TPQReader(path)
+    except FileNotFoundError:
+        check.status = "missing"
+        check.error = "file not found"
+        return check
+    except IntegrityError as e:
+        check.status = "corrupt"
+        check.error = str(e)
+        check.exc = e
+        return check
+    check.kind = rd.file_kind
+    check.rows = rd.num_rows
+    check.checksummed = rd.checksummed
+    if deep:
+        try:
+            if rd.checksummed:
+                check.pages_verified = rd.verify_pages()
+            else:
+                # legacy file: no crcs to sweep — decode everything and let
+                # structural damage surface as a (typed) decode error
+                for _ in rd.iter_row_group_tables():
+                    pass
+        except Exception as e:
+            # decode of a damaged legacy file can raise nearly anything
+            check.status = "corrupt"
+            check.error = f"{type(e).__name__}: {e}"
+            check.exc = e
+    return check
+
+
+# ---------------------------------------------------------------------------
+# Fault injection hooks + bounded read retry
+# ---------------------------------------------------------------------------
+# WRITE_FAULT_HOOK(path, nbytes): called by TPQWriter before each disk write
+# (pages and footer).  Tests raise OSError(ENOSPC) from it to simulate the
+# disk filling after K bytes; the write paths must then clean up partial
+# files and never publish a manifest referencing them.
+WRITE_FAULT_HOOK: Optional[Callable[[str, int], None]] = None
+
+# READ_FAULT_HOOK(path): called before each attempt of a retried read.
+# Tests raise OSError(EIO) a bounded number of times to simulate transient
+# media errors; with_read_retries must absorb up to READ_RETRIES of them.
+READ_FAULT_HOOK: Optional[Callable[[str], None]] = None
+
+READ_RETRIES = 3            # attempts per read before giving up
+READ_RETRY_BACKOFF = 0.01   # seconds; doubles per retry (bounded: 3 tries)
+
+
+def with_read_retries(fn: Callable[[], object], path: str):
+    """Run ``fn`` with bounded-backoff retries on transient ``OSError``.
+
+    Corruption (:class:`IntegrityError`) and :class:`FileNotFoundError` are
+    *not* transient — they re-raise immediately.  Everything else OS-level
+    (EIO, EAGAIN from flaky network mounts, ...) retries up to
+    ``READ_RETRIES`` attempts with exponential backoff, then re-raises.
+    """
+    delay = READ_RETRY_BACKOFF
+    for attempt in range(READ_RETRIES):
+        try:
+            if READ_FAULT_HOOK is not None:
+                READ_FAULT_HOOK(path)
+            return fn()
+        except (IntegrityError, FileNotFoundError):
+            raise
+        except OSError:
+            if attempt + 1 >= READ_RETRIES:
+                raise
+            time.sleep(delay)
+            delay *= 2

@@ -457,7 +457,10 @@ class QueryReport:
     carry the pruning/decoding/pushdown counters.  When ``executed`` is
     True the query actually ran, so the counters reflect observed work —
     including the effect of early-terminating ``limit`` scans (fewer
-    pages/rows decoded than the plan selected).
+    pages/rows decoded than the plan selected), and the integrity /
+    degraded-mode counters (``files_quarantined`` delta files skipped under
+    ``on_corruption="quarantine"``, ``pool_rebuilds`` and
+    ``morsels_decoded_inline`` after a process-pool worker crash).
     """
     ops: List[Tuple[str, str]]
     scan: ScanReport

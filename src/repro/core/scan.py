@@ -97,6 +97,7 @@ import numpy as np
 from . import shm
 from .expressions import Expr
 from .fileformat import TPQReader, page_codec_split
+from .integrity import CorruptFooterError, IntegrityError, with_read_retries
 from .schema import ID_COLUMN, Schema
 from .table import Table, concat_tables
 from .transactions import DELTA_TOMBSTONE, DeltaEntry
@@ -237,28 +238,40 @@ def _worker_reader(path: str) -> TPQReader:
     sig = (st.st_size, st.st_mtime_ns)
     hit = _WORKER_READERS.get(path)
     if hit is None or hit[0] != sig:
-        hit = (sig, TPQReader(path))
+        hit = (sig, with_read_retries(lambda: TPQReader(path), path))
         _WORKER_READERS[path] = hit
         if len(_WORKER_READERS) > _WORKER_READERS_MAX:
             _WORKER_READERS.pop(next(iter(_WORKER_READERS)))
     return hit[1]
 
 
+# Fault-injection switch for the worker-crash tests: module-level hooks do
+# not survive the spawn boundary, so the kill order rides the environment
+# (inherited by pool workers).  A worker seeing it dies before decoding —
+# deterministically producing the BrokenProcessPool path.
+ENV_TEST_KILL_WORKER = "REPRO_TEST_KILL_WORKER"
+
+
 def _process_morsel(path: str, row_groups: tuple, columns: tuple,
-                    expr: Optional[Expr]) -> shm.Envelope:
+                    expr: Optional[Expr],
+                    verify: Optional[str] = None) -> shm.Envelope:
     """Decode one morsel inside a worker process (the *decode half*).
 
     Runs page pruning, pushdown filtering and decode exactly like a thread
     worker; overlay substitution, residual filters and ``map_fn`` stay in
     the parent (closures and overlay state don't cross a pickle boundary).
     The decoded tables + morsel-local counters ship back through
-    :mod:`repro.core.shm` as one out-of-band envelope.
+    :mod:`repro.core.shm` as one out-of-band envelope.  ``verify`` is the
+    scan's ``LoadConfig.verify`` mode; a :class:`CorruptPageError` raised
+    here pickles back to the parent with its coordinates intact.
     """
+    if os.environ.get(ENV_TEST_KILL_WORKER):
+        os._exit(1)
     local = ScanCounters()
     rd = _worker_reader(path)
     tables = list(rd.iter_row_group_tables(list(columns), expr,
                                            row_groups=list(row_groups),
-                                           counters=local))
+                                           counters=local, verify=verify))
     return shm.pack((tables, local))
 
 
@@ -311,6 +324,15 @@ class ScanCounters:
     # read set that were therefore never decoded
     groups_answered_by_stats: int = 0
     bytes_skipped_agg: int = 0
+    # integrity / fault tolerance (LoadConfig.verify / on_corruption):
+    # delta files dropped from the overlay because they failed
+    # verification (on_corruption="quarantine" only — base files raise),
+    # process-pool rebuilds after a worker crash (at most one per scan),
+    # and morsels that fell back to inline decode (broken pool or a
+    # compaction race GC'ing a planned file)
+    files_quarantined: int = 0
+    pool_rebuilds: int = 0
+    morsels_decoded_inline: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -398,6 +420,14 @@ class ScanReport:
                 f"  aggregate:  {c.groups_answered_by_stats} row groups "
                 f"answered from footer stats, {c.bytes_skipped_agg} stored "
                 f"bytes never decoded")
+        if c.files_quarantined:
+            lines.append(
+                f"  integrity:  {c.files_quarantined} corrupt delta "
+                f"file(s) QUARANTINED (serving base + surviving deltas)")
+        if c.pool_rebuilds or c.morsels_decoded_inline:
+            lines.append(
+                f"  degraded:   {c.pool_rebuilds} pool rebuild(s), "
+                f"{c.morsels_decoded_inline} morsel(s) decoded inline")
         if self.executed:
             lines.append(
                 f"  executed:   {c.pages_scanned} pages decoded "
@@ -455,12 +485,24 @@ class DeltaOverlay:
     Upserts only take effect where their base row is scanned, which is what
     makes overlaying a *subset* of base files (compaction's merge set)
     correct: rows of untouched files stay untouched.
+
+    ``on_corruption="quarantine"`` drops a delta file that fails
+    verification (typed :class:`~repro.core.integrity.IntegrityError` on
+    open or read) from the overlay instead of raising: the scan serves
+    base + surviving deltas, a warning names the file, and
+    ``self.quarantined`` records ``(name, error)`` pairs for the scan
+    counters.  The default ``"raise"`` propagates — corruption is never
+    absorbed silently either way.
     """
 
     def __init__(self, entries: Sequence[DeltaEntry],
                  reader_of: Callable[[str], TPQReader],
-                 read_schema: Schema):
+                 read_schema: Schema, on_corruption: str = "raise"):
+        if on_corruption not in ("raise", "quarantine"):
+            raise ValueError(f"unknown on_corruption {on_corruption!r} "
+                             "(expected 'raise' or 'quarantine')")
         self.entries = list(entries)
+        self.quarantined: List[Tuple[str, str]] = []
         self.upsert_rows_total = 0     # rows staged across all upsert files
         self.tombstone_rows_total = 0  # ids staged across all tombstone files
         ids_parts: List[np.ndarray] = []
@@ -469,19 +511,37 @@ class DeltaOverlay:
         up_tables: List[Table] = []
         up_offset = 0
         for pos, e in enumerate(self.entries):
-            rd = reader_of(e.name)
-            if rd.file_kind != e.kind:
-                raise IOError(f"{e.name}: footer kind {rd.file_kind!r} "
-                              f"does not match manifest kind {e.kind!r}")
-            if e.kind == DELTA_TOMBSTONE:
-                ids = rd.read(columns=[ID_COLUMN]).column(ID_COLUMN) \
-                        .values.astype(np.int64, copy=False)
+            # every read of this entry happens before any overlay state
+            # mutates, so quarantining a file that fails mid-read leaves
+            # no half-applied residue from it
+            try:
+                rd = reader_of(e.name)
+                if rd.file_kind != e.kind:
+                    raise CorruptFooterError(
+                        e.name, f"footer kind {rd.file_kind!r} does not "
+                        f"match manifest kind {e.kind!r}")
+                if e.kind == DELTA_TOMBSTONE:
+                    t = None
+                    ids = rd.read(columns=[ID_COLUMN]).column(ID_COLUMN) \
+                            .values.astype(np.int64, copy=False)
+                else:
+                    cols = [n for n in read_schema.names if n in rd.schema]
+                    t = rd.read(columns=cols).align_to_schema(read_schema)
+                    ids = t.column(ID_COLUMN).values \
+                           .astype(np.int64, copy=False)
+            except IntegrityError as err:
+                if on_corruption != "quarantine":
+                    raise
+                warnings.warn(
+                    f"quarantining corrupt delta file {e.name}: {err} "
+                    "(scan serves base + surviving deltas)",
+                    RuntimeWarning, stacklevel=2)
+                self.quarantined.append((e.name, str(err)))
+                continue
+            if t is None:
                 self.tombstone_rows_total += len(ids)
                 rows = np.full(len(ids), -1, np.int64)
             else:
-                cols = [n for n in read_schema.names if n in rd.schema]
-                t = rd.read(columns=cols).align_to_schema(read_schema)
-                ids = t.column(ID_COLUMN).values.astype(np.int64, copy=False)
                 self.upsert_rows_total += len(ids)
                 rows = up_offset + np.arange(len(ids), dtype=np.int64)
                 up_tables.append(t)
@@ -634,6 +694,11 @@ class ScanPlan:
         if self._executor not in (None, "thread", "process"):
             raise ValueError(f"unknown scan executor {self._executor!r} "
                              "(expected 'thread', 'process' or None)")
+        self._verify = getattr(cfg, "verify", None)
+        if self._verify not in (None, "page", "footer", "off"):
+            raise ValueError(f"unknown verify mode {self._verify!r} "
+                             "(expected 'page', 'footer' or 'off')")
+        self._on_corruption = getattr(cfg, "on_corruption", "raise")
         # num_threads=None is "auto": size from cpu_count but only engage
         # the pool when the decode work can actually overlap (see
         # _parallel_profitable); an explicit thread count always engages.
@@ -674,7 +739,8 @@ class ScanPlan:
             return None
         if self._overlay_obj is None:
             self._overlay_obj = DeltaOverlay(self._deltas, self._reader_of,
-                                             self._read_schema)
+                                             self._read_schema,
+                                             on_corruption=self._on_corruption)
         return self._overlay_obj
 
     # ------------------------------------------------------------------ plan
@@ -697,6 +763,7 @@ class ScanPlan:
         if ov is not None:
             c.delta_upsert_rows = ov.upsert_rows_total
             c.delta_tombstone_rows = ov.tombstone_rows_total
+            c.files_quarantined = len(ov.quarantined)
         frags: List[FragmentPlan] = []
         # manifest-level partition pruning: sound only when no upsert delta
         # is pending (an upsert's new values are unbounded by the recorded
@@ -1061,20 +1128,33 @@ class ScanPlan:
           files are immutable);
         - the pool itself breaks mid-scan (``BrokenProcessPool`` — e.g. a
           spawn child of a ``__main__``-guard-less user script dies
-          bootstrapping, or a worker is OOM-killed): the scan degrades to
-          inline decode for the remaining morsels instead of raising,
-          with a one-line warning (:func:`process_scan_pool` also swaps
-          out a broken cached pool, so the *next* scan gets fresh
-          workers);
+          bootstrapping, or a worker is OOM-killed): morsels whose
+          futures died decode inline, the pool is **rebuilt once**
+          (:func:`process_scan_pool` swaps out the broken one) and the
+          remaining morsels go to the fresh workers; if the rebuilt pool
+          breaks too, the scan degrades to inline decode for the rest
+          with a one-line warning.  ``counters.pool_rebuilds`` /
+          ``morsels_decoded_inline`` record the degradation — never a
+          hang, never an unexplained slowdown;
         - early termination (``limit`` satisfied, generator closed): the
           ``finally`` cancels queued morsels and *drains* already-running
           ones through :func:`shm.discard`, so no worker is orphaned
           mid-result and no shared-memory segment outlives the scan
           (``shm.live_segments()`` stays empty — regression-tested).
         """
-        pool = process_scan_pool(self._num_threads)
         max_inflight = self._num_threads + max(self._readahead, 1)
-        state = {"broken": False}
+        state = {"broken": False, "rebuilt": False,
+                 "pool": process_scan_pool(self._num_threads)}
+
+        def rebuild_once() -> bool:
+            """Swap in a fresh pool after a worker crash — once per scan."""
+            if state["rebuilt"]:
+                return False
+            state["rebuilt"] = True
+            counters.pool_rebuilds += 1
+            # process_scan_pool replaces a broken cached pool outright
+            state["pool"] = process_scan_pool(self._num_threads)
+            return True
 
         def submit(frag: FragmentPlan, rgs: List[int]):
             if not state["broken"]:
@@ -1082,12 +1162,17 @@ class ScanPlan:
                 have = set(rd.schema.names)
                 cols = tuple(n for n in self._read_schema.names if n in have)
                 expr = self._expr if frag.pushdown else None
-                try:
-                    return (pool.submit(_process_morsel, rd.path, tuple(rgs),
-                                        cols, expr), frag, rgs)
-                except BrokenExecutor:
-                    _warn_broken_pool(state)
-            return (None, frag, rgs)  # degraded: decode inline on arrival
+                for _attempt in range(2):
+                    sub_pool = state["pool"]
+                    try:
+                        return (sub_pool.submit(
+                            _process_morsel, rd.path, tuple(rgs),
+                            cols, expr, self._verify), frag, rgs, sub_pool)
+                    except BrokenExecutor:
+                        if not rebuild_once():
+                            break
+                _warn_broken_pool(state)
+            return (None, frag, rgs, None)  # degraded: inline on arrival
 
         it = iter(morsels)
         inflight: "collections.deque" = collections.deque(
@@ -1095,7 +1180,7 @@ class ScanPlan:
             for frag, rgs in itertools.islice(it, max_inflight))
         try:
             while inflight:
-                fut, frag, rgs = inflight.popleft()
+                fut, frag, rgs, sub_pool = inflight.popleft()
                 try:
                     if fut is None:
                         raise BrokenExecutor
@@ -1103,10 +1188,19 @@ class ScanPlan:
                 except FileNotFoundError:
                     local = ScanCounters()
                     tables = list(self._decode_tables(frag, local, rgs))
+                    local.morsels_decoded_inline += 1
                 except BrokenExecutor:
-                    _warn_broken_pool(state)
+                    # this morsel's future died with its pool: decode it
+                    # inline, and give the *remaining* morsels a fresh
+                    # pool (once per scan) before writing the scan off.
+                    # A corpse future from an already-replaced pool is
+                    # expected fallout of the rebuild, not a second crash.
+                    if fut is not None and sub_pool is state["pool"] \
+                            and not rebuild_once() and not state["broken"]:
+                        _warn_broken_pool(state)
                     local = ScanCounters()
                     tables = list(self._decode_tables(frag, local, rgs))
+                    local.morsels_decoded_inline += 1
                 counters.merge_from(local)  # single-threaded merge point
                 nxt = next(it, None)
                 if nxt is not None:
@@ -1118,7 +1212,7 @@ class ScanPlan:
                         done.append(t if map_fn is None else map_fn(t))
                 yield frag, done
         finally:
-            for fut, _, _ in inflight:
+            for fut, _, _, _ in inflight:
                 if fut is not None and not fut.cancel():
                     try:
                         shm.discard(fut.result())
@@ -1139,7 +1233,8 @@ class ScanPlan:
         pushdown = self._expr if frag.pushdown else None
         rgs = frag.row_groups if row_groups is None else row_groups
         return rd.iter_row_group_tables(cols_here, pushdown, row_groups=rgs,
-                                        counters=counters)
+                                        counters=counters,
+                                        verify=self._verify)
 
     def _finish_table(self, t: Table, frag: FragmentPlan,
                       counters: ScanCounters) -> Optional[Table]:

@@ -123,6 +123,16 @@ def unpack(env: Envelope) -> Any:
     seg = _attach(name)
     try:
         inner, sizes = pickle.loads(data)
+        need = sum(sizes)
+        if need > seg.size:
+            # worker died (or was killed) between creating the segment and
+            # filling it: the mapping is shorter than the envelope claims.
+            # Surface a typed truncation instead of a short-buffer unpickle.
+            from .integrity import TruncatedFileError
+            raise TruncatedFileError(
+                f"shm:{name}",
+                f"shared-memory segment holds {seg.size} bytes but the "
+                f"envelope claims {need}")
         out: List[bytearray] = []
         off = 0
         for s in sizes:

@@ -48,6 +48,8 @@ from .encodings import AUTO, CODEC_ZLIB
 from .expressions import Expr, IsIn, combine_filters, field
 from .fileformat import (DEFAULT_PAGE_ROWS, DEFAULT_ROW_GROUP_ROWS, TPQReader,
                          TPQWriter)
+from .integrity import FileCheck, IntegrityReport, verify_file, \
+    with_read_retries
 from .partition import PartitionSpec, Partitioning
 from .query import Query, _resolve_names
 from .scan import DeltaOverlay, ScanPlan, ScanReport
@@ -83,7 +85,11 @@ def _get_shared_reader(path: str) -> TPQReader:
         if rd is not None:
             _READER_CACHE.move_to_end(key)
             return rd
-    rd = TPQReader(path)  # parse outside the lock (I/O + zlib)
+    # parse outside the lock (I/O + zlib); transient EIO from flaky media
+    # retries with bounded backoff — corruption raises typed, immediately.
+    # Opening also validates the footer checksum (v2 files), so a cached
+    # reader implies a verified footer for the file's lifetime.
+    rd = with_read_retries(lambda: TPQReader(path), path)
     with _READER_CACHE_LOCK:
         _READER_CACHE[key] = rd
         if len(_READER_CACHE) > _READER_CACHE_MAX:
@@ -168,6 +174,22 @@ class LoadConfig:
     right when decode is GIL-bound), or ``None`` (default) to let the
     planner choose from the footer's codec split.  Output is byte-identical
     (order included) at every setting of every knob here.
+
+    ``verify`` controls data-integrity checking while decoding:
+    ``"page"`` (default) crc-checks every stored page buffer before it is
+    decompressed/decoded, raising
+    :class:`~repro.core.integrity.CorruptPageError` with file/row-group/
+    page coordinates on a mismatch; ``"footer"`` or ``"off"`` skip the
+    per-page check (the footer checksum is still validated once when a
+    file is first opened, amortized by the reader cache).  Legacy v1
+    files carry no checksums and are never page-verified.
+
+    ``on_corruption`` decides what a scan does when a *delta* file turns
+    out corrupt: ``"raise"`` (default) propagates the typed error;
+    ``"quarantine"`` drops that delta from the overlay (serving base +
+    surviving deltas), warns, and counts it in
+    ``ScanCounters.files_quarantined`` / ``explain()``.  Corrupt *base*
+    files always raise — quarantining one would silently drop rows.
     """
     batch_size: int = 131_072
     batch_readahead: int = 16
@@ -175,6 +197,8 @@ class LoadConfig:
     use_threads: bool = True
     num_threads: Optional[int] = None   # morsel workers; None = cpu_count()
     executor: Optional[str] = None      # "thread" | "process" | None = auto
+    verify: str = "page"                # "page" | "footer" | "off"
+    on_corruption: str = "raise"        # "raise" | "quarantine" (deltas)
 
 
 class Dataset:
@@ -514,13 +538,25 @@ class ParquetDB:
         row_group_rows = row_group_rows or self.row_group_rows
         page_rows = page_rows or self.page_rows
         os.makedirs(os.path.dirname(path), exist_ok=True)  # col=value/ dirs
-        with TPQWriter(path, codec=self.codec, level=self.level,
-                       encoding=self.encoding, page_rows=page_rows,
-                       row_group_rows=row_group_rows, with_bloom=self.with_bloom,
-                       field_encodings=self.field_encodings,
-                       field_codecs=self.field_codecs,
-                       file_kind=file_kind) as w:
-            w.write_table(table)
+        try:
+            with TPQWriter(path, codec=self.codec, level=self.level,
+                           encoding=self.encoding, page_rows=page_rows,
+                           row_group_rows=row_group_rows,
+                           with_bloom=self.with_bloom,
+                           field_encodings=self.field_encodings,
+                           field_codecs=self.field_codecs,
+                           file_kind=file_kind) as w:
+                w.write_table(table)
+        except OSError:
+            # ENOSPC/EIO mid-write: the writer aborted without a footer;
+            # unlink the partial file so nothing on disk can be mistaken
+            # for data.  The exception propagates before any commit, so no
+            # manifest generation ever references this path.
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            raise
 
     def _stage_delta(self, man: Manifest, kind: str, table: Table,
                      partitions: Optional[tuple] = None) -> None:
@@ -763,6 +799,37 @@ class ParquetDB:
         cfg = load_config or LoadConfig()
         return self._legacy_query(names, expr, cfg) \
                    ._compile().plan.explain(execute=execute)
+
+    # ------------------------------------------------------------------ verify
+    def verify(self, deep: bool = True) -> IntegrityReport:
+        """Scrub the committed snapshot: manifest → files → footers → pages.
+
+        Walks every file the committed manifest references (base files
+        across all partitions, then the delta chain) and checks each one:
+        the file exists, its framing and footer checksum hold, the footer
+        parses — and, with ``deep=True`` (default), every stored page
+        buffer matches its recorded crc32 (a pure hash sweep; no pages are
+        decoded).  Legacy v1 files carry no checksums: a deep scrub fully
+        decodes them instead, so structural damage still surfaces.
+
+        Never raises for corruption — returns an
+        :class:`~repro.core.integrity.IntegrityReport` with per-file
+        status, counters, and the first typed error's coordinates::
+
+            >>> report = db.verify()
+            >>> report.ok, report.files_corrupt, report.pages_verified
+            (True, 0, 42)
+
+        Readers are opened fresh (not from the footer cache), so the scrub
+        re-validates bytes on disk even for recently-scanned files.
+        """
+        man, _ = self._load_snapshot()
+        report = IntegrityReport(dataset=self.dataset_name,
+                                 generation=man.generation, deep=deep)
+        for fn in list(man.files) + [d.name for d in man.deltas]:
+            report.add(verify_file(self._dir.file_path(fn), name=fn,
+                                   deep=deep))
+        return report
 
     # ------------------------------------------------------------------ aggregate
     def aggregate(self, spec: AggSpec,

@@ -168,11 +168,20 @@ def _fsync_dir(path: str) -> None:
 
 def atomic_write_json(path: str, obj: dict) -> None:
     tmp = path + ".tmp"
-    with open(tmp, "w") as fh:
-        json.dump(obj, fh)
-        fh.flush()
-        os.fsync(fh.fileno())
-    os.replace(tmp, path)
+    try:
+        with open(tmp, "w") as fh:
+            json.dump(obj, fh)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, path)
+    except OSError:
+        # ENOSPC/EIO mid-write: never leave a partial .tmp behind (and
+        # never replace the target with one)
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     _fsync_dir(os.path.dirname(path) or ".")
 
 
@@ -239,19 +248,27 @@ class DatasetDir:
         gens.sort()
         return gens
 
+    # A damaged manifest JSON must read as "absent", never escape untyped:
+    # ValueError covers truncated/garbage JSON (json.JSONDecodeError),
+    # TypeError/KeyError cover parsed-but-wrong-shape documents (``null``,
+    # a list, missing fields) that break ``Manifest.from_dict``.  ``load``
+    # then falls back to the log head and ``repair_pointer`` rewrites the
+    # pointer — a zero-byte or torn ``_manifest.json`` self-heals on open.
+    _BAD_MANIFEST = (OSError, ValueError, TypeError, KeyError)
+
     def load_generation(self, gen: int) -> Optional[Manifest]:
-        """One specific committed generation, or None if absent/pruned."""
+        """One specific committed generation, or None if absent/damaged."""
         try:
             with open(self._gen_path(gen)) as fh:
                 return Manifest.from_dict(json.load(fh))
-        except (OSError, ValueError):
+        except self._BAD_MANIFEST:
             return None
 
     def _load_pointer(self) -> Optional[Manifest]:
         try:
             with open(self._mpath) as fh:
                 return Manifest.from_dict(json.load(fh))
-        except (OSError, ValueError):
+        except self._BAD_MANIFEST:
             return None
 
     def load(self) -> Manifest:
@@ -299,10 +316,20 @@ class DatasetDir:
             self.path,
             f"{self._gen_name(manifest.generation)}.tmp-{os.getpid():x}-"
             f"{uuid.uuid4().hex[:8]}")
-        with open(tmp, "w") as fh:
-            json.dump(manifest.to_dict(), fh)
-            fh.flush()
-            os.fsync(fh.fileno())
+        try:
+            with open(tmp, "w") as fh:
+                json.dump(manifest.to_dict(), fh)
+                fh.flush()
+                os.fsync(fh.fileno())
+        except OSError:
+            # ENOSPC/EIO writing the staged generation: clean up the
+            # partial temp and undo the bump — nothing was published
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            manifest.generation -= 1
+            raise
         try:
             os.link(tmp, final)
         except FileExistsError:

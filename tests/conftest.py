@@ -9,3 +9,7 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "concurrency: multi-process writer stress; needs >= 2 "
         "cpus and skips loudly on 1-vCPU boxes (CI concurrency job)")
+    config.addinivalue_line(
+        "markers", "faults: IO fault-injection matrix (bit flips, "
+        "truncation, ENOSPC, worker kills) — tests/test_integrity.py; "
+        "CI runs these in the dedicated faults job")

@@ -184,8 +184,11 @@ def _strip_sum_stats(path):
     a file written before the sum field existed (backward compat)."""
     with open(path, "rb") as fh:
         buf = fh.read()
+    # v2 trailer: <u32 footer crc> <u64 flen> TPQ2 (v1 had no crc)
+    v2 = buf[-4:] == b"TPQ2"
+    tail = 16 if v2 else 12
     (flen,) = struct.unpack("<Q", buf[-12:-4])
-    footer = json.loads(zlib.decompress(buf[-(12 + flen):-12]))
+    footer = json.loads(zlib.decompress(buf[-(tail + flen):-tail]))
     for rg in footer["row_groups"]:
         for chunk in rg["columns"].values():
             chunk["stats"].pop("sum", None)
@@ -193,8 +196,10 @@ def _strip_sum_stats(path):
                 page["stats"].pop("sum", None)
     blob = zlib.compress(json.dumps(footer).encode("utf-8"), 6)
     with open(path, "wb") as fh:
-        fh.write(buf[:-(12 + flen)])
+        fh.write(buf[:-(tail + flen)])
         fh.write(blob)
+        if v2:
+            fh.write(struct.pack("<I", zlib.crc32(blob) & 0xFFFFFFFF))
         fh.write(struct.pack("<Q", len(blob)))
         fh.write(buf[-4:])
 

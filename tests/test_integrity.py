@@ -1,0 +1,534 @@
+"""End-to-end integrity: checksums, the scrubber, and the IO fault matrix.
+
+Every test here follows the same contract:
+
+- **corruption is never silent** — a damaged byte either raises a typed
+  :class:`IntegrityError` subclass (with file / row-group / column / page
+  coordinates) or the read returns exactly the pristine oracle rows;
+- **write faults never damage the committed snapshot** — an ENOSPC at any
+  byte offset during create/update/compact leaves the previously committed
+  files byte-identical and readable on reopen.
+
+Fault injection uses the hooks in :mod:`repro.core.integrity`
+(``WRITE_FAULT_HOOK`` / ``READ_FAULT_HOOK``), the ``REPRO_TEST_KILL_WORKER``
+env switch in :mod:`repro.core.scan`, and plain byte surgery on .tpq files.
+"""
+import errno
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (CorruptFooterError, CorruptPageError, IntegrityError,
+                        LoadConfig, ParquetDB, Table, TPQReader, TPQWriter,
+                        TruncatedFileError, write_table)
+from repro.core import integrity, scan
+from repro.core import transactions as tx
+from repro.core.fileformat import MAGIC, TRAILER_V2
+
+pytestmark = pytest.mark.faults
+
+
+@pytest.fixture(autouse=True)
+def _clean_hooks():
+    yield
+    integrity.WRITE_FAULT_HOOK = None
+    integrity.READ_FAULT_HOOK = None
+
+
+def _mixed_table(n: int = 3000) -> Table:
+    rng = np.arange(n)
+    return Table.from_pydict({
+        "x": rng,
+        "f": rng * 0.25,
+        "s": np.array([f"row-{i % 17}" for i in range(n)], dtype=object),
+    })
+
+
+def _flip(path: str, offset: int, mask: int = 0x40) -> None:
+    with open(path, "r+b") as fh:
+        fh.seek(offset)
+        b = fh.read(1)
+        fh.seek(offset)
+        fh.write(bytes([b[0] ^ mask]))
+
+
+def _first_page_offset(path: str) -> int:
+    rd = TPQReader(path)
+    for _rg, _col, _page, _key, buf in rd.iter_page_buffers():
+        return buf["off"] + buf["len"] // 2
+    raise AssertionError("file has no pages")
+
+
+def _tpq_bytes(dirpath: str) -> dict:
+    out = {}
+    for fn in os.listdir(dirpath):
+        if fn.endswith(".tpq"):
+            with open(os.path.join(dirpath, fn), "rb") as fh:
+                out[fn] = fh.read()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Open-time parse errors (wrong magic, torn trailer, truncation, empty file)
+# ---------------------------------------------------------------------------
+class TestOpenErrors:
+    @pytest.fixture
+    def tpq(self, tmp_path):
+        p = str(tmp_path / "f.tpq")
+        write_table(p, _mixed_table(500))
+        return p
+
+    def test_wrong_magic(self, tpq):
+        _flip(tpq, 0)
+        with pytest.raises(CorruptFooterError, match="magic"):
+            TPQReader(tpq)
+
+    def test_trailer_garbage(self, tpq):
+        size = os.path.getsize(tpq)
+        _flip(tpq, size - 2)
+        with pytest.raises(TruncatedFileError):
+            TPQReader(tpq)
+
+    def test_footer_length_past_eof(self, tpq):
+        size = os.path.getsize(tpq)
+        with open(tpq, "r+b") as fh:
+            fh.seek(size - 12)  # v2 trailer: <crc u32> <flen u64> TPQ2
+            fh.write((1 << 40).to_bytes(8, "little"))
+        with pytest.raises(TruncatedFileError):
+            TPQReader(tpq)
+
+    def test_empty_file(self, tmp_path):
+        p = str(tmp_path / "empty.tpq")
+        open(p, "wb").close()
+        with pytest.raises(TruncatedFileError):
+            TPQReader(p)
+
+    def test_tiny_file(self, tmp_path):
+        p = str(tmp_path / "tiny.tpq")
+        with open(p, "wb") as fh:
+            fh.write(MAGIC + b"1234")
+        with pytest.raises(TruncatedFileError):
+            TPQReader(p)
+
+    def test_torn_footer_blob(self, tpq):
+        size = os.path.getsize(tpq)
+        with open(tpq, "rb") as fh:
+            buf = fh.read()
+        flen = int.from_bytes(buf[size - 12:size - 4], "little")
+        _flip(tpq, size - 16 - flen + flen // 2)  # mid-footer-blob
+        with pytest.raises(CorruptFooterError, match="checksum"):
+            TPQReader(tpq)
+
+    def test_errors_pickle_with_coordinates(self):
+        import pickle
+        e = CorruptPageError("f.tpq", "crc mismatch", row_group=2,
+                             column="s", page=7)
+        e2 = pickle.loads(pickle.dumps(e))
+        assert isinstance(e2, CorruptPageError) and isinstance(e2, IOError)
+        assert (e2.row_group, e2.column, e2.page) == (2, "s", 7)
+        assert "rg=2" in str(e2) and "col=s" in str(e2)
+
+
+# ---------------------------------------------------------------------------
+# Bit-flip matrix: every page payload in the file, one flip at a time
+# ---------------------------------------------------------------------------
+def test_bitflip_every_page_detected(tmp_path):
+    p = str(tmp_path / "f.tpq")
+    t = _mixed_table(20_000)  # several pages per column
+    write_table(p, t, page_rows=4096, row_group_rows=8192)
+    oracle = t.to_pydict()
+    with open(p, "rb") as fh:
+        pristine = fh.read()
+    targets = [(rg, col, page, buf["off"], buf["len"])
+               for rg, col, page, _key, buf in TPQReader(p).iter_page_buffers()]
+    assert len(targets) >= 12, "matrix too small to be meaningful"
+    for rg, col, page, off, ln in targets:
+        damaged = bytearray(pristine)
+        damaged[off + ln // 2] ^= 0x40
+        with open(p, "wb") as fh:
+            fh.write(bytes(damaged))
+        try:
+            got = TPQReader(p).read().to_pydict()
+        except CorruptPageError as e:
+            assert (e.row_group, e.column, e.page) == (rg, col, page), \
+                f"wrong coordinates for flip in rg={rg} col={col} page={page}"
+        else:
+            pytest.fail(f"silent corruption: flip at rg={rg} col={col} "
+                        f"page={page} off={off} returned rows "
+                        f"{'equal to' if got == oracle else 'DIFFERENT from'}"
+                        " oracle without raising")
+    # restore and prove the oracle still holds
+    with open(p, "wb") as fh:
+        fh.write(pristine)
+    assert TPQReader(p).read().to_pydict() == oracle
+
+
+def test_verify_pages_sweep_finds_flip_without_decode(tmp_path):
+    p = str(tmp_path / "f.tpq")
+    write_table(p, _mixed_table(2000))
+    assert TPQReader(p).verify_pages() > 0
+    _flip(p, _first_page_offset(p))
+    with pytest.raises(CorruptPageError):
+        TPQReader(p).verify_pages()
+
+
+def test_truncation_ladder(tmp_path):
+    p = str(tmp_path / "f.tpq")
+    write_table(p, _mixed_table(4000))
+    with open(p, "rb") as fh:
+        pristine = fh.read()
+    size = len(pristine)
+    cuts = sorted({0, 1, 4, 15, 16, size // 4, size // 2, 3 * size // 4,
+                   size - 25, size - 16, size - 12, size - 4, size - 1})
+    for cut in cuts:
+        with open(p, "wb") as fh:
+            fh.write(pristine[:cut])
+        with pytest.raises(IntegrityError):
+            TPQReader(p).read()
+
+
+# ---------------------------------------------------------------------------
+# Legacy v1 files: readable, reported unchecksummed
+# ---------------------------------------------------------------------------
+def test_legacy_v1_roundtrip_and_report(tmp_path):
+    p = str(tmp_path / "v1.tpq")
+    t = _mixed_table(1000)
+    write_table(p, t, checksums=False)
+    with open(p, "rb") as fh:
+        tail = fh.read()[-4:]
+    assert tail == MAGIC and tail != TRAILER_V2
+    rd = TPQReader(p)
+    assert rd.checksummed is False
+    assert rd.verify_pages() == 0  # nothing to sweep
+    assert rd.read().to_pydict() == t.to_pydict()
+    check = integrity.verify_file(p, deep=True)
+    assert check.status == "ok" and check.checksummed is False
+    assert "legacy" in str(check)
+
+
+def test_v2_default_and_verify_modes(tmp_path):
+    p = str(tmp_path / "v2.tpq")
+    t = _mixed_table(1000)
+    write_table(p, t)
+    with open(p, "rb") as fh:
+        assert fh.read()[-4:] == TRAILER_V2
+    rd = TPQReader(p)
+    assert rd.checksummed is True
+    for mode in (None, "page", "footer", "off"):
+        assert rd.read(verify=mode).to_pydict() == t.to_pydict()
+
+
+# ---------------------------------------------------------------------------
+# The scrubber: db.verify()
+# ---------------------------------------------------------------------------
+class TestScrubber:
+    @pytest.fixture
+    def db(self, tmp_path):
+        db = ParquetDB(str(tmp_path / "db"), "db")
+        db.create([{"x": i, "s": f"s{i}"} for i in range(200)])
+        db.update([{"id": 5, "x": -5}])          # upsert delta
+        db.delete(ids=[7])                       # tombstone delta
+        return db
+
+    def test_clean_dataset(self, db):
+        rep = db.verify()
+        assert rep.ok and rep.deep
+        assert rep.files_corrupt == 0 and rep.files_missing == 0
+        assert rep.files_ok == len(rep.files) >= 3  # base + 2 deltas
+        assert rep.pages_verified > 0
+        assert {c.kind for c in rep.files} == {"base", "upsert", "tombstone"}
+        assert "OK" in str(rep)
+        shallow = db.verify(deep=False)
+        assert shallow.ok and shallow.pages_verified == 0
+
+    def test_corrupt_and_missing_files_reported(self, db, tmp_path):
+        man, _ = db._load_snapshot()
+        deltas = [d.name for d in man.deltas]
+        _flip(db._dir.file_path(deltas[0]),
+              _first_page_offset(db._dir.file_path(deltas[0])))
+        os.remove(db._dir.file_path(deltas[1]))
+        rep = ParquetDB(str(tmp_path / "db"), "db").verify()
+        assert not rep.ok
+        assert rep.files_corrupt == 1 and rep.files_missing == 1
+        assert isinstance(rep.first_error, IntegrityError)
+        assert "CORRUPT" in str(rep) and deltas[0] in str(rep)
+
+    def test_shallow_misses_page_damage_deep_catches_it(self, db, tmp_path):
+        man, _ = db._load_snapshot()
+        base = db._dir.file_path(man.files[0])
+        _flip(base, _first_page_offset(base))
+        db2 = ParquetDB(str(tmp_path / "db"), "db")
+        assert db2.verify(deep=False).ok          # footer is intact
+        deep = ParquetDB(str(tmp_path / "db"), "db").verify(deep=True)
+        assert not deep.ok and deep.files_corrupt == 1
+
+
+# ---------------------------------------------------------------------------
+# Scan-time corruption policy: raise vs quarantine
+# ---------------------------------------------------------------------------
+class TestCorruptionPolicy:
+    @pytest.fixture
+    def dbdir(self, tmp_path):
+        db = ParquetDB(str(tmp_path / "db"), "db")
+        db.create([{"x": i} for i in range(100)])
+        db.update([{"id": 5, "x": -5}])
+        return str(tmp_path / "db")
+
+    def _corrupt_delta(self, dbdir):
+        db = ParquetDB(dbdir, "db")
+        man, _ = db._load_snapshot()
+        path = db._dir.file_path(man.deltas[0].name)
+        _flip(path, _first_page_offset(path))
+
+    def test_default_raises_on_corrupt_delta(self, dbdir):
+        self._corrupt_delta(dbdir)
+        with pytest.raises(IntegrityError):
+            ParquetDB(dbdir, "db").read()
+
+    def test_quarantine_skips_delta_and_counts_it(self, dbdir):
+        self._corrupt_delta(dbdir)
+        cfg = LoadConfig(on_corruption="quarantine")
+        with pytest.warns(RuntimeWarning, match="quarantin"):
+            t = ParquetDB(dbdir, "db").read(load_config=cfg)
+        got = t.to_pydict()["x"]
+        assert sorted(got) == list(range(100))  # base rows, upsert skipped
+        with pytest.warns(RuntimeWarning, match="quarantin"):
+            rep = ParquetDB(dbdir, "db").explain(execute=True,
+                                                 load_config=cfg)
+        assert rep.counters.files_quarantined == 1
+        assert "QUARANTINED" in str(rep)
+
+    def test_corrupt_base_always_raises(self, dbdir):
+        db = ParquetDB(dbdir, "db")
+        man, _ = db._load_snapshot()
+        base = db._dir.file_path(man.files[0])
+        _flip(base, _first_page_offset(base))
+        with pytest.raises(IntegrityError):
+            ParquetDB(dbdir, "db").read(
+                load_config=LoadConfig(on_corruption="quarantine"))
+
+    def test_bad_knob_values_rejected(self, dbdir):
+        with pytest.raises(ValueError):
+            ParquetDB(dbdir, "db").read(load_config=LoadConfig(verify="no"))
+        with pytest.raises(ValueError):
+            ParquetDB(dbdir, "db").read(
+                load_config=LoadConfig(on_corruption="ignore"))
+
+
+# ---------------------------------------------------------------------------
+# Write faults: ENOSPC after K bytes must never damage the committed snapshot
+# ---------------------------------------------------------------------------
+def _budget_hook(k: int):
+    state = {"written": 0}
+    def hook(path, nbytes):
+        if state["written"] + nbytes > k:
+            raise OSError(errno.ENOSPC, "No space left on device (injected)")
+        state["written"] += nbytes
+    return hook
+
+
+def _write_sizes(op) -> list:
+    """Run ``op`` once recording every TPQWriter write size, fault-free."""
+    sizes = []
+    integrity.WRITE_FAULT_HOOK = lambda path, n: sizes.append(n)
+    try:
+        op()
+    finally:
+        integrity.WRITE_FAULT_HOOK = None
+    return sizes
+
+
+class TestWriteFaults:
+    def _assert_snapshot_intact(self, dbdir, files_before, rows_before):
+        assert _tpq_bytes(dbdir) == files_before, \
+            "fault left partial/altered .tpq files behind"
+        db = ParquetDB(dbdir, "db")
+        assert db.read().to_pydict() == rows_before
+
+    def test_enospc_sweep_during_create(self, tmp_path):
+        batch = [{"x": 1000 + i, "s": "new"} for i in range(500)]
+        # probe the write-size profile on a scratch dataset
+        sdb = ParquetDB(str(tmp_path / "scratch"), "db")
+        sdb.create([{"x": i, "s": f"s{i}"} for i in range(300)])
+        sizes = _write_sizes(lambda: sdb.create(batch))
+        total = sum(sizes)
+        # the real dataset whose snapshot must survive every cut
+        dbdir = str(tmp_path / "db")
+        db = ParquetDB(dbdir, "db")
+        db.create([{"x": i, "s": f"s{i}"} for i in range(300)])
+        files_before = _tpq_bytes(dbdir)
+        rows_before = db.read().to_pydict()
+        bounds = np.cumsum(sizes)
+        cuts = sorted({0, 1, *(int(b) - 1 for b in bounds if b > 0),
+                       *(int(b) for b in bounds[:-1]), total // 2})
+        cuts = [k for k in cuts if 0 <= k < total]
+        assert len(cuts) >= 5
+        for k in cuts:
+            integrity.WRITE_FAULT_HOOK = _budget_hook(k)
+            with pytest.raises(OSError):
+                ParquetDB(dbdir, "db").create(batch)
+            integrity.WRITE_FAULT_HOOK = None
+            self._assert_snapshot_intact(dbdir, files_before, rows_before)
+        # disk "freed": the same create now commits
+        ParquetDB(dbdir, "db").create(batch)
+        assert ParquetDB(dbdir, "db").n_rows == 800
+
+    def test_enospc_during_update_stage(self, tmp_path):
+        dbdir = str(tmp_path / "db")
+        db = ParquetDB(dbdir, "db")
+        db.create([{"x": i} for i in range(100)])
+        files_before = _tpq_bytes(dbdir)
+        rows_before = db.read().to_pydict()
+        integrity.WRITE_FAULT_HOOK = _budget_hook(0)
+        with pytest.raises(OSError):
+            ParquetDB(dbdir, "db").update([{"id": 3, "x": -3}])
+        integrity.WRITE_FAULT_HOOK = None
+        self._assert_snapshot_intact(dbdir, files_before, rows_before)
+
+    def test_enospc_during_compaction(self, tmp_path):
+        dbdir = str(tmp_path / "db")
+        db = ParquetDB(dbdir, "db")
+        for i in range(6):  # several small files worth compacting
+            db.create([{"x": 100 * i + j} for j in range(100)])
+        db = ParquetDB(dbdir, "db")
+        files_before = _tpq_bytes(dbdir)
+        rows_before = db.read().to_pydict()
+        sizes = _write_sizes(
+            lambda: ParquetDB(str(tmp_path / "scratch"), "db").create(
+                [{"x": i} for i in range(600)]))
+        for k in (0, 1, sum(sizes) // 2):
+            integrity.WRITE_FAULT_HOOK = _budget_hook(k)
+            with pytest.raises(OSError):
+                ParquetDB(dbdir, "db").compact(force=True)
+            integrity.WRITE_FAULT_HOOK = None
+            self._assert_snapshot_intact(dbdir, files_before, rows_before)
+        # and the retry succeeds once space is back
+        res = ParquetDB(dbdir, "db").compact(force=True)
+        assert res.compacted
+        db2 = ParquetDB(dbdir, "db")
+        assert sorted(db2.read().to_pydict()["x"]) == sorted(rows_before["x"])
+        assert db2.n_files < len(files_before)
+
+    def test_failed_writer_leaves_no_valid_footer(self, tmp_path):
+        p = str(tmp_path / "partial.tpq")
+        with pytest.raises(RuntimeError):
+            with TPQWriter(p) as w:
+                w.write_table(_mixed_table(100))
+                raise RuntimeError("interrupted mid-write")
+        # the partial file must not parse as a sealed TPQ file
+        with pytest.raises(IntegrityError):
+            TPQReader(p)
+
+
+# ---------------------------------------------------------------------------
+# Transient read faults: bounded-backoff retry
+# ---------------------------------------------------------------------------
+class TestReadRetries:
+    def test_transient_eio_retried(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(integrity, "READ_RETRY_BACKOFF", 0.0001)
+        p = str(tmp_path / "f.tpq")
+        write_table(p, _mixed_table(100))
+        calls = {"n": 0}
+        def hook(path):
+            calls["n"] += 1
+            if calls["n"] <= 2:
+                raise OSError(errno.EIO, "I/O error (injected)")
+        integrity.READ_FAULT_HOOK = hook
+        rd = integrity.with_read_retries(lambda: TPQReader(p), p)
+        assert calls["n"] == 3 and rd.num_rows == 100
+
+    def test_persistent_eio_gives_up(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(integrity, "READ_RETRY_BACKOFF", 0.0001)
+        calls = {"n": 0}
+        def hook(path):
+            calls["n"] += 1
+            raise OSError(errno.EIO, "I/O error (injected)")
+        integrity.READ_FAULT_HOOK = hook
+        with pytest.raises(OSError):
+            integrity.with_read_retries(lambda: None, "f.tpq")
+        assert calls["n"] == integrity.READ_RETRIES
+
+    def test_corruption_is_not_retried(self, tmp_path):
+        p = str(tmp_path / "f.tpq")
+        write_table(p, _mixed_table(100))
+        _flip(p, 0)  # break the magic
+        calls = {"n": 0}
+        def hook(path):
+            calls["n"] += 1
+        integrity.READ_FAULT_HOOK = hook
+        with pytest.raises(CorruptFooterError):
+            integrity.with_read_retries(lambda: TPQReader(p), p)
+        assert calls["n"] == 1
+
+    def test_db_read_survives_one_transient_fault(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(integrity, "READ_RETRY_BACKOFF", 0.0001)
+        db = ParquetDB(str(tmp_path / "db"), "db")
+        db.create([{"x": i} for i in range(50)])
+        failed = {"done": False}
+        def hook(path):
+            if not failed["done"]:
+                failed["done"] = True
+                raise OSError(errno.EIO, "I/O error (injected)")
+        integrity.READ_FAULT_HOOK = hook
+        db2 = ParquetDB(str(tmp_path / "db"), "db")
+        assert db2.read().num_rows == 50 and failed["done"]
+
+
+# ---------------------------------------------------------------------------
+# Manifest pointer corruption (regression: used to escape as JSONDecodeError
+# or TypeError from ParquetDB.__init__)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("blob", [b"", b'{"da', b"null", b"{}", b"[]",
+                                  b'{"generation": "not-a-manifest"}'])
+def test_damaged_pointer_self_heals(tmp_path, blob):
+    dbdir = str(tmp_path / "db")
+    db = ParquetDB(dbdir, "db")
+    db.create([{"x": i} for i in range(20)])
+    ptr = db._dir.file_path(tx.MANIFEST)
+    with open(ptr, "wb") as fh:
+        fh.write(blob)
+    db2 = ParquetDB(dbdir, "db")  # must not raise
+    assert db2.read().to_pydict()["x"] == list(range(20))
+    with open(ptr, "rb") as fh:  # pointer repaired to valid JSON
+        man = json.load(fh)
+    assert man["dataset"] == "db" and man["generation"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Process-pool worker crash: rebuild once, then finish inline — right rows
+# ---------------------------------------------------------------------------
+def _reset_process_pool():
+    with scan._PPOOL_LOCK:
+        if scan._PPOOL is not None:
+            scan._PPOOL.shutdown(wait=False, cancel_futures=True)
+        scan._PPOOL = None
+        scan._PPOOL_WORKERS = 0
+
+
+@pytest.mark.skipif((os.cpu_count() or 1) < 2, reason="needs >= 2 cpus")
+def test_worker_crash_rebuilds_then_decodes_inline(tmp_path):
+    db = ParquetDB(str(tmp_path / "db"), "db")
+    for i in range(6):  # several fragments => several morsels
+        db.create([{"x": 1000 * i + j} for j in range(500)])
+    db = ParquetDB(str(tmp_path / "db"), "db")
+    oracle = sorted(db.read().to_pydict()["x"])
+    cfg = LoadConfig(executor="process", num_threads=2)
+    os.environ[scan.ENV_TEST_KILL_WORKER] = "1"
+    _reset_process_pool()  # fresh pool so spawned workers see the kill switch
+    try:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            rep = db.explain(execute=True, load_config=cfg)
+            t = db.read(load_config=cfg)
+        assert any("pool" in str(x.message) for x in w)
+        assert sorted(t.to_pydict()["x"]) == oracle  # never wrong rows
+        c = rep.counters
+        assert c.pool_rebuilds == 1
+        assert c.morsels_decoded_inline >= 1
+        assert "degraded" in str(rep)
+    finally:
+        os.environ.pop(scan.ENV_TEST_KILL_WORKER, None)
+        _reset_process_pool()  # don't poison later tests with dying workers
