@@ -23,7 +23,7 @@ import sys
 import time
 
 SUITES = ["fig5_create_read", "fig6_formats", "fig7_needle", "fig8_update",
-          "fig9_alexandria", "fig10_ops", "fig11_aggregate",
+          "fig9_alexandria", "fig10_ops", "fig11_aggregate", "fig12_serve",
           "pipeline_bench", "kernels_bench", "ckpt_bench"]
 
 

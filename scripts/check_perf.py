@@ -68,6 +68,12 @@ SCALING_GATES = [
     # single-core box (min cpus 1)
     ("fig9 partition-prune", "fig9/scan-selective/",
      "fig9/scan-full/", 5.0, 1),
+    # serving tier result cache: a warm (plan key + generation) hit must
+    # answer >= 5x faster than the cold plan+scan of the same query —
+    # a cache hit skips the scan entirely, so this holds on any box
+    # (min cpus 1); see benchmarks/fig12_serve.py
+    ("fig12 result-cache", "fig12/query-warm/parquetdb/",
+     "fig12/query-cold/parquetdb/", 5.0, 1),
 ]
 
 # Overhead gates on the *current* run only:

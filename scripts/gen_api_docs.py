@@ -21,6 +21,8 @@ sys.path.insert(0, os.path.join(REPO, "src"))
 
 from repro.core import (aggregate, compaction, integrity,  # noqa: E402
                         partition, query, scan, store, transactions)
+from repro.serve import cache as serve_cache  # noqa: E402
+from repro.serve import dbserver, protocol  # noqa: E402
 
 OUT = os.path.join(REPO, "docs", "API.md")
 
@@ -30,11 +32,11 @@ HEADER = """\
 <!-- GENERATED FILE — do not edit by hand.
      Regenerate with: PYTHONPATH=src python scripts/gen_api_docs.py -->
 
-Generated from the docstrings of `repro.core`. The classes below are the
-public surface of the database layer; see
-[ARCHITECTURE.md](ARCHITECTURE.md) for how they fit together and
+Generated from the docstrings of `repro.core` and `repro.serve`. The
+classes below are the public surface of the database and serving layers;
+see [ARCHITECTURE.md](ARCHITECTURE.md) for how they fit together,
 [TRANSACTIONS.md](TRANSACTIONS.md) for the transaction/maintenance
-lifecycle.
+lifecycle and [SERVING.md](SERVING.md) for the query server.
 """
 
 # (class, members); None = every public method, () = class docstring only
@@ -46,7 +48,7 @@ SECTIONS = [
     (query.Query,
      ["where", "select", "group_by", "order_by", "limit", "offset",
       "distinct", "to_table", "iter_batches", "to_pylist", "count", "agg",
-      "explain"]),
+      "explain", "plan_fingerprint", "plan_key"]),
     (query.GroupedQuery, ["agg"]),
     (query.QueryReport, ()),
     (store.Dataset, ["query", "schema", "iter_batches", "to_table",
@@ -75,6 +77,15 @@ SECTIONS = [
      ["snapshot", "stage", "validate", "publish"]),
     (transactions.CommitConflict, ()),
     (transactions.WriteLockTimeout, ()),
+    (scan.MorselBudget, ["acquire", "try_acquire", "release", "stats"]),
+    (dbserver.DBServer, ["start", "stop", "serve_forever"]),
+    (protocol.DBClient,
+     ["query", "count", "agg", "update", "delete", "explain", "stats",
+      "ping", "close"]),
+    (serve_cache.PlanCache, ["get", "put"]),
+    (serve_cache.ResultCache,
+     ["get", "put", "invalidate_below", "clear"]),
+    (serve_cache.ServerStats, ["record", "bump", "snapshot"]),
 ]
 
 

@@ -14,14 +14,14 @@ from .fileformat import TPQReader, TPQWriter, read_table, write_table
 from .integrity import (CorruptFooterError, CorruptPageError, FileCheck,
                         IntegrityError, IntegrityReport, TruncatedFileError,
                         verify_file)
-from .scan import (DeltaOverlay, FragmentPlan, ScanCounters, ScanPlan,
-                   ScanReport)
+from .scan import (DeltaOverlay, FragmentPlan, MorselBudget, ScanCounters,
+                   ScanPlan, ScanReport)
 from .aggregate import AggregatePlan
 from .partition import PartitionSpec, Partitioning
 from .query import GroupedQuery, Query, QueryReport
 from .compaction import CompactionPolicy, CompactionResult, MaintenanceStats
 from .transactions import (CommitConflict, DeltaEntry, Manifest, Transaction,
-                           WriteLockTimeout)
+                           WriteLockTimeout, register_commit_listener)
 from .store import Dataset, LoadConfig, NormalizeConfig, ParquetDB
 
 __all__ = [
@@ -30,12 +30,13 @@ __all__ = [
     "read_table", "write_table",
     "IntegrityError", "TruncatedFileError", "CorruptFooterError",
     "CorruptPageError", "FileCheck", "IntegrityReport", "verify_file",
-    "DeltaOverlay", "FragmentPlan",
+    "DeltaOverlay", "FragmentPlan", "MorselBudget",
     "ScanCounters", "ScanPlan", "ScanReport", "AggregatePlan",
     "PartitionSpec", "Partitioning",
     "GroupedQuery", "Query", "QueryReport",
     "CompactionPolicy", "CompactionResult", "MaintenanceStats",
     "CommitConflict", "DeltaEntry", "Manifest", "Transaction",
-    "WriteLockTimeout", "Dataset", "LoadConfig", "NormalizeConfig",
+    "WriteLockTimeout", "register_commit_listener",
+    "Dataset", "LoadConfig", "NormalizeConfig",
     "ParquetDB",
 ]

@@ -56,6 +56,7 @@ arbitrary precision).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Dict, Generator, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -63,13 +64,14 @@ import numpy as np
 from . import nested
 from .aggregate import AggregatePlan, _normalize_spec
 from .dtypes import DType, KIND_NULL, KIND_NUMERIC, KIND_STRING
-from .expressions import Arith, Expr, FieldRef
+from .expressions import (And, Arith, Comparison, Expr, FieldRef, IsIn,
+                          IsNaN, IsNull, Not, Or)
 from .scan import ScanCounters, ScanPlan, ScanReport, rechunk
 from .schema import Field, ID_COLUMN, Schema
 from .table import (Column, Table, concat_tables, infer_column,
                     null_column_of)
 
-__all__ = ["Query", "GroupedQuery", "QueryReport"]
+__all__ = ["Query", "GroupedQuery", "QueryReport", "canonical_expr"]
 
 # Singleton NaN used as a grouping key: dict lookups on tuples hit the
 # identity fast path, so every NaN row lands in ONE group even though
@@ -93,6 +95,71 @@ def _resolve_names(schema: Schema, cols: Sequence[str]) -> List[str]:
             raise _no_such_column(c, schema)
         out.extend(kids)
     return out
+
+
+# ---------------------------------------------------------------------------
+# plan canonicalization: fused-expression fingerprints for plan caches
+# ---------------------------------------------------------------------------
+def _canon_value(v: Any) -> str:
+    """Type-tagged scalar rendering so ``1`` and ``1.0`` and ``True`` key
+    differently (they filter differently on mixed columns)."""
+    if isinstance(v, FieldRef):
+        return f"field({v.name})"
+    if isinstance(v, (np.integer, np.floating, np.bool_)):
+        v = v.item()
+    return f"{type(v).__name__}:{v!r}"
+
+
+def canonical_expr(e: Optional[Expr]) -> str:
+    """Canonical text for a predicate tree, stable under the rewrites that
+    don't change its meaning: AND/OR chains are flattened, their operands
+    sorted and deduped (commutative + associative + idempotent), and
+    ``isin`` value lists are sorted and deduped.  Two ``where`` chains that
+    ask the same question — ``where(a).where(b)`` vs ``where(b).where(a)``
+    — render identically, which is what lets a plan cache key on the fused
+    expression instead of its construction order.  ``None`` (no filter)
+    renders as the empty string."""
+    if e is None:
+        return ""
+    if isinstance(e, (And, Or)):
+        op = "and" if isinstance(e, And) else "or"
+        parts: List[str] = []
+        stack: List[Expr] = [e]
+        while stack:
+            node = stack.pop()
+            if type(node) is type(e):
+                stack.append(node.a)  # type: ignore[attr-defined]
+                stack.append(node.b)  # type: ignore[attr-defined]
+            else:
+                parts.append(canonical_expr(node))
+        parts = sorted(set(parts))
+        if len(parts) == 1:  # a & a
+            return parts[0]
+        return f"{op}({','.join(parts)})"
+    if isinstance(e, Not):
+        return f"not({canonical_expr(e.a)})"
+    if isinstance(e, Comparison):
+        return f"cmp({e.name},{e.op},{_canon_value(e.value)})"
+    if isinstance(e, IsIn):
+        vals = sorted(set(_canon_value(v) for v in e.values))
+        return f"isin({e.name},[{','.join(vals)}])"
+    if isinstance(e, IsNull):
+        return f"{'isvalid' if e._negated else 'isnull'}({e.name})"
+    if isinstance(e, IsNaN):
+        return f"isnan({e.name})"
+    # unknown Expr subclass: fall back to repr — correct (never conflates
+    # distinct plans) just not order-insensitive
+    return repr(e)
+
+
+def _canon_computed(ve: Any) -> str:
+    """Structural rendering of a value expression (computed column)."""
+    if isinstance(ve, FieldRef):
+        return f"field({ve.name})"
+    if isinstance(ve, Arith):
+        return (f"arith({ve.op},{_canon_computed(ve.a)},"
+                f"{_canon_computed(ve.b)})")
+    return _canon_value(ve)
 
 
 # ---------------------------------------------------------------------------
@@ -566,6 +633,44 @@ class Query:
         if self._select is not None:
             return list(self._select)
         return schema.names + computed
+
+    # ------------------------------------------------------- fingerprinting
+    def plan_fingerprint(self) -> str:
+        """Canonical one-line description of this plan, stable under
+        meaning-preserving rewrites: commutative ``where`` conjuncts,
+        ``isin`` value order and projection order all render identically
+        (rows come back as name-addressed records, so projection order
+        is not part of the question being asked).  Order-sensitive parts
+        — ``order_by`` keys, ``limit``/``offset``, ``distinct`` — stay
+        order-sensitive.  This is the payload behind :meth:`plan_key`."""
+        sel = "*" if self._select is None else ",".join(sorted(self._select))
+        computed = ";".join(f"{n}={_canon_computed(ve)}"
+                            for n, ve in sorted(self._computed))
+        agg = ""
+        if self._agg_spec is not None:
+            agg = ";".join(f"{c}:{'+'.join(sorted(ops))}"
+                           for c, ops in sorted(self._agg_spec.items()))
+        order = ";".join(f"{c}:{'desc' if d else 'asc'}"
+                         for c, d in self._order)
+        return "|".join([
+            f"where={canonical_expr(self._where)}",
+            f"select={sel}",
+            f"computed={computed}",
+            f"group={','.join(self._group_keys) if self._group_keys is not None else ''}",
+            f"agg={agg}",
+            f"order={order}",
+            f"limit={self._limit}",
+            f"offset={self._offset}",
+            f"distinct={self._distinct}",
+        ])
+
+    def plan_key(self) -> str:
+        """Stable hex digest of :meth:`plan_fingerprint` — the cache key
+        used by the serving tier's normalized-plan and result caches.
+        Equivalent plans share a key; plans that can answer differently
+        (different ``limit``/``offset``/``order_by``) never do."""
+        return hashlib.blake2b(self.plan_fingerprint().encode(),
+                               digest_size=16).hexdigest()
 
     # ------------------------------------------------------------- builders
     def _require_before_window(self, what: str) -> None:

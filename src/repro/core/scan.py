@@ -103,9 +103,9 @@ from .table import Table, concat_tables
 from .transactions import DELTA_TOMBSTONE, DeltaEntry
 
 __all__ = ["ScanCounters", "FragmentPlan", "ScanReport", "ScanPlan",
-           "DeltaOverlay", "file_may_match", "prefetch", "scan_pool",
-           "process_scan_pool", "resolve_num_threads", "MORSEL_ROWS",
-           "PROCESS_MIN_ROWS"]
+           "DeltaOverlay", "MorselBudget", "file_may_match", "prefetch",
+           "scan_pool", "process_scan_pool", "resolve_num_threads",
+           "MORSEL_ROWS", "PROCESS_MIN_ROWS"]
 
 # Target rows per morsel: small enough that a handful of fragments yields
 # enough parallelism, large enough that per-task overhead (submit, counter
@@ -146,6 +146,90 @@ def resolve_num_threads(cfg) -> int:
     if nt is None:
         nt = os.cpu_count() or 1
     return max(1, int(nt))
+
+
+class MorselBudget:
+    """Cooperative cap on in-flight morsels shared across concurrent scans.
+
+    Attach one instance to several ``LoadConfig``s (``morsel_budget=...``)
+    and every scan using them charges one permit per *submitted* morsel,
+    releasing it when the morsel's result is consumed.  With the budget
+    exhausted, further submission **blocks** — concurrent scans throttle
+    each other to a bounded total of decoded-but-unconsumed work instead
+    of racing the shared pool into memory bloat.  This is the
+    backpressure primitive behind the serving tier's admission control.
+
+    Progress guarantee (no deadlock): every executor loop follows the
+    discipline *block for a permit only while holding none* — refills of
+    an already-primed window use :meth:`try_acquire` and simply skip the
+    refill when the budget is dry (the scan then drains its own in-flight
+    morsels, releasing as it goes).  So any charged permit is always held
+    by a scan that is actively consuming, and a scan blocked in
+    :meth:`acquire` holds nothing anyone is waiting on.  ``limit >= 1`` is
+    enforced, so even a budget of one serializes morsels rather than
+    stalling them.
+
+    Counters (read via :meth:`stats`): ``in_flight`` (currently charged),
+    ``peak_in_flight``, ``total_acquired`` and ``waits`` (acquisitions
+    that blocked or were denied — the saturation signal a server sheds
+    on).
+    """
+
+    def __init__(self, limit: int):
+        if int(limit) < 1:
+            raise ValueError(f"morsel budget must be >= 1, got {limit}")
+        self.limit = int(limit)
+        self._cv = threading.Condition()
+        self.in_flight = 0
+        self.peak_in_flight = 0
+        self.total_acquired = 0
+        self.waits = 0
+
+    def acquire(self) -> None:
+        """Charge one permit, blocking while the budget is exhausted.
+        Callers must hold no other permit (see the class docstring)."""
+        with self._cv:
+            if self.in_flight >= self.limit:
+                self.waits += 1
+                while self.in_flight >= self.limit:
+                    self._cv.wait()
+            self._charge()
+
+    def try_acquire(self) -> bool:
+        """Charge one permit if available; never blocks.  A ``False``
+        counts toward ``waits`` — denial is the same saturation signal."""
+        with self._cv:
+            if self.in_flight >= self.limit:
+                self.waits += 1
+                return False
+            self._charge()
+            return True
+
+    def _charge(self) -> None:
+        self.in_flight += 1
+        self.total_acquired += 1
+        if self.in_flight > self.peak_in_flight:
+            self.peak_in_flight = self.in_flight
+
+    def release(self) -> None:
+        """Return one permit and wake one blocked acquirer."""
+        with self._cv:
+            self.in_flight -= 1
+            self._cv.notify()
+
+    @property
+    def saturated(self) -> bool:
+        """True while every permit is charged (admission-control signal)."""
+        with self._cv:
+            return self.in_flight >= self.limit
+
+    def stats(self) -> Dict[str, int]:
+        with self._cv:
+            return {"limit": self.limit,
+                    "in_flight": self.in_flight,
+                    "peak_in_flight": self.peak_in_flight,
+                    "total_acquired": self.total_acquired,
+                    "waits": self.waits}
 
 
 def scan_pool(num_threads: int) -> ThreadPoolExecutor:
@@ -699,6 +783,7 @@ class ScanPlan:
             raise ValueError(f"unknown verify mode {self._verify!r} "
                              "(expected 'page', 'footer' or 'off')")
         self._on_corruption = getattr(cfg, "on_corruption", "raise")
+        self._budget = getattr(cfg, "morsel_budget", None)
         # num_threads=None is "auto": size from cpu_count but only engage
         # the pool when the decode work can actually overlap (see
         # _parallel_profitable); an explicit thread count always engages.
@@ -904,12 +989,34 @@ class ScanPlan:
 
         def pieces() -> Generator[Any, None, None]:
             for frag, rgs in morsels:
-                vals = [t if map_fn is None else map_fn(t)
-                        for t in self._fragment_tables(frag, counters,
-                                                       row_groups=rgs)]
+                self._budget_acquire()
+                try:
+                    vals = [t if map_fn is None else map_fn(t)
+                            for t in self._fragment_tables(frag, counters,
+                                                           row_groups=rgs)]
+                finally:
+                    self._budget_release()
                 yield frag, vals
         return (prefetch(pieces(), self._readahead)
                 if self._use_threads else pieces())
+
+    def _budget_acquire(self) -> None:
+        if self._budget is not None:
+            self._budget.acquire()
+
+    def _budget_try_acquire(self, block: bool) -> bool:
+        """Charge one morsel permit; blocking only allowed when the caller
+        holds no other permit (the deadlock-freedom discipline)."""
+        if self._budget is None:
+            return True
+        if block:
+            self._budget.acquire()
+            return True
+        return self._budget.try_acquire()
+
+    def _budget_release(self) -> None:
+        if self._budget is not None:
+            self._budget.release()
 
     def _merge_streams(self, tagged, morsels
                        ) -> Generator[Table, None, None]:
@@ -1095,21 +1202,38 @@ class ScanPlan:
             return tables, local
 
         it = iter(morsels)
-        inflight: "collections.deque" = collections.deque(
-            (pool.submit(run_morsel, frag, rgs), frag)
-            for frag, rgs in itertools.islice(it, max_inflight))
-        try:
-            while inflight:
-                fut, frag = inflight.popleft()
-                tables, local = fut.result()
-                counters.merge_from(local)  # single-threaded merge point
+        inflight: "collections.deque" = collections.deque()
+
+        def refill() -> None:
+            # charge one budget permit per submitted morsel; block for a
+            # permit only while holding none (an empty window), otherwise
+            # try-acquire and let this scan drain what it already holds —
+            # the discipline that keeps a shared budget deadlock-free
+            while len(inflight) < max_inflight:
+                if not self._budget_try_acquire(block=not inflight):
+                    return
                 nxt = next(it, None)
-                if nxt is not None:
-                    inflight.append((pool.submit(run_morsel, *nxt), nxt[0]))
+                if nxt is None:
+                    self._budget_release()
+                    return
+                inflight.append((pool.submit(run_morsel, *nxt), nxt[0]))
+
+        try:
+            while True:
+                refill()
+                if not inflight:
+                    break  # morsels exhausted
+                fut, frag = inflight.popleft()
+                try:
+                    tables, local = fut.result()
+                finally:
+                    self._budget_release()
+                counters.merge_from(local)  # single-threaded merge point
                 yield frag, tables
         finally:
             for fut, _ in inflight:
                 fut.cancel()
+                self._budget_release()
 
     def _execute_process(self, morsels, counters: ScanCounters,
                          map_fn: Optional[Callable[[Table], Any]] = None
@@ -1175,36 +1299,51 @@ class ScanPlan:
             return (None, frag, rgs, None)  # degraded: inline on arrival
 
         it = iter(morsels)
-        inflight: "collections.deque" = collections.deque(
-            submit(frag, rgs)
-            for frag, rgs in itertools.islice(it, max_inflight))
+        inflight: "collections.deque" = collections.deque()
+
+        def refill() -> None:
+            # same budget discipline as the thread path: block for a
+            # permit only with an empty window, otherwise try-acquire
+            while len(inflight) < max_inflight:
+                if not self._budget_try_acquire(block=not inflight):
+                    return
+                nxt = next(it, None)
+                if nxt is None:
+                    self._budget_release()
+                    return
+                inflight.append(submit(*nxt))
+
         try:
-            while inflight:
+            while True:
+                refill()
+                if not inflight:
+                    break  # morsels exhausted
                 fut, frag, rgs, sub_pool = inflight.popleft()
                 try:
-                    if fut is None:
-                        raise BrokenExecutor
-                    tables, local = shm.unpack(fut.result())
-                except FileNotFoundError:
-                    local = ScanCounters()
-                    tables = list(self._decode_tables(frag, local, rgs))
-                    local.morsels_decoded_inline += 1
-                except BrokenExecutor:
-                    # this morsel's future died with its pool: decode it
-                    # inline, and give the *remaining* morsels a fresh
-                    # pool (once per scan) before writing the scan off.
-                    # A corpse future from an already-replaced pool is
-                    # expected fallout of the rebuild, not a second crash.
-                    if fut is not None and sub_pool is state["pool"] \
-                            and not rebuild_once() and not state["broken"]:
-                        _warn_broken_pool(state)
-                    local = ScanCounters()
-                    tables = list(self._decode_tables(frag, local, rgs))
-                    local.morsels_decoded_inline += 1
+                    try:
+                        if fut is None:
+                            raise BrokenExecutor
+                        tables, local = shm.unpack(fut.result())
+                    except FileNotFoundError:
+                        local = ScanCounters()
+                        tables = list(self._decode_tables(frag, local, rgs))
+                        local.morsels_decoded_inline += 1
+                    except BrokenExecutor:
+                        # this morsel's future died with its pool: decode it
+                        # inline, and give the *remaining* morsels a fresh
+                        # pool (once per scan) before writing the scan off.
+                        # A corpse future from an already-replaced pool is
+                        # expected fallout of the rebuild, not a second
+                        # crash.
+                        if fut is not None and sub_pool is state["pool"] \
+                                and not rebuild_once() and not state["broken"]:
+                            _warn_broken_pool(state)
+                        local = ScanCounters()
+                        tables = list(self._decode_tables(frag, local, rgs))
+                        local.morsels_decoded_inline += 1
+                finally:
+                    self._budget_release()
                 counters.merge_from(local)  # single-threaded merge point
-                nxt = next(it, None)
-                if nxt is not None:
-                    inflight.append(submit(*nxt))
                 done = []
                 for t in tables:
                     t = self._finish_table(t, frag, counters)
@@ -1213,6 +1352,7 @@ class ScanPlan:
                 yield frag, done
         finally:
             for fut, _, _, _ in inflight:
+                self._budget_release()
                 if fut is not None and not fut.cancel():
                     try:
                         shm.discard(fut.result())

@@ -190,6 +190,12 @@ class LoadConfig:
     surviving deltas), warns, and counts it in
     ``ScanCounters.files_quarantined`` / ``explain()``.  Corrupt *base*
     files always raise — quarantining one would silently drop rows.
+
+    ``morsel_budget`` (a shared :class:`~repro.core.scan.MorselBudget`, or
+    ``None`` = unbounded) caps in-flight morsels *across every scan* that
+    carries the same budget instance — the backpressure primitive the
+    serving tier uses so concurrent queries throttle each other instead of
+    racing the pool into memory bloat.
     """
     batch_size: int = 131_072
     batch_readahead: int = 16
@@ -199,6 +205,7 @@ class LoadConfig:
     executor: Optional[str] = None      # "thread" | "process" | None = auto
     verify: str = "page"                # "page" | "footer" | "off"
     on_corruption: str = "raise"        # "raise" | "quarantine" (deltas)
+    morsel_budget: Optional[Any] = None  # shared MorselBudget | None
 
 
 class Dataset:

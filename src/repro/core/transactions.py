@@ -93,6 +93,48 @@ DELTA_TOMBSTONE = "tombstone"
 PRE_COMMIT_HOOK: Optional[Callable[[], None]] = None
 POST_COMMIT_HOOK: Optional[Callable[[], None]] = None
 
+# Generation-change listeners, keyed by realpath of the dataset directory
+# (same keying as the group-committer registry below).  Fired after every
+# successful *in-process* publish — the serving tier's result cache hangs
+# off this to invalidate superseded generations eagerly.  Cross-process
+# writers never fire it, so listeners must stay a hygiene layer, not a
+# correctness layer: correctness comes from keying reads on the generation
+# observed at snapshot time.
+_COMMIT_LISTENERS: Dict[str, List[Callable[[int], None]]] = {}
+_COMMIT_LISTENERS_LOCK = threading.Lock()
+
+
+def register_commit_listener(path: str,
+                             fn: Callable[[int], None]) -> Callable[[], None]:
+    """Subscribe ``fn(generation)`` to successful commits of the dataset
+    directory at ``path``; returns an unregister callable.  Listener
+    exceptions are swallowed — a subscriber must never be able to fail a
+    commit that already published."""
+    key = os.path.realpath(path)
+    with _COMMIT_LISTENERS_LOCK:
+        _COMMIT_LISTENERS.setdefault(key, []).append(fn)
+
+    def unregister() -> None:
+        with _COMMIT_LISTENERS_LOCK:
+            listeners = _COMMIT_LISTENERS.get(key, [])
+            if fn in listeners:
+                listeners.remove(fn)
+            if not listeners:
+                _COMMIT_LISTENERS.pop(key, None)
+
+    return unregister
+
+
+def _notify_commit(path: str, generation: int) -> None:
+    key = os.path.realpath(path)
+    with _COMMIT_LISTENERS_LOCK:
+        listeners = tuple(_COMMIT_LISTENERS.get(key, ()))
+    for fn in listeners:
+        try:
+            fn(generation)
+        except Exception:
+            pass
+
 
 class CommitConflict(Exception):
     """Optimistic commit aborted: a generation committed since this
@@ -358,6 +400,7 @@ class DatasetDir:
             POST_COMMIT_HOOK()
         atomic_write_json(self._mpath, manifest.to_dict())
         self._prune_log(manifest.generation)
+        _notify_commit(self.path, manifest.generation)
         return True
 
     def commit(self, manifest: Manifest, op: Optional[str] = None) -> None:

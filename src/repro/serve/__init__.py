@@ -1,1 +1,14 @@
-"""Serving substrate: KV-cache decode engine with continuous batching."""
+"""Serving substrate.
+
+Two independent serving tiers live here:
+
+- :mod:`repro.serve.engine` — the LM decode engine (KV-cache slots,
+  continuous batching); requires jax.
+- :mod:`repro.serve.dbserver` (+ :mod:`~repro.serve.protocol`,
+  :mod:`~repro.serve.cache`) — the database query server: asyncio TCP,
+  admission control over a shared morsel budget, normalized-plan and
+  snapshot-consistent result caches; pure stdlib + numpy, no jax.
+
+Nothing is imported eagerly so that ``repro.serve.dbserver`` stays usable
+in jax-free environments (CI docs/examples jobs, lean deployments).
+"""

@@ -1,0 +1,219 @@
+"""Server-side caches: normalized plans, snapshot-consistent results, stats.
+
+Two caches with one key between them:
+
+- :class:`PlanCache` maps the *raw* request spec (canonical JSON of the
+  wire fields) to a prepared, manifest-unbound
+  :class:`~repro.core.query.Query` plus its canonical
+  :meth:`~repro.core.query.Query.plan_key`.  A hit skips expression
+  decoding, schema validation and fingerprinting.  The plan key is where
+  normalization happens: requests that spell the same question differently
+  (commuted ``where`` conjuncts, reordered ``select``, shuffled ``isin``
+  values) map to *different* raw specs but the *same* plan key — so they
+  converge on one result-cache entry.
+
+- :class:`ResultCache` maps ``(plan_key, generation)`` to a finished
+  response payload.  Keying on the manifest generation observed when the
+  query's snapshot was pinned makes entries immutable facts: "this plan,
+  over generation g, returns these rows" can never go stale — a commit
+  doesn't corrupt old entries, it *supersedes* them by bumping the live
+  generation, and the commit listener then drops the superseded
+  generations' entries (memory hygiene; correctness never depended on the
+  eviction happening).
+
+Both are LRU with a lock around an ``OrderedDict`` — the server touches
+them from worker threads.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+__all__ = ["CachedPlan", "PlanCache", "ResultCache", "ServerStats"]
+
+
+class CachedPlan:
+    """One prepared plan: the unbound Query template + its canonical key.
+
+    ``query`` has no manifest bound (``_man is None``); the server rebinds
+    it to each request's pinned snapshot with ``_replace(man=...)`` — an
+    O(slots) copy — so one template serves every generation.
+    ``scalar_agg`` carries the normalized spec of an ungrouped ``agg``
+    terminal (which is an argument of the terminal call, not part of the
+    builder state, so it needs to ride along explicitly).
+    """
+
+    __slots__ = ("plan_key", "query", "scalar_agg", "hits")
+
+    def __init__(self, plan_key: str, query, scalar_agg=None):
+        self.plan_key = plan_key
+        self.query = query
+        self.scalar_agg = scalar_agg
+        self.hits = 0
+
+
+class PlanCache:
+    """LRU of raw request spec -> :class:`CachedPlan`."""
+
+    def __init__(self, max_entries: int = 512):
+        self._max = int(max_entries)
+        self._lock = threading.Lock()
+        self._entries: "collections.OrderedDict[str, CachedPlan]" = \
+            collections.OrderedDict()
+
+    def get(self, raw_key: str) -> Optional[CachedPlan]:
+        with self._lock:
+            plan = self._entries.get(raw_key)
+            if plan is not None:
+                self._entries.move_to_end(raw_key)
+                plan.hits += 1
+            return plan
+
+    def put(self, raw_key: str, plan: CachedPlan) -> CachedPlan:
+        with self._lock:
+            self._entries[raw_key] = plan
+            self._entries.move_to_end(raw_key)
+            while len(self._entries) > self._max:
+                self._entries.popitem(last=False)
+            return plan
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
+class ResultCache:
+    """LRU of ``(plan_key, generation)`` -> response payload.
+
+    Bounded by entry count and by total payload bytes (estimated from the
+    encoded frame size the server already computed).  ``invalidate_below``
+    drops every entry of a superseded generation — the commit listener's
+    eager-invalidation hook; ``put`` also retires other generations of the
+    same plan key opportunistically, which catches cross-process writers
+    (they bump the generation without firing the in-process listener).
+    """
+
+    def __init__(self, max_entries: int = 256,
+                 max_bytes: int = 64 << 20):
+        self._max_entries = int(max_entries)
+        self._max_bytes = int(max_bytes)
+        self._lock = threading.Lock()
+        self._entries: "collections.OrderedDict[Tuple[str, int], Tuple[Any, int]]" = \
+            collections.OrderedDict()
+        self._bytes = 0
+        self.invalidated = 0
+        self.evicted = 0
+
+    def get(self, plan_key: str, generation: int) -> Optional[Any]:
+        with self._lock:
+            hit = self._entries.get((plan_key, generation))
+            if hit is None:
+                return None
+            self._entries.move_to_end((plan_key, generation))
+            return hit[0]
+
+    def put(self, plan_key: str, generation: int, payload: Any,
+            nbytes: int) -> None:
+        with self._lock:
+            stale = [k for k in self._entries
+                     if k[0] == plan_key and k[1] != generation]
+            for k in stale:
+                self._drop(k)
+                self.invalidated += 1
+            key = (plan_key, generation)
+            if key in self._entries:
+                self._drop(key)
+            self._entries[key] = (payload, int(nbytes))
+            self._bytes += int(nbytes)
+            while (len(self._entries) > self._max_entries
+                   or self._bytes > self._max_bytes):
+                if len(self._entries) == 1:
+                    break  # never evict the entry just written
+                self._drop(next(iter(self._entries)))
+                self.evicted += 1
+
+    def _drop(self, key: Tuple[str, int]) -> None:
+        payload = self._entries.pop(key, None)
+        if payload is not None:
+            self._bytes -= payload[1]
+
+    def invalidate_below(self, generation: int) -> int:
+        """Drop every entry whose generation predates ``generation``;
+        returns how many were dropped."""
+        with self._lock:
+            stale = [k for k in self._entries if k[1] < generation]
+            for k in stale:
+                self._drop(k)
+            self.invalidated += len(stale)
+            return len(stale)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._bytes = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        with self._lock:
+            return self._bytes
+
+
+class ServerStats:
+    """Counters surfaced over the ``stats`` verb.
+
+    ``record`` feeds a bounded latency reservoir (last ``maxlen``
+    request latencies, reads and writes alike); :meth:`snapshot` computes
+    p50/p99 from whatever the reservoir holds.  All mutation is behind one
+    lock — the numbers are exact, not sampled, except the latency
+    percentiles which are over the trailing window.
+    """
+
+    def __init__(self, latency_window: int = 4096):
+        self._lock = threading.Lock()
+        self._lat_us: "collections.deque[float]" = \
+            collections.deque(maxlen=int(latency_window))
+        self.queries = 0        # read-plan requests served (incl. cached)
+        self.writes = 0         # update/delete requests applied
+        self.shed = 0           # 503-rejected by admission control
+        self.errors = 0         # 400/500 responses
+        self.plan_hits = 0
+        self.plan_misses = 0
+        self.result_hits = 0
+        self.result_misses = 0
+
+    def record(self, latency_us: float) -> None:
+        with self._lock:
+            self._lat_us.append(float(latency_us))
+
+    def bump(self, counter: str, by: int = 1) -> None:
+        with self._lock:
+            setattr(self, counter, getattr(self, counter) + by)
+
+    @staticmethod
+    def _pct(sorted_lats: List[float], q: float) -> Optional[float]:
+        if not sorted_lats:
+            return None
+        idx = min(len(sorted_lats) - 1, int(q * (len(sorted_lats) - 1)))
+        return sorted_lats[idx]
+
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            lats = sorted(self._lat_us)
+            return {
+                "queries": self.queries,
+                "writes": self.writes,
+                "shed": self.shed,
+                "errors": self.errors,
+                "plan_hits": self.plan_hits,
+                "plan_misses": self.plan_misses,
+                "result_hits": self.result_hits,
+                "result_misses": self.result_misses,
+                "latency_samples": len(lats),
+                "p50_us": self._pct(lats, 0.50),
+                "p99_us": self._pct(lats, 0.99),
+            }

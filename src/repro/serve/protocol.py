@@ -1,0 +1,266 @@
+"""Wire protocol for the DB serving tier: length-prefixed JSON frames.
+
+A frame is a 4-byte big-endian unsigned length followed by that many bytes
+of UTF-8 JSON — trivially parseable from any language, self-delimiting on
+a stream, and friendly to request pipelining (a client may queue several
+request frames on one connection; responses come back in order).  Frames
+above ``MAX_FRAME`` are refused before the payload is read, so a garbage
+length prefix cannot make the server allocate gigabytes.
+
+Requests are JSON objects with an ``op`` — ``query``, ``count``, ``agg``,
+``update``, ``delete``, ``explain``, ``stats``, ``ping`` — plus op-specific
+fields (see :mod:`repro.serve.dbserver` for the full surface).  Responses
+always carry ``status`` (HTTP-flavored: 200 OK, 400 bad request, 503 shed)
+and, for reads, the ``generation`` of the manifest snapshot that produced
+the rows — the server's snapshot-consistency contract is that every value
+in one response comes from exactly that generation.
+
+Filter expressions travel as s-expression-style JSON arrays and are decoded
+into :mod:`repro.core.expressions` trees server-side::
+
+    ["cmp", "age", ">=", 30]
+    ["isin", "city", ["Portland", "Austin"]]
+    ["and", ["cmp", "age", ">=", 30], ["not", ["isnull", "email"]]]
+
+:class:`DBClient` is the blocking reference client used by the tests, the
+benchmark driver and the docs examples.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+from typing import Any, List, Optional, Sequence
+
+from repro.core.expressions import (And, Comparison, Expr, FieldRef, IsIn,
+                                    IsNaN, IsNull, Not, Or, field)
+
+__all__ = ["MAX_FRAME", "ProtocolError", "encode_frame", "read_frame",
+           "recv_frame", "expr_to_json", "expr_from_json", "DBClient"]
+
+_HEADER = struct.Struct(">I")
+MAX_FRAME = 64 << 20  # 64 MiB per frame: far above any sane request/response
+
+_CMP_OPS = ("==", "!=", "<", "<=", ">", ">=")
+
+
+class ProtocolError(ValueError):
+    """Malformed frame or expression spec (maps to a 400 response)."""
+
+
+def encode_frame(obj: Any) -> bytes:
+    """JSON-encode ``obj`` and prepend the 4-byte length header."""
+    payload = json.dumps(obj, separators=(",", ":")).encode("utf-8")
+    if len(payload) > MAX_FRAME:
+        raise ProtocolError(f"frame of {len(payload)} bytes exceeds "
+                            f"MAX_FRAME={MAX_FRAME}")
+    return _HEADER.pack(len(payload)) + payload
+
+
+async def read_frame(reader, max_frame: int = MAX_FRAME) -> Optional[Any]:
+    """Read one frame from an asyncio StreamReader.
+
+    Returns the decoded object, or ``None`` on clean EOF (peer closed
+    between frames).  A mid-frame EOF or an oversized length raises
+    :class:`ProtocolError`.
+    """
+    import asyncio
+    try:
+        header = await reader.readexactly(_HEADER.size)
+    except asyncio.IncompleteReadError as e:
+        if not e.partial:
+            return None  # clean close between frames
+        raise ProtocolError("connection closed mid-header") from None
+    (length,) = _HEADER.unpack(header)
+    if length > max_frame:
+        raise ProtocolError(f"frame of {length} bytes exceeds "
+                            f"max_frame={max_frame}")
+    try:
+        payload = await reader.readexactly(length)
+    except asyncio.IncompleteReadError:
+        raise ProtocolError("connection closed mid-frame") from None
+    try:
+        return json.loads(payload.decode("utf-8"))
+    except (UnicodeDecodeError, json.JSONDecodeError) as e:
+        raise ProtocolError(f"undecodable frame: {e}") from None
+
+
+def _recv_exactly(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ProtocolError("connection closed mid-frame")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket, max_frame: int = MAX_FRAME) -> Any:
+    """Blocking-socket twin of :func:`read_frame` (for sync clients)."""
+    (length,) = _HEADER.unpack(_recv_exactly(sock, _HEADER.size))
+    if length > max_frame:
+        raise ProtocolError(f"frame of {length} bytes exceeds "
+                            f"max_frame={max_frame}")
+    return json.loads(_recv_exactly(sock, length).decode("utf-8"))
+
+
+# ---------------------------------------------------------------------------
+# expression codec
+# ---------------------------------------------------------------------------
+def expr_to_json(e: Expr) -> list:
+    """Render an Expr tree as the wire's s-expression JSON form."""
+    if isinstance(e, And):
+        return ["and", expr_to_json(e.a), expr_to_json(e.b)]
+    if isinstance(e, Or):
+        return ["or", expr_to_json(e.a), expr_to_json(e.b)]
+    if isinstance(e, Not):
+        return ["not", expr_to_json(e.a)]
+    if isinstance(e, Comparison):
+        v = (["field", e.value.name] if isinstance(e.value, FieldRef)
+             else e.value)
+        return ["cmp", e.name, e.op, v]
+    if isinstance(e, IsIn):
+        return ["isin", e.name, list(e.values)]
+    if isinstance(e, IsNull):
+        return ["isvalid" if e._negated else "isnull", e.name]
+    if isinstance(e, IsNaN):
+        return ["isnan", e.name]
+    raise ProtocolError(f"expression {type(e).__name__} has no wire form")
+
+
+def expr_from_json(spec: Any) -> Expr:
+    """Decode the wire's s-expression JSON form back into an Expr tree."""
+    if not isinstance(spec, (list, tuple)) or not spec:
+        raise ProtocolError(f"expression spec must be a non-empty list, "
+                            f"got {spec!r}")
+    tag, *rest = spec
+    if tag == "and" and len(rest) == 2:
+        return And(expr_from_json(rest[0]), expr_from_json(rest[1]))
+    if tag == "or" and len(rest) == 2:
+        return Or(expr_from_json(rest[0]), expr_from_json(rest[1]))
+    if tag == "not" and len(rest) == 1:
+        return Not(expr_from_json(rest[0]))
+    if tag == "cmp" and len(rest) == 3:
+        name, op, value = rest
+        if op not in _CMP_OPS:
+            raise ProtocolError(f"unknown comparison op {op!r}")
+        if (isinstance(value, (list, tuple)) and len(value) == 2
+                and value[0] == "field"):
+            value = field(value[1])
+        return Comparison(name, op, value)
+    if tag == "isin" and len(rest) == 2:
+        name, values = rest
+        if not isinstance(values, (list, tuple)):
+            raise ProtocolError("isin values must be a list")
+        return IsIn(name, list(values))
+    if tag == "isnull" and len(rest) == 1:
+        return IsNull(rest[0])
+    if tag == "isvalid" and len(rest) == 1:
+        return IsNull(rest[0], negate=True)
+    if tag == "isnan" and len(rest) == 1:
+        return IsNaN(rest[0])
+    raise ProtocolError(f"bad expression spec {spec!r}")
+
+
+# ---------------------------------------------------------------------------
+# blocking reference client
+# ---------------------------------------------------------------------------
+class DBClient:
+    """Blocking client for :class:`~repro.serve.dbserver.DBServer`.
+
+    One TCP connection, requests answered in order.  ``where`` arguments
+    accept either the wire's JSON list form or an
+    :class:`~repro.core.expressions.Expr` built with ``field(...)`` (the
+    client encodes it).  Responses are returned as decoded JSON dicts —
+    callers check ``resp["status"]`` (503 means shed by admission control:
+    back off and retry).  Usable as a context manager.
+    """
+
+    def __init__(self, host: str, port: int, timeout: float = 30.0):
+        self._sock = socket.create_connection((host, port), timeout=timeout)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    def request(self, req: dict) -> dict:
+        self._sock.sendall(encode_frame(req))
+        return recv_frame(self._sock)
+
+    @staticmethod
+    def _where_spec(where) -> Optional[list]:
+        if where is None:
+            return None
+        return expr_to_json(where) if isinstance(where, Expr) else where
+
+    def query(self, where=None, select: Optional[Sequence[str]] = None,
+              group_by: Optional[Sequence[str]] = None, agg=None,
+              order_by=None, limit: Optional[int] = None, offset: int = 0,
+              distinct: bool = False) -> dict:
+        """The full builder surface in one request; rows come back as a
+        list of name-addressed records under ``"rows"``."""
+        req: dict = {"op": "query"}
+        if where is not None:
+            req["where"] = self._where_spec(where)
+        if select is not None:
+            req["select"] = list(select)
+        if group_by is not None:
+            req["group_by"] = list(group_by)
+        if agg is not None:
+            req["agg"] = agg
+        if order_by is not None:
+            req["order_by"] = order_by
+        if limit is not None:
+            req["limit"] = int(limit)
+        if offset:
+            req["offset"] = int(offset)
+        if distinct:
+            req["distinct"] = True
+        return self.request(req)
+
+    def count(self, where=None) -> dict:
+        req: dict = {"op": "count"}
+        if where is not None:
+            req["where"] = self._where_spec(where)
+        return self.request(req)
+
+    def agg(self, spec, where=None) -> dict:
+        """Ungrouped aggregation (footer-statistics fast path server-side);
+        scalars come back under ``"values"``."""
+        req: dict = {"op": "agg", "agg": spec}
+        if where is not None:
+            req["where"] = self._where_spec(where)
+        return self.request(req)
+
+    def update(self, rows: List[dict]) -> dict:
+        return self.request({"op": "update", "rows": rows})
+
+    def delete(self, ids: Optional[Sequence[int]] = None,
+               where=None) -> dict:
+        req: dict = {"op": "delete"}
+        if ids is not None:
+            req["ids"] = [int(i) for i in ids]
+        if where is not None:
+            req["where"] = self._where_spec(where)
+        return self.request(req)
+
+    def explain(self, **query_fields) -> dict:
+        req = {"op": "explain"}
+        req.update({k: (self._where_spec(v) if k == "where" else v)
+                    for k, v in query_fields.items()})
+        return self.request(req)
+
+    def stats(self) -> dict:
+        return self.request({"op": "stats"})
+
+    def ping(self) -> dict:
+        return self.request({"op": "ping"})
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self) -> "DBClient":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
